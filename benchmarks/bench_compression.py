@@ -1,0 +1,59 @@
+"""Paper Fig 16: lossy/compression baselines (Top-K, TernGrad, THC) vs
+OptiReduce. Compression shrinks bytes *statically* but tail/stall events
+hit the (fewer) flows just the same, so TTA barely improves — while some
+schemes also pay an accuracy cost. OptiReduce adapts at run time."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim.netsim import NetworkModel, simulate_job
+from repro.sim.tta import TrainRunConfig, run_training, steps_to_accuracy
+
+from .common import Rows
+
+BYTES_FACTOR = {            # wire bytes vs fp32 allreduce
+    "optireduce": 1.0,
+    "topk": 0.02 * 2.0,     # 1% values + indices
+    "terngrad": 2.0 / 32.0,
+    "thc": 4.0 / 32.0,      # 4-bit codes
+}
+
+
+def run(quick: bool = True) -> Rows:
+    rows = Rows()
+    steps = 150 if quick else 400
+    base = run_training(TrainRunConfig(steps=steps, eval_every=10))
+    target = 0.95 * max(base["acc"])
+
+    runs = {
+        "optireduce": TrainRunConfig(steps=steps, eval_every=10,
+                                     drop_rate=0.002),
+        "topk": TrainRunConfig(steps=steps, eval_every=10,
+                               compressor="topk", topk_frac=0.01),
+        "terngrad": TrainRunConfig(steps=steps, eval_every=10,
+                                   compressor="terngrad"),
+        "thc": TrainRunConfig(steps=steps, eval_every=10, compressor="thc"),
+    }
+    nbytes = 25 * 2 ** 20
+    sim_steps = 60 if quick else 200
+    for name, rc in runs.items():
+        hist = run_training(rc)
+        s = steps_to_accuracy(hist, target)
+        acc = max(hist["acc"])
+        env = NetworkModel.environment("local_3.0", seed=13)
+        strat = "optireduce" if name == "optireduce" else "gloo_ring"
+        r = simulate_job(strat, n_nodes=8,
+                         bucket_bytes=nbytes * BYTES_FACTOR[name],
+                         n_steps=sim_steps, env=env, compute_ms=0.0,
+                         overlap=0.0)
+        tta = (s if s else steps * 2) * r["mean_ga_ms"]
+        rows.add(f"compression/{name}_acc", acc,
+                 f"target {target:.3f}; steps_to_target="
+                 f"{s if s else 'not reached'}")
+        rows.add(f"compression/{name}_rel_tta", tta, "ms of GA to target; "
+                 "paper Fig16: compression doesn't fix tails")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

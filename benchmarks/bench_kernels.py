@@ -1,0 +1,68 @@
+"""Kernel parity + host-timing sweep: Pallas (interpret mode on CPU) vs
+pure-jnp oracle for fwht / masked_sum / quant across shapes and dtypes.
+On-TPU timing is out of scope for this container; the roofline for the
+kernels' MXU formulation is derived in EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fwht import fwht, fwht_ref
+from repro.kernels.fwht.fwht import fwht_pallas
+from repro.kernels.masked_sum import masked_mean, masked_mean_ref
+from repro.kernels.quant import uniform_quant, uniform_quant_ref
+
+from .common import Rows
+
+
+def _t(fn, *a, n=3):
+    fn(*a)[0].block_until_ready() if isinstance(fn(*a), tuple) else \
+        jax.block_until_ready(fn(*a))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*a))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(quick: bool = True) -> Rows:
+    rows = Rows()
+    key = jax.random.PRNGKey(0)
+    blocks = [256, 1024, 4096] if quick else [256, 1024, 4096, 16384]
+    for block in blocks:
+        for dtype in (jnp.float32, jnp.bfloat16):
+            x = jax.random.normal(key, (32, block)).astype(dtype)
+            ref = fwht_ref(x.astype(jnp.float32))
+            out = fwht_pallas(x.astype(jnp.float32), interpret=True)
+            err = float(jnp.max(jnp.abs(out - ref)))
+            us = _t(lambda v=x: fwht(v.astype(jnp.float32)))
+            rows.add(f"kernels/fwht_b{block}_{dtype.__name__}", us,
+                     f"us/call (jnp MXU form); pallas_vs_oracle_err={err:.2e}")
+    n_peers = 8
+    for length in ([1 << 14] if quick else [1 << 14, 1 << 18]):
+        sh = jax.random.normal(key, (n_peers, length))
+        mk = (jax.random.uniform(key, (n_peers, length)) > 0.05).astype(
+            jnp.float32)
+        err = float(jnp.max(jnp.abs(
+            masked_mean(sh, mk, use_kernel=True) - masked_mean_ref(sh, mk))))
+        us = _t(lambda: masked_mean(sh, mk))
+        rows.add(f"kernels/masked_sum_L{length}", us,
+                 f"us/call; pallas_vs_oracle_err={err:.2e}")
+    x = jax.random.normal(key, (64, 4096))
+    noise = jax.random.uniform(jax.random.fold_in(key, 1), x.shape)
+    lohi = jnp.array([float(x.min()), float(x.max())])
+    for bits in (4, 8):
+        q1 = uniform_quant(x, noise, lohi, bits=bits, use_kernel=True)
+        q2 = uniform_quant_ref(x, noise, lohi[0], lohi[1], bits=bits)
+        err = int(jnp.max(jnp.abs(q1.astype(jnp.int32) -
+                                  q2.astype(jnp.int32))))
+        us = _t(lambda b=bits: uniform_quant(x, noise, lohi, bits=b))
+        rows.add(f"kernels/quant_b{bits}", us,
+                 f"us/call; pallas_vs_oracle_maxdiff={err}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,65 @@
+"""Paper Fig 15 + Appendix A: OptiReduce speedup vs worker count (6..144
+nodes) on a synthetic 500M-gradient AllReduce, P99/50 in {1.5, 3} — speedup
+over Ring and BCube should hold ~2x in the high-tail environment as N grows;
+hierarchical 2D TAR cuts the round count 2(N-1) -> 2(N/G-1)+(G-1) (App. A:
+126 -> 21 at N=64, G=16)."""
+from __future__ import annotations
+
+import math
+
+from repro.sim.netsim import GASimulator, NetworkModel, simulate_job
+
+from .common import Rows
+
+
+def _tar2d(n: int, groups: int, nbytes: float, steps: int, envname: str):
+    env = NetworkModel.environment(envname, seed=n)
+    sim = GASimulator(env, n, 0.62)
+    timeout = sim.warmup(nbytes)
+    total, drops, rounds = 0.0, 0.0, 0
+    for _ in range(steps):
+        r = sim.optireduce_2d(nbytes, timeout, groups)
+        total += r.time_ms
+        drops += r.drop_frac
+        rounds = r.rounds
+    return total / steps, drops / steps, rounds
+
+
+def run(quick: bool = True) -> Rows:
+    rows = Rows()
+    # Appendix A round-count claim at N=64, G=16
+    rows.add("scaling/appA_rounds_flat_n64", 2 * (64 - 1), "paper: 126")
+    rows.add("scaling/appA_rounds_2d_n64_g16", 2 * (64 // 16 - 1) + 15,
+             "paper: 21")
+    nb = 500e6 * 4 / 20
+    steps2 = 40 if quick else 150
+    for n, g in ((64, 8), (144, 12)):
+        flat, dflat, _ = _tar2d(n, 1, nb, steps2, "local_3.0")
+        hier, dhier, r2 = _tar2d(n, g, nb, steps2, "local_3.0")
+        rows.add(f"scaling/tar2d_n{n}_g{g}_speedup", flat / hier,
+                 f"rounds {2*(n-1)} -> {r2}; drops {dflat:.4f}->{dhier:.4f}")
+    nbytes = 500e6 * 4 / 20          # 500M grads, 20 buckets
+    steps = 60 if quick else 200
+    nodes = [6, 12, 24] if quick else [6, 12, 24, 72, 144]
+    for ratio, envname in ((1.5, "local_1.5"), (3.0, "local_3.0")):
+        for n in nodes:
+            res = {}
+            for strat in ("gloo_ring", "bcube", "tar_tcp", "optireduce"):
+                env = NetworkModel.environment(envname, seed=n)
+                r = simulate_job(strat, n_nodes=n, bucket_bytes=nbytes,
+                                 n_steps=steps, env=env, compute_ms=0.0,
+                                 overlap=0.0)
+                res[strat] = r["mean_ga_ms"]
+            o = res["optireduce"]
+            rows.add(f"scaling/p{ratio}/n{n}/ring_speedup",
+                     res["gloo_ring"] / o, "paper ~2x at p99/50=3")
+            rows.add(f"scaling/p{ratio}/n{n}/bcube_speedup",
+                     res["bcube"] / o, "")
+            rows.add(f"scaling/p{ratio}/n{n}/tar_tcp_speedup",
+                     res["tar_tcp"] / o,
+                     "UBT's contribution beyond TAR topology")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,84 @@
+"""Paper Fig 11 + Table 1: GPT-2 time-to-accuracy across environments.
+
+TTA = steps-to-accuracy (real training of the reduced GPT-2 family config;
+identical gradient content for all reliable collectives, drop-injected for
+OptiReduce at the simulator's observed loss) x per-step wall-clock
+(calibrated network simulator; GPT-2 base: ~497 MB fp32 grads in 25 MB
+buckets, two concurrent GAs overlapping backprop).
+
+Paper reference (minutes, 8 nodes): see derived column.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim.netsim import NetworkModel, simulate_job
+from repro.sim.tta import TrainRunConfig, run_training, steps_to_accuracy
+
+from .common import Rows
+
+PAPER_MIN = {  # Table 1 (OpenAI GPT-2)
+    "local_1.5": {"gloo_ring": 154, "bcube": 172, "nccl_ring": 118,
+                  "nccl_tree": 105, "tar_tcp": 148, "optireduce": 96},
+    "local_3.0": {"gloo_ring": 186, "bcube": 210, "nccl_ring": 159,
+                  "nccl_tree": 135, "tar_tcp": 166, "optireduce": 97},
+    "cloudlab":  {"gloo_ring": 88, "bcube": 100, "nccl_ring": 71,
+                  "nccl_tree": 79, "tar_tcp": 90, "optireduce": 60},
+}
+
+GRAD_BYTES = 124e6 * 4          # GPT-2 base fp32 gradients
+BUCKET = 25 * 2 ** 20
+COMPUTE_MS = 180.0              # fwd+bwd per step (V100-class, batch 32)
+CONCURRENT_GA = 2               # paper/PyTorch: two in-flight buckets
+
+
+def step_time_ms(strategy: str, env: NetworkModel, n_steps: int) -> dict:
+    n_buckets = int(np.ceil(GRAD_BYTES / BUCKET))
+    r = simulate_job(strategy, n_nodes=8, bucket_bytes=BUCKET,
+                     n_steps=n_steps * n_buckets, env=env,
+                     compute_ms=0.0, overlap=0.0)
+    per_step_ga = r["mean_ga_ms"] * n_buckets / CONCURRENT_GA
+    # GA overlaps the backward pass (Fig 1): only the excess is exposed
+    exposed = max(0.0, per_step_ga - 0.6 * COMPUTE_MS)
+    return {"step_ms": COMPUTE_MS + exposed, "ga_ms": per_step_ga,
+            "drop": r["mean_drop"]}
+
+
+def run(quick: bool = True) -> Rows:
+    rows = Rows()
+    steps = 150 if quick else 400
+    target_frac = 0.95
+
+    base = run_training(TrainRunConfig(steps=steps, eval_every=10))
+    target = target_frac * max(base["acc"])
+    s_reliable = steps_to_accuracy(base, target) or steps
+    # OptiReduce trains under its own (tail-pattern) drops
+    opti_hist = run_training(TrainRunConfig(
+        steps=steps, eval_every=10, drop_rate=0.002, use_hadamard=True))
+    s_opti = steps_to_accuracy(opti_hist, target) or steps
+    rows.add("tta/steps_reliable", s_reliable, f"to {target:.3f} top-1")
+    rows.add("tta/steps_optireduce", s_opti,
+             "same target under ~0.1-0.2% tail drops + HT")
+
+    sim_steps = 40 if quick else 150
+    for envname, paper in PAPER_MIN.items():
+        res = {}
+        for strat in ("gloo_ring", "bcube", "nccl_ring", "nccl_tree",
+                      "tar_tcp", "optireduce"):
+            env = NetworkModel.environment(envname, seed=11)
+            st = step_time_ms(strat, env, sim_steps)
+            n_steps = s_opti if strat == "optireduce" else s_reliable
+            # scale the measured steps to the paper's training length
+            tta_min = st["step_ms"] * n_steps * 250 / 60e3
+            res[strat] = tta_min
+            rows.add(f"tta/{envname}/{strat}_min", round(tta_min, 1),
+                     f"paper {paper[strat]} min; drop={st['drop']:.5f}")
+        o = res["optireduce"]
+        for strat in ("gloo_ring", "nccl_tree"):
+            rows.add(f"tta/{envname}/{strat}_vs_opti", res[strat] / o,
+                     f"paper {paper[strat]/paper['optireduce']:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,24 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import time
+
+
+class Rows:
+    """Collects CSV rows: name,value,derived."""
+
+    def __init__(self):
+        self.rows: list[tuple[str, float, str]] = []
+
+    def add(self, name: str, value, derived: str = ""):
+        self.rows.append((name, float(value), derived))
+        print(f"{name},{value},{derived}", flush=True)
+
+    def extend(self, other: "Rows"):
+        self.rows.extend(other.rows)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

@@ -1,0 +1,125 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Reads results/dryrun_*.json (produced by repro.launch.dryrun) and derives,
+per (arch x shape x mesh):
+
+    compute_s    = HLO_FLOPs_per_chip / PEAK_FLOPS
+    memory_s     = HLO_bytes_per_chip / HBM_BW
+    collective_s = collective_bytes_per_chip / ICI_BW
+
+(cost-model metrics are per-chip already — the HLO is the SPMD per-device
+program; dividing the global aggregate by `chips` is the same number).
+MODEL_FLOPS = 6*N*D (train; N_active for MoE) or 2*N*D (decode/prefill
+forward) is reported against HLO FLOPs to expose remat/dispatch overhead.
+
+  python -m benchmarks.roofline results/dryrun_single_pod.json [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+PEAK_FLOPS = 197e12     # bf16 / chip (v5e)
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s per link
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 1 * 128,
+    "long_500k": 1 * 1,
+}
+
+
+def analyze(rec: dict, chips: int) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    cm = rec.get("cost_model") or {}
+    flops = cm.get("flops", 0.0)
+    mem_bytes = cm.get("bytes", 0.0)
+    coll = sum(v for k, v in cm.items()
+               if k.startswith("coll_") and "count" not in k)
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": mem_bytes / HBM_BW,
+        "collective_s": coll / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    tokens = SHAPE_TOKENS[rec["shape"]]
+    if rec["kind"] == "train":
+        model_flops = 6 * rec["active_params"] * tokens
+    else:
+        model_flops = 2 * rec["active_params"] * tokens
+    hlo_total = flops * chips
+    bound_s = max(terms.values())
+    useful = model_flops / hlo_total if hlo_total else 0.0
+    # roofline fraction: useful model FLOPs per chip-second at the bound
+    mfu = (model_flops / chips / bound_s) / PEAK_FLOPS if bound_s else 0.0
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": model_flops,
+        "hlo_flops_per_chip": flops,
+        "useful_frac": useful,
+        "roofline_frac": mfu,
+        "coll_bytes_per_chip": coll,
+        "peak_gib": (rec.get("memory", {})
+                     .get("peak_bytes_per_device", 0)) / 2 ** 30,
+    }
+
+
+MOVE_HINTS = {
+    "compute": "raise MXU utilization: bigger microbatch / fuse small ops "
+               "/ drop dead padded-head FLOPs",
+    "memory": "cut HBM traffic: better remat policy, bf16 intermediates, "
+              "fuse elementwise chains, larger attention blocks",
+    "collective": "cut bytes/step: 2D TAR over (pod,data), quantized "
+                  "(THC) gradient exchange, overlap with compute, "
+                  "sequence-parallel activations",
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json", nargs="+")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+    rows = []
+    for path in args.json:
+        recs = json.load(open(path))
+        for rec in recs:
+            chips = 1
+            for d in rec.get("mesh", "1").split("x"):
+                chips *= int(d)
+            a = analyze(rec, chips)
+            if a is None:
+                rows.append((rec, None))
+            else:
+                rows.append((rec, a))
+    if args.md:
+        print("| arch | shape | mesh | compute_s | memory_s | collective_s |"
+              " dominant | peak GiB | MODEL/HLO | roofline frac |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+    for rec, a in rows:
+        if a is None:
+            if args.md:
+                print(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                      f"SKIP/{rec['status']} |||||||")
+            continue
+        if args.md:
+            print(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+                  f"| {a['compute_s']:.3e} | {a['memory_s']:.3e} "
+                  f"| {a['collective_s']:.3e} | {a['dominant']} "
+                  f"| {a['peak_gib']:.1f} | {a['useful_frac']:.2f} "
+                  f"| {a['roofline_frac']:.3f} |")
+        else:
+            print(f"{rec['arch']},{rec['shape']},{rec['mesh']},"
+                  f"{a['compute_s']:.4e},{a['memory_s']:.4e},"
+                  f"{a['collective_s']:.4e},{a['dominant']},"
+                  f"{a['useful_frac']:.3f},{a['roofline_frac']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,50 @@
+"""Benchmark suite entrypoint — one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows (plus section comments).
+
+  python -m benchmarks.run            # quick mode (CI-sized)
+  python -m benchmarks.run --full     # paper-sized sweeps
+  python -m benchmarks.run --only bench_tta
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "bench_mse_topology",     # §5.3 MSE micro (Ring/PS/TAR)
+    "bench_hadamard_drops",   # Fig 9 + Fig 14
+    "bench_incast",           # Fig 13
+    "bench_timeout",          # §5.3 early-timeout ablation
+    "bench_scaling",          # Fig 15
+    "bench_tta",              # Fig 11 + Table 1
+    "bench_compression",      # Fig 16
+    "bench_kernels",          # §4 kernel layer parity/perf
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    mods = [args.only] if args.only else MODULES
+    print("name,value,derived")
+    failures = 0
+    for name in mods:
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.run(quick=not args.full)
+        except Exception as e:  # keep the suite going
+            failures += 1
+            print(f"{name}/FAILED,0,{type(e).__name__}: {e}", flush=True)
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

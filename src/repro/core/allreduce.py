@@ -1,0 +1,381 @@
+"""Gradient-sync strategy registry — OptiReduce as a first-class feature.
+
+Every strategy is a function ``(bucket, ctx) -> bucket`` mapping a flat
+per-worker gradient bucket to its (approximate) mean over the data-parallel
+axis/axes, callable inside a ``shard_map`` body. The trainer and the dry-run
+select strategies by name:
+
+  psum        — XLA's native all-reduce (what a stock JAX program does)
+  gloo_ring   — explicit ring reduce-scatter + all-gather (Gloo Ring)
+  nccl_tree   — recursive halving-doubling (NCCL Tree stand-in)
+  bcube       — Gloo BCube
+  tar_tcp     — Transpose AllReduce, reliable (paper's TAR+TCP baseline)
+  tar_rounds  — TAR with the paper's explicit round schedule (ppermute form)
+  optireduce  — TAR + UBT drop model + compensated reduce + randomized HT
+  optireduce_2d — hierarchical 2D TAR across (pod, data) for multi-pod meshes
+
+OptiReduce pipeline (one bucket):
+  pad -> HT encode (Pallas FWHT) -> all_to_all -> masked compensated mean
+  (Pallas masked_sum) -> all_gather -> HT decode -> unpad
+Drops are applied on stage 1 only by default (the aggregated shard is then
+authoritative and every replica receives identical bytes from the broadcast,
+keeping replicas consistent; see DESIGN §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import drops as drops_lib
+from . import ring as ring_lib
+from . import tar as tar_lib
+from .hadamard import ht_decode, ht_encode
+
+
+@dataclasses.dataclass(frozen=True)
+class OptiReduceConfig:
+    """Static (hashable) configuration for gradient sync."""
+    strategy: str = "optireduce"
+    data_axis: str = "data"
+    pod_axis: str | None = None          # set for multi-pod meshes
+    # UBT drop model (stand-in for timeouts/loss on a lossy fabric)
+    drop_rate: float = 0.0
+    drop_pattern: str = "tail"           # bernoulli | tail | straggler
+    packet_elems: int = 256
+    # Hadamard transform
+    use_hadamard: bool = True
+    hadamard_block: int = 4096
+    # kernels: use Pallas (TPU) or the jnp MXU-form (identical math)
+    use_kernels: bool = False
+    # safeguards
+    skip_threshold: float = 0.10
+    # round-form incast (tar_rounds only)
+    incast: int = 1
+    # quantized TAR exchange (optireduce_q): THC-style shared-grid uniform
+    # stochastic quantization of the HT-rotated shards — beyond-paper
+    # optimization (the paper notes THC is orthogonal); cuts the wire bytes
+    # of both TAR stages by 32/quant_bits
+    quant_bits: int = 8
+    # quantize the FSDP gradient reduce-scatter wire to this many bits
+    # (0 = native dtype). Per-Hadamard-block grids, pmax-shared; §Perf H2.
+    rs_wire_bits: int = 0
+
+
+@dataclasses.dataclass
+class SyncContext:
+    """Per-step dynamic context threaded into the strategy."""
+    cfg: OptiReduceConfig
+    key: jax.Array                        # replicated per-step PRNG key
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    def data_axes(self) -> tuple[str, ...]:
+        if self.cfg.pod_axis is not None:
+            return (self.cfg.pod_axis, self.cfg.data_axis)
+        return (self.cfg.data_axis,)
+
+    def loss_fraction(self) -> jnp.ndarray:
+        """Observed entry-loss fraction this step, pmean'd across receivers
+        (what the §3.4 safeguards and the UBT controller monitor)."""
+        if "total" not in self.stats:
+            return jnp.zeros(())
+        frac = self.stats["dropped"] / jnp.maximum(self.stats["total"], 1.0)
+        return jax.lax.pmean(frac, self.data_axes())
+
+
+def _mask_for(ctx: SyncContext, n: int, s: int, axis: str) -> jnp.ndarray | None:
+    """Receiver-specific (N, S) arrival mask for TAR stage 1."""
+    cfg = ctx.cfg
+    if cfg.drop_rate <= 0.0:
+        return None
+    me = jax.lax.axis_index(axis)
+    key = jax.random.fold_in(ctx.key, me)
+    return drops_lib.make_mask(cfg.drop_pattern, key, n, s,
+                               rate=cfg.drop_rate,
+                               packet_elems=cfg.packet_elems,
+                               self_index=me)
+
+
+# ----------------------------------------------------------------- strategies
+def _psum(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
+    return jax.lax.pmean(bucket, ctx.data_axes())
+
+
+def _gloo_ring(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
+    n = jax.lax.axis_size(ctx.cfg.data_axis)
+    x, length = tar_lib.pad_for_tar(bucket, n)
+    out = ring_lib.ring_allreduce(x, ctx.cfg.data_axis)
+    if ctx.cfg.pod_axis is not None:
+        out = jax.lax.pmean(out, ctx.cfg.pod_axis)
+    return out[:length]
+
+
+def _nccl_tree(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
+    n = jax.lax.axis_size(ctx.cfg.data_axis)
+    x, length = tar_lib.pad_for_tar(bucket, n)
+    out = ring_lib.tree_allreduce(x, ctx.cfg.data_axis)
+    if ctx.cfg.pod_axis is not None:
+        out = jax.lax.pmean(out, ctx.cfg.pod_axis)
+    return out[:length]
+
+
+def _bcube(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
+    n = jax.lax.axis_size(ctx.cfg.data_axis)
+    base = 4 if n % 4 == 0 else 2
+    x, length = tar_lib.pad_for_tar(bucket, n)
+    out = ring_lib.bcube_allreduce(x, ctx.cfg.data_axis, base=base)
+    if ctx.cfg.pod_axis is not None:
+        out = jax.lax.pmean(out, ctx.cfg.pod_axis)
+    return out[:length]
+
+
+def _tar_tcp(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
+    """Reliable TAR (no drops, no HT) — the paper's TAR+TCP baseline."""
+    n = jax.lax.axis_size(ctx.cfg.data_axis)
+    x, length = tar_lib.pad_for_tar(bucket, n)
+    if ctx.cfg.pod_axis is not None:
+        out = tar_lib.tar_allreduce_2d(x, ctx.cfg.data_axis, ctx.cfg.pod_axis,
+                                       use_kernel=ctx.cfg.use_kernels)
+    else:
+        out = tar_lib.tar_allreduce(x, ctx.cfg.data_axis,
+                                    use_kernel=ctx.cfg.use_kernels)
+    return out[:length]
+
+
+def _tar_rounds(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
+    n = jax.lax.axis_size(ctx.cfg.data_axis)
+    x, length = tar_lib.pad_for_tar(bucket, n)
+    out = tar_lib.tar_allreduce_rounds(x, ctx.cfg.data_axis,
+                                       incast=ctx.cfg.incast)
+    if ctx.cfg.pod_axis is not None:
+        out = jax.lax.pmean(out, ctx.cfg.pod_axis)
+    return out[:length]
+
+
+def _optireduce(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
+    """The paper's system: TAR + UBT drop model + HT + compensated reduce."""
+    cfg = ctx.cfg
+    axis = cfg.data_axis
+    n = jax.lax.axis_size(axis)
+    block = cfg.hadamard_block if cfg.use_hadamard else 1
+    x, length = tar_lib.pad_for_tar(bucket, n, block)
+    if cfg.use_hadamard:
+        x = ht_encode(x, ctx.key, block=block, use_kernel=cfg.use_kernels)
+    s = x.shape[0] // n
+    mask = _mask_for(ctx, n, s, axis)
+    if mask is not None:
+        ctx.stats["dropped"] = ctx.stats.get("dropped", 0.0) + \
+            jnp.sum(1.0 - mask)
+        ctx.stats["total"] = ctx.stats.get("total", 0.0) + mask.size
+    if cfg.pod_axis is not None:
+        out = tar_lib.tar_allreduce_2d(x, axis, cfg.pod_axis, mask=mask,
+                                       use_kernel=cfg.use_kernels)
+    else:
+        out = tar_lib.tar_allreduce(x, axis, mask=mask,
+                                    use_kernel=cfg.use_kernels)
+    if cfg.use_hadamard:
+        out = ht_decode(out, ctx.key, block=block, use_kernel=cfg.use_kernels)
+    return out[:length]
+
+
+def _optireduce_q(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
+    """OptiReduce with THC-quantized shard exchange (beyond-paper §Perf).
+
+    Pipeline: HT encode -> per-Hadamard-block uniform stochastic quantize
+    -> all_to_all uint8 codes -> dequantize + drop-compensated mean ->
+    all_gather aggregate codes -> dequant -> HT decode.
+
+    The per-block [−amax_b, amax_b] grids are pmax'd across workers, so
+    every node derives identical grids locally (no scale exchange) and the
+    codes are homomorphic — the THC property, made cheap by the rotation
+    (rotated blocks are near-Gaussian with comparable scales). Wire bytes:
+    quant_bits/16 of the bf16 exchange.
+    """
+    cfg = ctx.cfg
+    axis = cfg.data_axis
+    n = jax.lax.axis_size(axis)
+    block = cfg.hadamard_block
+    levels = (1 << cfg.quant_bits) - 1
+    x, length = tar_lib.pad_for_tar(bucket, n, block)
+    x = ht_encode(x, ctx.key, block=block, use_kernel=cfg.use_kernels)
+    xb = x.reshape(-1, block)
+    amax = jnp.max(jnp.abs(xb), axis=1)
+    amax = jax.lax.pmax(amax, axis)
+    if cfg.pod_axis is not None:
+        amax = jax.lax.pmax(amax, cfg.pod_axis)
+    amax = jnp.maximum(amax, 1e-12)
+    step = (2.0 * amax / levels)[:, None]               # (nblocks, 1)
+    lo = -amax[:, None]
+
+    def quantize(vals, subkey):
+        u = jax.random.uniform(subkey, vals.shape)
+        q = jnp.floor((vals - lo) / step + u)
+        return jnp.clip(q, 0, levels).astype(jnp.uint8)
+
+    def dequantize(codes):
+        return codes.astype(jnp.float32) * step + lo
+
+    s = x.shape[0] // n
+    codes = quantize(xb, jax.random.fold_in(ctx.key, 3)).reshape(n, s)
+    received = jax.lax.all_to_all(codes, axis, split_axis=0, concat_axis=0,
+                                  tiled=True)
+    # this receiver's shard spans blocks [i*s/block, (i+1)*s/block)
+    i = jax.lax.axis_index(axis)
+    nblk_shard = s // block
+    my_lo = jax.lax.dynamic_slice_in_dim(lo, i * nblk_shard, nblk_shard, 0)
+    my_step = jax.lax.dynamic_slice_in_dim(step, i * nblk_shard,
+                                           nblk_shard, 0)
+    vals = (received.reshape(n, nblk_shard, block).astype(jnp.float32)
+            * my_step[None] + my_lo[None]).reshape(n, s)
+    mask = _mask_for(ctx, n, s, axis)
+    if mask is not None:
+        ctx.stats["dropped"] = ctx.stats.get("dropped", 0.0) + \
+            jnp.sum(1.0 - mask)
+        ctx.stats["total"] = ctx.stats.get("total", 0.0) + mask.size
+    own = tar_lib._reduce(vals, mask, cfg.use_kernels)
+    if cfg.pod_axis is not None:
+        own = jax.lax.pmean(own, cfg.pod_axis)
+    # stage 2: broadcast the aggregate, also quantized on the same grids
+    ob = own.reshape(nblk_shard, block)
+    oq = jnp.clip(jnp.floor((ob - my_lo) / my_step +
+                            jax.random.uniform(jax.random.fold_in(ctx.key, 4),
+                                               ob.shape)),
+                  0, levels).astype(jnp.uint8)
+    all_codes = jax.lax.all_gather(oq.reshape(s), axis, axis=0, tiled=True)
+    out = (all_codes.reshape(-1, block).astype(jnp.float32) * step + lo
+           ).reshape(-1)
+    out = ht_decode(out, ctx.key, block=block, use_kernel=cfg.use_kernels)
+    return out[:length]
+
+
+_STRATEGIES: dict[str, Callable] = {
+    "psum": _psum,
+    "gloo_ring": _gloo_ring,
+    "nccl_tree": _nccl_tree,
+    "bcube": _bcube,
+    "tar_tcp": _tar_tcp,
+    "tar_rounds": _tar_rounds,
+    "optireduce": _optireduce,
+    "optireduce_2d": _optireduce,   # pod_axis in cfg drives the 2D path
+    "optireduce_q": _optireduce_q,  # quantized exchange (beyond-paper)
+}
+
+
+def strategies() -> tuple[str, ...]:
+    return tuple(_STRATEGIES)
+
+
+def sync_bucket(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
+    """Reduce one flat bucket to its (approximate) DP mean."""
+    try:
+        fn = _STRATEGIES[ctx.cfg.strategy]
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {ctx.cfg.strategy!r}; one of {strategies()}")
+    return fn(bucket, ctx)
+
+
+def sync_pytree(grads, ctx: SyncContext, *, bucket_elems: int = 6_553_600):
+    """Sync a gradient pytree via fixed-size buckets (PyTorch uses 25 MB
+    buckets == 6.55M fp32 entries; same default here). Buckets are formed
+    by flattening leaves in pytree order and slicing — each bucket runs the
+    full strategy pipeline independently, which is what lets the runtime
+    overlap bucket k's collective with bucket k+1's backward (two in
+    flight, as the paper/PyTorch do).
+
+    Returns (synced_grads, mean_loss_fraction_estimate).
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    sizes = [leaf.size for leaf in leaves]
+    flat = jnp.concatenate([leaf.reshape(-1).astype(jnp.float32)
+                            for leaf in leaves])
+    total = flat.shape[0]
+    out_parts = []
+    start = 0
+    bucket_idx = 0
+    while start < total:
+        end = min(start + bucket_elems, total)
+        sub = jax.random.fold_in(ctx.key, bucket_idx)
+        bucket_ctx = SyncContext(cfg=ctx.cfg, key=sub, stats=ctx.stats)
+        out_parts.append(sync_bucket(flat[start:end], bucket_ctx))
+        start = end
+        bucket_idx += 1
+    synced = jnp.concatenate(out_parts) if len(out_parts) > 1 else out_parts[0]
+    new_leaves = []
+    off = 0
+    for leaf, size in zip(leaves, sizes):
+        new_leaves.append(synced[off:off + size].reshape(leaf.shape)
+                          .astype(leaf.dtype))
+        off += size
+    return jax.tree.unflatten(treedef, new_leaves)
+
+
+def reduce_scatter_axis(g: jnp.ndarray, axis: str, dim: int,
+                        ctx: SyncContext, *,
+                        with_drops: bool = True) -> jnp.ndarray:
+    """OptiReduce as a reduce-scatter: TAR stage 1 + compensated reduce on an
+    arbitrary tensor, scattering ``dim`` over ``axis`` (the FSDP/ZeRO grad
+    reduction — the all_gather at next use is the deferred stage 2).
+
+    g: full tensor; returns the local shard (dim size / axis size) holding
+    the drop-compensated mean over the axis peers.
+    """
+    cfg = ctx.cfg
+    n = jax.lax.axis_size(axis)
+    g2 = jnp.moveaxis(g, dim, 0)
+    lead = g2.shape[0]
+    rest = g2.shape[1:]
+    assert lead % n == 0, (lead, n)
+    # keep the wire dtype (bf16 grads stay bf16): halves collective bytes
+    # and the per-layer transients; the masked reduction and the FWHT both
+    # accumulate in fp32 internally
+    rows = g2.reshape(n, -1)                           # row j -> shard j
+    row_len = rows.shape[1]
+    quant = cfg.rs_wire_bits
+    use_ht = (with_drops and cfg.use_hadamard and cfg.drop_rate > 0) or \
+        bool(quant)                                     # quant needs rotation
+    block = cfg.hadamard_block if use_ht else 1
+    pad = (-row_len) % block
+    if pad:
+        rows = jnp.pad(rows, ((0, 0), (0, pad)))
+    if use_ht:
+        rows = ht_encode(rows.reshape(-1), ctx.key, block=block,
+                         use_kernel=cfg.use_kernels).reshape(rows.shape)
+    if quant:
+        # per-block shared grids (pmax over the axis): int codes on the wire
+        levels = (1 << quant) - 1
+        rb = rows.reshape(-1, block)
+        amax = jnp.maximum(jax.lax.pmax(jnp.max(jnp.abs(rb), axis=1), axis),
+                           1e-12)
+        step_b = (2.0 * amax / levels)[:, None]
+        lo_b = -amax[:, None]
+        u = jax.random.uniform(jax.random.fold_in(ctx.key, 9), rb.shape)
+        codes = jnp.clip(jnp.floor((rb.astype(jnp.float32) - lo_b) / step_b
+                                   + u), 0, levels).astype(jnp.uint8)
+        received = jax.lax.all_to_all(codes.reshape(rows.shape), axis,
+                                      split_axis=0, concat_axis=0,
+                                      tiled=True)
+        i = jax.lax.axis_index(axis)
+        nblk = rows.shape[1] // block
+        my_lo = jax.lax.dynamic_slice_in_dim(lo_b, i * nblk, nblk, 0)
+        my_step = jax.lax.dynamic_slice_in_dim(step_b, i * nblk, nblk, 0)
+        received = (received.reshape(n, nblk, block).astype(jnp.float32)
+                    * my_step[None] + my_lo[None]).reshape(n, -1)
+    else:
+        received = jax.lax.all_to_all(rows, axis, split_axis=0,
+                                      concat_axis=0, tiled=True)
+    mask = (_mask_for(ctx, n, received.shape[1], axis)
+            if with_drops else None)
+    if mask is not None:
+        ctx.stats["dropped"] = ctx.stats.get("dropped", 0.0) + \
+            jnp.sum(1.0 - mask)
+        ctx.stats["total"] = ctx.stats.get("total", 0.0) + mask.size
+    own = tar_lib._reduce(received, mask, cfg.use_kernels)
+    if use_ht:
+        own = ht_decode(own, ctx.key, block=block, use_kernel=cfg.use_kernels)
+    if pad:
+        own = own[:row_len]
+    out = own.reshape((lead // n,) + rest)
+    return jnp.moveaxis(out, 0, dim)

@@ -1,0 +1,89 @@
+"""Gradient-drop models (the TPU stand-in for UBT packet loss, DESIGN §2).
+
+A mask entry of 0 means "this sender's packet for these entries did not
+arrive before the adaptive timeout". Masks are generated at *packet*
+granularity (``packet_elems`` consecutive entries share one fate, matching
+MTU-sized gradient packets) and then expanded elementwise.
+
+Patterns:
+  * ``bernoulli``  — i.i.d. packet loss at the configured rate.
+  * ``tail``       — tail-drop: the last fraction of each peer's shard is cut
+    (what a timeout does to an in-flight stream; the pattern HT exists for).
+  * ``straggler``  — whole peers miss the round with some probability
+    (compute stragglers / failed nodes).
+
+All generators are deterministic functions of (key, receiver), so the whole
+step stays jit-compatible and reproducible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand(packet_mask: jnp.ndarray, n_elems: int,
+            packet_elems: int) -> jnp.ndarray:
+    m = jnp.repeat(packet_mask, packet_elems, axis=-1)
+    return m[..., :n_elems]
+
+
+def bernoulli_mask(key: jax.Array, n_peers: int, n_elems: int, *,
+                   rate: float, packet_elems: int = 256) -> jnp.ndarray:
+    """(n_peers, n_elems) 0/1 mask; P(drop a packet) = rate."""
+    n_pkts = -(-n_elems // packet_elems)
+    keep = jax.random.bernoulli(key, 1.0 - rate, (n_peers, n_pkts))
+    return _expand(keep.astype(jnp.float32), n_elems, packet_elems)
+
+
+def tail_mask(key: jax.Array, n_peers: int, n_elems: int, *,
+              rate: float, packet_elems: int = 256) -> jnp.ndarray:
+    """Drop the trailing packets of a random subset of peers.
+
+    Each peer independently times out with probability min(1, 4*rate); a
+    timed-out peer loses its last ceil(rate*4) fraction of packets, so the
+    expected element loss matches ``rate`` while the *pattern* is bursty.
+    """
+    n_pkts = -(-n_elems // packet_elems)
+    k_to, k_len = jax.random.split(key)
+    p_timeout = jnp.minimum(1.0, 4.0 * rate)
+    timed_out = jax.random.bernoulli(k_to, p_timeout, (n_peers, 1))
+    cut_frac = jnp.where(p_timeout > 0, rate / jnp.maximum(p_timeout, 1e-9), 0.0)
+    cut_start = jnp.floor((1.0 - cut_frac) * n_pkts)
+    idx = jnp.arange(n_pkts)[None, :]
+    keep = jnp.where(timed_out & (idx >= cut_start), 0.0, 1.0)
+    return _expand(keep.astype(jnp.float32), n_elems, packet_elems)
+
+
+def straggler_mask(key: jax.Array, n_peers: int, n_elems: int, *,
+                   rate: float, packet_elems: int = 256) -> jnp.ndarray:
+    """Whole peers miss the round with probability ``rate``."""
+    del packet_elems
+    keep = jax.random.bernoulli(key, 1.0 - rate, (n_peers, 1))
+    return jnp.broadcast_to(keep.astype(jnp.float32), (n_peers, n_elems))
+
+
+_PATTERNS = {
+    "bernoulli": bernoulli_mask,
+    "tail": tail_mask,
+    "straggler": straggler_mask,
+}
+
+
+def make_mask(pattern: str, key: jax.Array, n_peers: int, n_elems: int, *,
+              rate: float, packet_elems: int = 256,
+              self_index: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Dispatch on drop pattern. A node never drops its own contribution
+    (it is local), so row ``self_index`` is forced to 1 when provided."""
+    if rate <= 0.0:
+        return jnp.ones((n_peers, n_elems), jnp.float32)
+    mask = _PATTERNS[pattern](key, n_peers, n_elems, rate=rate,
+                              packet_elems=packet_elems)
+    if self_index is not None:
+        own = jnp.arange(n_peers) == self_index
+        mask = jnp.where(own[:, None], 1.0, mask)
+    return mask
+
+
+def loss_fraction(mask: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of gradient entries lost this round (monitored by §3.4)."""
+    return 1.0 - jnp.mean(mask)

@@ -1,0 +1,47 @@
+"""Randomized Hadamard Transform over gradient buckets (paper §3.3).
+
+The bucket is processed in 2^k-element blocks (default 4096). Blockwise HT
+commutes with TAR sharding as long as shard boundaries are block-aligned
+(guaranteed by ``core.tar.pad_for_tar``), and the transform is linear, so
+
+    decode(mean_i(encode(g_i))) == mean_i(g_i)        (exact, no drops)
+
+while under drops the decoded error is spread across the whole block —
+the paper's unbiased-estimate property (Fig 9).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fwht import randomized_fwht
+
+
+def rademacher_sign(key: jax.Array, block: int) -> jnp.ndarray:
+    """The random +-1 diagonal D shared by all workers for one step."""
+    return jnp.where(jax.random.bernoulli(key, 0.5, (block,)), 1.0, -1.0).astype(
+        jnp.float32)
+
+
+def ht_encode(x: jnp.ndarray, key: jax.Array, *, block: int = 4096,
+              use_kernel: bool = False) -> jnp.ndarray:
+    """Encode a flat, block-aligned bucket: per-block H @ (d * x)."""
+    n = x.shape[-1]
+    if n % block:
+        raise ValueError(f"bucket length {n} not a multiple of block {block}")
+    sign = rademacher_sign(key, block)
+    y = randomized_fwht(x.reshape(-1, block), sign, mode="encode",
+                        use_kernel=use_kernel)
+    return y.reshape(x.shape)
+
+
+def ht_decode(y: jnp.ndarray, key: jax.Array, *, block: int = 4096,
+              use_kernel: bool = False) -> jnp.ndarray:
+    """Inverse of ``ht_encode`` with the same key: per-block d * (H @ y)."""
+    n = y.shape[-1]
+    if n % block:
+        raise ValueError(f"bucket length {n} not a multiple of block {block}")
+    sign = rademacher_sign(key, block)
+    x = randomized_fwht(y.reshape(-1, block), sign, mode="decode",
+                        use_kernel=use_kernel)
+    return x.reshape(y.shape)

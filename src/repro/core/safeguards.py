@@ -1,0 +1,73 @@
+"""Safeguards against excessive gradient loss (paper §3.4).
+
+Two layers:
+  * In-graph: ``guard_update`` scales an update to zero when the observed
+    loss fraction exceeds the skip threshold — jit-safe (lax-free ``where``),
+    so a pathological round is skipped without a host round-trip.
+  * Host-side: ``LossMonitor`` tracks the loss series, escalates to HALT
+    after too many consecutive skips, and manages a ring of parameter
+    snapshots for rollback (the paper's "snapshots and selective skipping").
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def guard_update(update: Any, loss_frac: jnp.ndarray, *,
+                 skip_threshold: float = 0.10) -> tuple[Any, jnp.ndarray]:
+    """Zero the pytree ``update`` when loss_frac > skip_threshold.
+
+    Returns (guarded_update, skipped?). All replicas see the same
+    loss_frac (it is computed from the aggregated result), so replicas
+    stay consistent.
+    """
+    skipped = loss_frac > skip_threshold
+    scale = jnp.where(skipped, 0.0, 1.0)
+    return jax.tree.map(lambda u: u * scale.astype(u.dtype), update), skipped
+
+
+@dataclasses.dataclass
+class LossMonitor:
+    """Host-side monitor: skip accounting, halt escalation, snapshot ring."""
+    skip_threshold: float = 0.10
+    halt_after_consecutive_skips: int = 10
+    snapshot_every: int = 100
+    snapshot_keep: int = 3
+
+    consecutive_skips: int = 0
+    total_skips: int = 0
+    halted: bool = False
+    history: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=1000))
+    _snapshots: collections.deque = dataclasses.field(
+        default_factory=collections.deque)
+
+    def observe(self, step: int, loss_frac: float, skipped: bool) -> None:
+        self.history.append((step, float(loss_frac)))
+        if skipped:
+            self.consecutive_skips += 1
+            self.total_skips += 1
+            if self.consecutive_skips >= self.halt_after_consecutive_skips:
+                self.halted = True  # prompt user intervention (§3.4)
+        else:
+            self.consecutive_skips = 0
+
+    def maybe_snapshot(self, step: int, params: Any) -> None:
+        if step % self.snapshot_every == 0:
+            self._snapshots.append((step, jax.tree.map(jnp.copy, params)))
+            while len(self._snapshots) > self.snapshot_keep:
+                self._snapshots.popleft()
+
+    def rollback(self) -> tuple[int, Any] | None:
+        """Most recent snapshot (step, params), or None."""
+        if not self._snapshots:
+            return None
+        step, params = self._snapshots[-1]
+        self.consecutive_skips = 0
+        self.halted = False
+        return step, params

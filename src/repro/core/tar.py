@@ -1,0 +1,144 @@
+"""Transpose AllReduce (TAR) — the paper's collective, on TPU axes (§3.1).
+
+All functions run *inside* a ``jax.shard_map`` body; ``axis`` names a mesh
+axis. A "bucket" is a flat per-device array that is identical (replicated in
+value) across the axis before the call — i.e. each worker's local gradients.
+
+Stage mapping (DESIGN §2):
+  stage 1 (shard exchange, P2P)   -> jax.lax.all_to_all (tiled)
+  reduce (colocated PS)           -> drop-compensated masked mean
+  stage 2 (broadcast aggregated)  -> jax.lax.all_gather (tiled)
+
+The round-based variant reproduces the paper's 2*ceil((N-1)/I) round schedule
+with ``collective_permute`` so the lowered HLO carries the exact round
+structure (used by the round/incast experiments); the all_to_all form is the
+production path (XLA/ICI schedules it better — see EXPERIMENTS §Perf).
+
+Hierarchical 2D TAR (§3.1.2) maps groups onto the ``pod`` axis: intra-pod TAR
+reduce-scatter, inter-pod same-rank aggregation, intra-pod broadcast —
+2(N/G-1) + (G-1) logical rounds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_sum import masked_mean, masked_mean_ref
+
+
+def axis_size(axis: str) -> int:
+    return jax.lax.axis_size(axis)
+
+
+def pad_for_tar(x: jnp.ndarray, n: int, block: int = 1) -> tuple[jnp.ndarray, int]:
+    """Pad flat x so len % (n * block) == 0 (block-aligned shards)."""
+    length = x.shape[0]
+    quantum = n * block
+    pad = (-length) % quantum
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x, length
+
+
+def _reduce(received: jnp.ndarray, mask: jnp.ndarray | None,
+            use_kernel: bool) -> jnp.ndarray:
+    """Drop-compensated mean over the peer axis. received: (N, S)."""
+    if mask is None:
+        return jnp.mean(received, axis=0)
+    if use_kernel:
+        return masked_mean(received, mask, use_kernel=True)
+    return masked_mean_ref(received, mask)
+
+
+def tar_reduce_scatter(x: jnp.ndarray, axis: str, *,
+                       mask: jnp.ndarray | None = None,
+                       use_kernel: bool = False) -> jnp.ndarray:
+    """TAR stage 1 + reduce: returns this node's aggregated shard (S,).
+
+    x: flat (L,), L % N == 0. mask: (N, S) — which peers' packets arrived
+    at *this* receiver (row self is always 1; see drops.make_mask).
+    """
+    n = axis_size(axis)
+    s = x.shape[0] // n
+    shards = x.reshape(n, s)
+    received = jax.lax.all_to_all(shards, axis, split_axis=0, concat_axis=0,
+                                  tiled=True)          # (N, S): row p = peer p's shard for me
+    return _reduce(received, mask, use_kernel)
+
+
+def tar_allreduce(x: jnp.ndarray, axis: str, *,
+                  mask: jnp.ndarray | None = None,
+                  use_kernel: bool = False) -> jnp.ndarray:
+    """Full TAR: all_to_all -> compensated reduce -> all_gather. (L,)->(L,)."""
+    own = tar_reduce_scatter(x, axis, mask=mask, use_kernel=use_kernel)
+    return jax.lax.all_gather(own, axis, axis=0, tiled=True)
+
+
+def tar_allreduce_rounds(x: jnp.ndarray, axis: str, *, incast: int = 1,
+                         mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Round-structured TAR via collective_permute (paper Fig 5b).
+
+    In round r (r = 1..N-1) node i sends shard (i+r) mod N to node (i+r) mod N
+    and receives from (i-r) mod N — a round-robin schedule where a node-pair
+    never repeats. ``incast`` rounds are issued back-to-back per group, which
+    is how the incast parameter I shows up on a lossless fabric: I permutes
+    in flight concurrently. The broadcast stage is the mirrored schedule.
+    """
+    n = axis_size(axis)
+    s = x.shape[0] // n
+    shards = x.reshape(n, s)
+    i = jax.lax.axis_index(axis)
+
+    # --- stage 1: gather my shard's contributions from every peer ---------
+    own_rows = [jnp.take(shards, i, axis=0)]           # my own contribution
+    for r in range(1, n):
+        # node j sends shards[(j + r) % n] to node (j + r) % n
+        perm = [(j, (j + r) % n) for j in range(n)]
+        send = jnp.take(shards, (i + r) % n, axis=0)
+        recv = jax.lax.ppermute(send, axis, perm)      # from (i - r) % n
+        own_rows.append(recv)
+    # rows arrive ordered by sender distance r; reorder to sender index
+    received_by_dist = jnp.stack(own_rows)             # (N, S); row r = from (i-r)%n
+    dist = (i - jnp.arange(n)) % n                     # sender index for each row? invert:
+    # sender of row r is (i - r) % n -> scatter rows to sender order
+    senders = (i - jnp.arange(n)) % n
+    received = jnp.zeros_like(received_by_dist).at[senders].set(received_by_dist)
+
+    if mask is None:
+        own = jnp.mean(received, axis=0)
+    else:
+        own = masked_mean_ref(received, mask)
+
+    # --- stage 2: broadcast aggregated shard with the mirrored schedule ---
+    out_rows = [own]
+    for r in range(1, n):
+        perm = [(j, (j + r) % n) for j in range(n)]
+        recv = jax.lax.ppermute(own, axis, perm)       # aggregated shard of (i-r)%n
+        out_rows.append(recv)
+    got_by_dist = jnp.stack(out_rows)                  # row r = shard of (i-r)%n
+    out = jnp.zeros_like(got_by_dist).at[senders].set(got_by_dist)
+    del incast  # round grouping is a scheduling hint; lossless fabric issues all
+    return out.reshape(n * s)
+
+
+def tar_allreduce_2d(x: jnp.ndarray, inner_axis: str, outer_axis: str, *,
+                     mask: jnp.ndarray | None = None,
+                     outer_mask: jnp.ndarray | None = None,
+                     use_kernel: bool = False) -> jnp.ndarray:
+    """Hierarchical 2D TAR (§3.1.2 / App. A): groups = pods.
+
+    1. intra-group: TAR reduce-scatter over ``inner_axis``  (N/G - 1 rounds)
+    2. inter-group: same-rank aggregation over ``outer_axis``  (G - 1 rounds)
+    3. intra-group broadcast over ``inner_axis``            (N/G - 1 rounds)
+    """
+    own = tar_reduce_scatter(x, inner_axis, mask=mask, use_kernel=use_kernel)
+    g = axis_size(outer_axis)
+    if g > 1:
+        s = own.shape[0]
+        if s % g == 0:
+            # TAR across pods too: shard my shard over the outer axis.
+            own = tar_allreduce(own, outer_axis, mask=outer_mask,
+                                use_kernel=use_kernel)
+        else:
+            own = jax.lax.pmean(own, outer_axis)
+    return jax.lax.all_gather(own, inner_axis, axis=0, tiled=True)

@@ -1,0 +1,151 @@
+"""Unreliable Bounded Transport (UBT) control plane (paper §3.2).
+
+XLA collectives on a TPU fabric cannot drop packets or time out, so these
+controllers do not sit in the datapath; they are the *decision logic* the
+paper specifies, reproduced exactly, and they drive (a) the cloud-network
+simulator (sim/netsim.py) and (b) the drop-mask generator used in training
+(core/drops.py). All state machines are plain Python over floats so they are
+unit-testable against the paper's update rules.
+
+Components:
+  * AdaptiveTimeout — t_B = P95 of 20 profiled stage times (§3.2.1);
+    early-timeout t_C moving average (alpha=0.95) with the x%-wait rule:
+    start 10%, double while loss > 0.1%, decrement while loss < 0.01%,
+    cap 50%; t_C sources: on-time -> observed, timeout -> t_B,
+    last-percentile-seen -> extrapolated; median across nodes then EMA.
+  * DynamicIncast — raise I on loss-free rounds, halve on loss (§3.2.2);
+    senders use the min advertised I.
+  * TimelyRateControl — §3.2.3: additive increase below T_low, multiplicative
+    decrease above T_high (paper constants: 25us/250us/50Mbps/beta=0.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class AdaptiveTimeout:
+    """Per-stage timeout controller. Times are in arbitrary units (seconds)."""
+    warmup_iters: int = 20
+    percentile: float = 95.0
+    alpha: float = 0.95           # EMA weight on the *new* t_C sample
+    x_init: float = 0.10
+    x_min: float = 0.01
+    x_max: float = 0.50
+    loss_hi: float = 1e-3         # 0.1 %
+    loss_lo: float = 1e-4         # 0.01 %
+    ht_threshold: float = 0.02    # > 2% loss activates Hadamard (§3.2.1 fn.6)
+
+    t_b: float | None = None
+    t_c: float | None = None
+    x: float = dataclasses.field(default=0.10)
+    _warmup: list = dataclasses.field(default_factory=list)
+
+    def observe_warmup(self, stage_time: float) -> None:
+        self._warmup.append(float(stage_time))
+        if len(self._warmup) >= self.warmup_iters:
+            self.t_b = float(np.percentile(self._warmup, self.percentile))
+            if self.t_c is None:
+                self.t_c = float(np.median(self._warmup))
+
+    @property
+    def ready(self) -> bool:
+        return self.t_b is not None
+
+    def round_deadline(self, last_pctile_seen: bool) -> float:
+        """Time budget for the current receive stage."""
+        assert self.t_b is not None
+        if last_pctile_seen and self.t_c is not None:
+            return min(self.t_b, (1.0 + self.x) * self.t_c)
+        return self.t_b
+
+    def update(self, *, stage_times: Sequence[float], timed_out: Sequence[bool],
+               frac_received: Sequence[float], loss_frac: float) -> None:
+        """End-of-round update of t_C and x% (paper §3.2.1).
+
+        stage_times[i]: node i's observed completion (or expiry) time;
+        timed_out[i]: hit t_B; frac_received[i]: fraction of data received
+        (for last-percentile extrapolation); loss_frac: entry loss this round.
+        """
+        assert self.t_b is not None and self.t_c is not None
+        samples = []
+        for t, to, fr in zip(stage_times, timed_out, frac_received):
+            if to:
+                samples.append(self.t_b)                       # (2) timed out
+            elif fr >= 1.0:
+                samples.append(t)                              # (1) on time
+            else:
+                samples.append(t * (1.0 / max(fr, 1e-6)))      # (3) extrapolate
+        t_c_round = float(np.median(samples))                  # median across PS nodes
+        self.t_c = self.alpha * t_c_round + (1.0 - self.alpha) * self.t_c
+
+        if loss_frac > self.loss_hi:
+            self.x = min(self.x_max, self.x * 2.0)
+        elif loss_frac < self.loss_lo:
+            self.x = max(self.x_min, self.x - 0.01)
+
+    def hadamard_active(self, loss_frac: float) -> bool:
+        return loss_frac > self.ht_threshold
+
+
+@dataclasses.dataclass
+class DynamicIncast:
+    """Receiver-advertised incast factor I (§3.2.2)."""
+    n_nodes: int = 8
+    i_init: int = 1
+    loss_tolerance: float = 1e-4
+
+    value: int = 1
+
+    def __post_init__(self) -> None:
+        self.value = max(1, int(self.i_init))
+
+    def update(self, *, loss_frac: float, timed_out: bool) -> int:
+        if loss_frac > self.loss_tolerance or timed_out:
+            self.value = max(1, self.value // 2)
+        else:
+            self.value = min(self.n_nodes - 1, self.value + 1)
+        return self.value
+
+    @staticmethod
+    def effective(advertised: Sequence[int]) -> int:
+        """Senders use the smallest advertised I for the round."""
+        return max(1, min(int(v) for v in advertised))
+
+
+@dataclasses.dataclass
+class TimelyRateControl:
+    """Minimal TIMELY-like rate control (§3.2.3). Units: seconds, bits/s."""
+    t_low: float = 25e-6
+    t_high: float = 250e-6
+    add_step: float = 50e6        # alpha = 50 Mbps
+    beta: float = 0.5
+    rate: float = 10e9            # starting rate
+    max_rate: float = 100e9
+    min_rate: float = 100e6
+
+    def update(self, rtt: float) -> float:
+        if rtt < self.t_low:
+            self.rate = min(self.max_rate, self.rate + self.add_step)
+        elif rtt > self.t_high:
+            self.rate = max(self.min_rate,
+                            self.rate * (1.0 - self.beta * (1.0 - self.t_high / rtt)))
+        # in the [t_low, t_high] band the paper's minimal scheme holds rate
+        return self.rate
+
+
+@dataclasses.dataclass
+class UbtState:
+    """Bundle of the three controllers for one training job."""
+    timeout: AdaptiveTimeout
+    incast: DynamicIncast
+    rate: TimelyRateControl
+
+    @classmethod
+    def create(cls, n_nodes: int, **kw) -> "UbtState":
+        return cls(timeout=AdaptiveTimeout(**kw.get("timeout", {})),
+                   incast=DynamicIncast(n_nodes=n_nodes, **kw.get("incast", {})),
+                   rate=TimelyRateControl(**kw.get("rate", {})))

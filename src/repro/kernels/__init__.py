@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for OptiReduce's compute hot-spots.
+
+fwht        — blocked fast Walsh-Hadamard transform (MXU Kronecker form)
+masked_sum  — fused drop-compensated shard reduction
+quant       — fused uniform stochastic quantization (THC baseline)
+"""

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: blocked fast Walsh-Hadamard transform (MXU Kronecker form).
+
+TPU adaptation of the paper's randomized Hadamard Transform (§3.3, implemented
+on GPU via HazyResearch's CUDA butterfly). A warp-shuffle butterfly does not
+map to the TPU; instead we exploit H_n = H_a (x) H_b so a length-n block,
+reshaped to (a, b), transforms as two dense matmuls ``H_a @ X @ H_b`` that run
+on the 128x128 MXU. For n = 16384 both factors are exactly 128x128.
+
+Grid: one program per tile of ``block_rows`` rows; each program holds
+(block_rows, n) of the input plus the two factor matrices in VMEM.
+
+VMEM budget per program (fp32): block_rows*n*4*2 (in+out) + (a^2+b^2)*4,
+e.g. block_rows=128, n=4096 -> 4.2 MB, well within ~16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import hadamard_matrix, split_factors
+
+
+def _fwht_kernel(x_ref, ha_ref, hb_ref, o_ref, *, rows: int, a: int, b: int):
+    x = x_ref[...].astype(jnp.float32)  # (rows, n)
+    x3 = x.reshape(rows, a, b)
+    hb = hb_ref[...]
+    ha = ha_ref[...]
+    t = jax.lax.dot_general(
+        x3, hb, (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (rows, a, b)
+    # y[r, i, k] = sum_j Ha[i, j] t[r, j, k]
+    y = jax.lax.dot_general(
+        t, ha, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (rows, b, a)
+    y = y.transpose(0, 2, 1).reshape(rows, a * b)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _fwht_sign_kernel(x_ref, sign_ref, ha_ref, hb_ref, o_ref, *, rows: int,
+                      a: int, b: int, sign_mode: str):
+    x = x_ref[...].astype(jnp.float32)
+    sign = sign_ref[...].astype(jnp.float32)         # (1, n)
+    if sign_mode == "pre":
+        x = x * sign
+    x3 = x.reshape(rows, a, b)
+    hb = hb_ref[...]
+    ha = ha_ref[...]
+    t = jax.lax.dot_general(
+        x3, hb, (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(
+        t, ha, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y = y.transpose(0, 2, 1).reshape(rows, a * b)
+    if sign_mode == "post":
+        y = y * sign
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_rows", "sign_mode", "interpret"))
+def fwht_pallas(x: jnp.ndarray,
+                sign: jnp.ndarray | None = None,
+                *,
+                block_rows: int = 64,
+                sign_mode: str = "none",
+                interpret: bool = True) -> jnp.ndarray:
+    """Orthonormal FWHT over the last axis of ``x`` (rows, n), n a power of 2.
+
+    sign_mode: 'none' | 'pre' (encode: H @ (d*x)) | 'post' (decode: d * (H@y)).
+    ``sign`` is required unless sign_mode == 'none'; shape (n,).
+    """
+    if x.ndim != 2:
+        raise ValueError("fwht_pallas expects (rows, n)")
+    rows, n = x.shape
+    a, b = split_factors(n)
+    # Fold the orthonormal 1/sqrt(n) into the factor matrices.
+    ha = hadamard_matrix(a)      # 1/sqrt(a)
+    hb = hadamard_matrix(b)      # 1/sqrt(b); product gives 1/sqrt(n)
+
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = (x.shape[0] // br,)
+
+    if sign_mode == "none":
+        kernel = functools.partial(_fwht_kernel, rows=br, a=a, b=b)
+        in_specs = [
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((a, a), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ]
+        args = (x, ha, hb)
+    else:
+        if sign is None:
+            raise ValueError("sign required for sign_mode != 'none'")
+        kernel = functools.partial(_fwht_sign_kernel, rows=br, a=a, b=b,
+                                   sign_mode=sign_mode)
+        in_specs = [
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((a, a), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ]
+        args = (x, sign.reshape(1, n).astype(jnp.float32), ha, hb)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(*args)
+    if pad:
+        out = out[:rows]
+    return out

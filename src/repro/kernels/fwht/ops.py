@@ -1,0 +1,56 @@
+"""Jit'd public wrappers for the FWHT kernel.
+
+``fwht(x)`` operates on the last axis (any leading shape); the Pallas kernel
+is used when requested / on TPU, the Kronecker jnp form otherwise (identical
+math, so the dry-run HLO carries the kernel's FLOP structure).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .fwht import fwht_pallas
+from .ref import fwht_mxu_ref, split_factors  # noqa: F401 (re-export)
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "block_rows"))
+def fwht(x: jnp.ndarray, *, use_kernel: bool = False,
+         block_rows: int = 64) -> jnp.ndarray:
+    """Orthonormal FWHT over the last axis. Involution: fwht(fwht(x)) == x."""
+    shape = x.shape
+    n = shape[-1]
+    x2 = x.reshape(-1, n)
+    if use_kernel:
+        y = fwht_pallas(x2, block_rows=block_rows,
+                        interpret=_default_interpret())
+    else:
+        y = fwht_mxu_ref(x2)
+    return y.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "use_kernel", "block_rows"))
+def randomized_fwht(x: jnp.ndarray, sign: jnp.ndarray, *, mode: str,
+                    use_kernel: bool = False,
+                    block_rows: int = 64) -> jnp.ndarray:
+    """Randomized HT: encode = H @ (d*x); decode = d * (H @ y) (exact inverse)."""
+    shape = x.shape
+    n = shape[-1]
+    x2 = x.reshape(-1, n)
+    if use_kernel:
+        sign_mode = {"encode": "pre", "decode": "post"}[mode]
+        y = fwht_pallas(x2, sign, sign_mode=sign_mode, block_rows=block_rows,
+                        interpret=_default_interpret())
+    else:
+        if mode == "encode":
+            y = fwht_mxu_ref(x2 * sign[None, :])
+        elif mode == "decode":
+            y = fwht_mxu_ref(x2) * sign[None, :]
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+    return y.reshape(shape)

@@ -1,0 +1,101 @@
+"""Pure-jnp oracle for the (randomized) fast Walsh-Hadamard transform.
+
+Two reference implementations:
+
+* ``fwht_ref``      — classic O(n log n) butterfly, the ground-truth oracle.
+* ``fwht_mxu_ref``  — the Kronecker/MXU formulation (H_n = H_a (x) H_b, so the
+  transform of a length-n block is two dense matmuls on a (a, b) reshape).
+  This is the *same math the Pallas kernel implements*; it is what the
+  distributed train_step uses under jit on non-TPU backends so that the
+  dry-run HLO carries the kernel's true FLOP structure.
+
+Both are orthonormal: ``fwht(fwht(x)) == x``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _log2(n: int) -> int:
+    k = int(n).bit_length() - 1
+    if (1 << k) != n:
+        raise ValueError(f"block size must be a power of two, got {n}")
+    return k
+
+
+@functools.lru_cache(maxsize=32)
+def hadamard_matrix_np(n: int) -> np.ndarray:
+    """Unnormalized n x n Hadamard (Sylvester construction), float32."""
+    _log2(n)
+    h = np.array([[1.0]], dtype=np.float32)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def hadamard_matrix(n: int, *, orthonormal: bool = True) -> jnp.ndarray:
+    h = hadamard_matrix_np(n)
+    if orthonormal:
+        h = h / np.sqrt(n).astype(np.float32)
+    return jnp.asarray(h)
+
+
+def split_factors(n: int) -> tuple[int, int]:
+    """n = a * b with a, b powers of two and a >= b (a = 2^ceil(k/2))."""
+    k = _log2(n)
+    a = 1 << ((k + 1) // 2)
+    b = 1 << (k // 2)
+    return a, b
+
+
+def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Orthonormal FWHT over the last axis (butterfly oracle)."""
+    orig_shape = x.shape
+    orig_dtype = x.dtype
+    n = orig_shape[-1]
+    _log2(n)
+    y = x.astype(jnp.float32).reshape(-1, n)
+    h = 1
+    while h < n:
+        y = y.reshape(-1, n // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2).reshape(-1, n)
+        h *= 2
+    y = y / jnp.sqrt(jnp.float32(n))
+    return y.reshape(orig_shape).astype(orig_dtype)
+
+
+def fwht_mxu_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Orthonormal FWHT over the last axis, Kronecker-factored (MXU form).
+
+    H_n = H_a (x) H_b (Sylvester ordering: index i*b + j), hence for a block
+    reshaped to X[a, b]:  Y = H_a @ X @ H_b.
+    """
+    orig_shape = x.shape
+    orig_dtype = x.dtype
+    n = orig_shape[-1]
+    a, b = split_factors(n)
+    ha = hadamard_matrix(a)
+    hb = hadamard_matrix(b)
+    xr = x.astype(jnp.float32).reshape(-1, a, b)
+    t = jnp.einsum("rjl,lk->rjk", xr, hb, preferred_element_type=jnp.float32)
+    y = jnp.einsum("ij,rjk->rik", ha, t, preferred_element_type=jnp.float32)
+    return y.reshape(orig_shape).astype(orig_dtype)
+
+
+def randomized_fwht_ref(
+    x: jnp.ndarray, sign: jnp.ndarray, *, mode: str
+) -> jnp.ndarray:
+    """Randomized HT oracle. mode='encode': H @ (d * x); mode='decode': d * (H @ y).
+
+    With orthonormal H, (H D)^-1 = D H, so decode inverts encode exactly.
+    """
+    if mode == "encode":
+        return fwht_ref(x * sign)
+    if mode == "decode":
+        return fwht_ref(x) * sign
+    raise ValueError(f"unknown mode {mode!r}")

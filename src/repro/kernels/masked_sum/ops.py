@@ -1,0 +1,24 @@
+"""Jit'd public wrapper for the drop-compensated shard reduction."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .masked_sum import masked_mean_pallas
+from .ref import masked_mean_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "tile"))
+def masked_mean(shards: jnp.ndarray, mask: jnp.ndarray, *,
+                use_kernel: bool = False, tile: int = 2048) -> jnp.ndarray:
+    """Drop-compensated mean over N peer shards. (N, L) x (N, L) -> (L,)."""
+    if use_kernel:
+        return masked_mean_pallas(shards, mask, tile=tile,
+                                  interpret=_default_interpret())
+    return masked_mean_ref(shards, mask)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the drop-compensated shard reduction.
+
+Given ``shards`` (N, L) — the N peers' contributions for the shard this node
+owns — and a 0/1 ``mask`` (N, L) marking which entries actually arrived before
+the UBT timeout, produce the mean over *received* contributions:
+
+    out[j] = sum_i mask[i,j] * shards[i,j] / max(1, sum_i mask[i,j])
+
+This is the unbiased estimator of the true mean when drops are independent of
+gradient values (the paper's assumption; HT makes it hold by construction).
+Entries nobody delivered reduce to 0 (equivalent to skipping that coordinate's
+update this round, per §3.4).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_mean_ref(shards: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    x = shards.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    cnt = jnp.sum(m, axis=0)
+    s = jnp.sum(x * m, axis=0)
+    out = jnp.where(cnt > 0, s / jnp.maximum(cnt, 1.0), 0.0)
+    return out.astype(shards.dtype)

@@ -1,0 +1,5 @@
+from .ops import uniform_quant, uniform_dequant
+from .ref import uniform_quant_ref, uniform_dequant_ref
+
+__all__ = ["uniform_quant", "uniform_dequant", "uniform_quant_ref",
+           "uniform_dequant_ref"]

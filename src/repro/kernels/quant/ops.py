@@ -1,0 +1,34 @@
+"""Jit'd public wrappers for the THC quantization kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .quant import uniform_quant_pallas
+from .ref import uniform_dequant_ref, uniform_quant_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "use_kernel"))
+def uniform_quant(x: jnp.ndarray, noise: jnp.ndarray, lohi: jnp.ndarray, *,
+                  bits: int = 8, use_kernel: bool = False) -> jnp.ndarray:
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1]) if x.ndim > 2 else x.reshape(1, -1) if x.ndim == 1 else x
+    n2 = noise.reshape(x2.shape)
+    if use_kernel:
+        out = uniform_quant_pallas(x2, n2, lohi, bits=bits,
+                                   interpret=_default_interpret())
+    else:
+        out = uniform_quant_ref(x2, n2, lohi[0], lohi[1], bits=bits)
+    return out.reshape(shape)
+
+
+def uniform_dequant(codes: jnp.ndarray, lohi: jnp.ndarray, *, bits: int = 8,
+                    nsum: int = 1) -> jnp.ndarray:
+    """Elementwise dequant — XLA fuses this; no kernel needed."""
+    return uniform_dequant_ref(codes, lohi[0], lohi[1], bits=bits, nsum=nsum)

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: fused uniform stochastic quantization (THC baseline).
+
+Fuses the subtract/scale/stochastic-round/clip chain into one VMEM pass so the
+compression epilogue after the FWHT rotation costs a single HBM round-trip.
+
+Grid: one program per (TILE_R, C) row-tile. lo/hi are scalars broadcast as a
+(1, 1) operand (shared quantization range across workers — the property THC
+needs for homomorphic aggregation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, n_ref, r_ref, o_ref, *, levels: int):
+    x = x_ref[...].astype(jnp.float32)
+    u = n_ref[...].astype(jnp.float32)
+    lo = r_ref[0, 0]
+    hi = r_ref[0, 1]
+    step = (hi - lo) / levels
+    q = jnp.floor((x - lo) / step + u)
+    o_ref[...] = jnp.clip(q, 0, levels).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows", "interpret"))
+def uniform_quant_pallas(x: jnp.ndarray, noise: jnp.ndarray,
+                         lohi: jnp.ndarray, *, bits: int = 8,
+                         block_rows: int = 128,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Quantize (rows, C) onto the shared [lo, hi] grid. lohi: shape (2,)."""
+    if x.ndim != 2 or noise.shape != x.shape:
+        raise ValueError("x and noise must both be (rows, C)")
+    rows, c = x.shape
+    levels = (1 << bits) - 1
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        noise = jnp.pad(noise, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_quant_kernel, levels=levels),
+        grid=(x.shape[0] // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.uint8),
+        interpret=interpret,
+    )(x, noise, lohi.reshape(1, 2).astype(jnp.float32))
+    if pad:
+        out = out[:rows]
+    return out

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for THC-style uniform stochastic quantization.
+
+THC (Li et al., NSDI'24) quantizes Hadamard-rotated gradients onto a *shared*
+uniform grid so that aggregation is homomorphic: codes can be summed across
+workers and dequantized once. We reproduce the table-free uniform variant:
+
+    step   = (hi - lo) / (2^bits - 1)
+    code   = floor((x - lo) / step + u),  u ~ U[0, 1)   (stochastic rounding)
+    dequant(code) = lo + code * step                    (unbiased: E = x)
+
+The rotation uses the shared FWHT kernel (THC is itself Hadamard-based, which
+is why the paper calls OptiReduce orthogonal to it).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def uniform_quant_ref(x: jnp.ndarray, noise: jnp.ndarray, lo: jnp.ndarray,
+                      hi: jnp.ndarray, *, bits: int) -> jnp.ndarray:
+    levels = (1 << bits) - 1
+    step = (hi - lo) / levels
+    q = jnp.floor((x.astype(jnp.float32) - lo) / step + noise)
+    return jnp.clip(q, 0, levels).astype(jnp.uint8)
+
+
+def uniform_dequant_ref(codes: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                        *, bits: int,
+                        nsum: int = 1) -> jnp.ndarray:
+    """Dequantize (a sum of ``nsum`` workers' codes): lo*nsum + codes*step."""
+    levels = (1 << bits) - 1
+    step = (hi - lo) / levels
+    return (codes.astype(jnp.float32) * step + lo * nsum)

@@ -1,0 +1,138 @@
+"""Training launcher: end-to-end training with OptiReduce gradient sync.
+
+On this CPU container it drives reduced (smoke) configs over a host-device
+mesh; on a real cluster the same entrypoint runs the full configs over the
+production mesh (jax.distributed handles multi-host initialization — the
+launcher is host-count agnostic).
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch gpt2-paper --smoke \\
+      --steps 50 --dp 4 --tp 2 --strategy optireduce --drop-rate 0.01
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config, get_smoke
+from repro.core.allreduce import OptiReduceConfig
+from repro.core.safeguards import LossMonitor
+from repro.core.ubt import UbtState
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import init_params
+from repro.optim.optimizers import OptimizerConfig
+from repro.train import checkpoint as ckpt_lib
+from repro.train.trainer import TrainConfig, build_train_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-paper")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--dp", type=int, default=0, help="0 = all devices")
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--strategy", default="optireduce")
+    ap.add_argument("--drop-rate", type=float, default=0.0)
+    ap.add_argument("--drop-pattern", default="tail")
+    ap.add_argument("--dp-mode", default="replicated")
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    if args.production_mesh:
+        mesh = make_production_mesh()
+    else:
+        dp = args.dp or (len(jax.devices()) // args.tp)
+        mesh = make_host_mesh(dp=dp, tp=args.tp)
+    tp = mesh.shape.get("model", 1)
+    print(f"arch={cfg.name} mesh={dict(mesh.shape)} strategy={args.strategy} "
+          f"drop_rate={args.drop_rate}")
+
+    tc = TrainConfig(
+        sync=OptiReduceConfig(strategy=args.strategy,
+                              drop_rate=args.drop_rate,
+                              drop_pattern=args.drop_pattern,
+                              hadamard_block=1024),
+        optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr),
+        dp_mode=args.dp_mode, microbatch=args.microbatch,
+        seq_chunk=min(512, args.seq_len))
+
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.seq_len,
+                                  global_batch=args.global_batch,
+                                  seed=args.seed))
+    key = jax.random.PRNGKey(args.seed)
+    fsdp_axes = ("data",) if args.dp_mode == "fsdp" else None
+    params = init_params(key, cfg, tp=tp, fsdp_axes=fsdp_axes)
+
+    make_step, opt, _ = build_train_step(cfg, tc, mesh)
+    batch0 = data.host_batch(0, 0, 1)
+    step_fn, shardings = make_step(jax.eval_shape(opt.init, params), batch0)
+    params = jax.device_put(params, shardings["params"])
+    opt_state = jax.jit(opt.init, out_shardings=shardings["opt"])(params)
+    jf = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    start_step = 0
+    ckpt = ckpt_lib.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if args.resume and args.ckpt_dir:
+        try:
+            start_step, (params, opt_state), _ = ckpt_lib.restore(
+                args.ckpt_dir, (params, opt_state))
+            params = jax.device_put(params, shardings["params"])
+            opt_state = jax.device_put(opt_state, shardings["opt"])
+            print(f"resumed from step {start_step}")
+        except FileNotFoundError:
+            pass
+
+    monitor = LossMonitor(skip_threshold=tc.sync.skip_threshold)
+    ubt = UbtState.create(n_nodes=mesh.shape.get("data", 1))
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = data.host_batch(step, 0, 1)
+        batch = jax.device_put(batch, shardings["batch"])
+        params, opt_state, metrics = jf(
+            params, opt_state, batch, jnp.asarray(step, jnp.int32), key)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            m = jax.tree.map(float, metrics)
+            rate = (step - start_step + 1) / (time.time() - t0)
+            print(f"step {step:5d} loss {m['loss']:.4f} "
+                  f"gnorm {m['grad_norm']:.3f} loss_frac {m['loss_frac']:.5f}"
+                  f" skipped {int(m['skipped'])} ({rate:.2f} it/s)",
+                  flush=True)
+        monitor.observe(step, float(metrics["loss_frac"]),
+                        bool(metrics["skipped"] > 0))
+        if monitor.halted:
+            print("HALT: excessive gradient loss (§3.4); rolling back")
+            rb = monitor.rollback()
+            if rb is not None:
+                _, params = rb
+        if ckpt and step > 0 and step % args.ckpt_every == 0:
+            ckpt.save(step, (params, opt_state))
+    if ckpt:
+        ckpt.save(args.steps, (params, opt_state))
+        ckpt.wait()
+    print("done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

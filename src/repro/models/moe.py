@@ -1,0 +1,112 @@
+"""Top-k Mixture-of-Experts with expert parallelism over the tp axis.
+
+Dispatch is capacity-based with scatter/gather (no (T, E, C) one-hot — the
+position-in-expert comes from a cumulative sum), which keeps the dry-run HLO
+static-shaped and the memory bounded by (E_local, C, D).
+
+Expert placement: experts are sharded over the tensor-parallel ('model')
+axis (E_local = E_padded / tp). Activations are replicated over tp between
+blocks, so each shard routes *all* local tokens but only computes its own
+experts; the final psum over tp both sums expert contributions and restores
+replication — EP costs exactly one psum, fused with the block's output
+reduction. Router weights are replicated (tiny).
+
+Padded experts (when E % tp != 0, e.g. qwen2's 60 -> 64) are masked to
+-inf in the router so they are never selected.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .parallel import ParallelCtx
+
+
+def moe_block(x: jnp.ndarray, w: dict, pctx: ParallelCtx, *,
+              top_k: int, n_experts: int, capacity_factor: float = 1.25,
+              activation: str = "silu",
+              weights_stationary: bool = False) -> jnp.ndarray:
+    """x: (B, S, D) replicated over tp. w:
+      router (D, E_pad) replicated; we_gate/we_up (E_local, D, F),
+      we_down (E_local, F, D) — expert dim sharded over tp.
+    Returns (B, S, D), psum'd over tp.
+    """
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    e_pad = w["router"].shape[-1]
+    e_local = w["we_gate"].shape[0]
+    tp = e_pad // e_local
+    shard = pctx.tp_index()
+
+    logits = jnp.einsum("td,de->te", xt, w["router"].astype(xt.dtype))
+    logits = logits.astype(jnp.float32)
+    if e_pad > n_experts:                      # mask padded experts
+        pad_mask = jnp.arange(e_pad) >= n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    gate_vals, gate_idx = jax.lax.top_k(logits, top_k)        # (T, K)
+    gates = jax.nn.softmax(gate_vals, axis=-1)                # (T, K)
+
+    capacity = max(1, int(capacity_factor * top_k * t / e_pad))
+
+    # position of each (token, slot) within its expert, over all K slots
+    onehot = jax.nn.one_hot(gate_idx, e_pad, dtype=jnp.int32)  # (T, K, E)
+    flat = onehot.reshape(t * top_k, e_pad)
+    pos_flat = jnp.cumsum(flat, axis=0) - 1                    # (T*K, E)
+    pos = jnp.take_along_axis(
+        pos_flat.reshape(t, top_k, e_pad),
+        gate_idx[..., None], axis=-1)[..., 0]                  # (T, K)
+    keep = pos < capacity
+
+    # local experts of this shard: e in [shard*e_local, (shard+1)*e_local)
+    local_idx = gate_idx - shard * e_local                     # (T, K)
+    is_local = (local_idx >= 0) & (local_idx < e_local) & keep
+    safe_e = jnp.clip(local_idx, 0, e_local - 1)
+    safe_p = jnp.clip(pos, 0, capacity - 1)
+
+    buf = jnp.zeros((e_local, capacity, d), xt.dtype)
+    contrib = jnp.where(is_local[..., None], xt[:, None, :], 0.0)
+    buf = buf.at[safe_e, safe_p].add(contrib)                  # (E_l, C, D)
+
+    if weights_stationary:
+        # expert weights stay fsdp-sharded on D: compute with the local D
+        # slice, psum the (E_l, C, F_l) activations over the dp axes —
+        # decode moves E_l*C*F_l activation bytes instead of E_l*D*F
+        # weight bytes (~1000x less at batch 128; §Perf H2)
+        d_l = w["we_gate"].shape[1]
+        i = pctx.dp_shard_index()
+        buf_slice = jax.lax.dynamic_slice_in_dim(buf, i * d_l, d_l, axis=2)
+        g = jnp.einsum("ecd,edf->ecf", buf_slice,
+                       w["we_gate"].astype(xt.dtype))
+        u = jnp.einsum("ecd,edf->ecf", buf_slice,
+                       w["we_up"].astype(xt.dtype))
+        g = pctx.psum_dp(g)
+        u = pctx.psum_dp(u)
+        h = act(g) * u
+        # we_down local (E_l, F_l, D/dp): each dp shard produces its D slice
+        out_slice = jnp.einsum("ecf,efd->ecd", h,
+                               w["we_down"].astype(xt.dtype))
+        out_buf = jax.lax.all_gather(out_slice, pctx.dp_axes(), axis=2,
+                                     tiled=True)          # (E_l, C, D)
+    else:
+        g = jnp.einsum("ecd,edf->ecf", buf, w["we_gate"].astype(xt.dtype))
+        u = jnp.einsum("ecd,edf->ecf", buf, w["we_up"].astype(xt.dtype))
+        h = act(g) * u
+        out_buf = jnp.einsum("ecf,efd->ecd", h, w["we_down"].astype(xt.dtype))
+
+    gathered = out_buf[safe_e, safe_p]                         # (T, K, D)
+    gathered = jnp.where(is_local[..., None], gathered, 0.0)
+    combined = jnp.sum(gathered * gates[..., None].astype(xt.dtype), axis=1)
+    out = combined.reshape(b, s, d)
+    return pctx.reduce_output(out)
+
+
+def moe_aux_loss(logits_f32: jnp.ndarray, gate_idx: jnp.ndarray,
+                 n_experts: int) -> jnp.ndarray:
+    """Switch-style load-balancing loss (mean gate prob x mean assignment)."""
+    probs = jax.nn.softmax(logits_f32, axis=-1)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], probs.shape[-1]), axis=0)
+    return n_experts * jnp.sum(me * ce)

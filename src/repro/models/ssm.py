@@ -1,0 +1,192 @@
+"""Mamba-2 (SSD, state-space duality) layer — chunked train form + O(1)
+recurrent decode form. Follows the minimal SSD listing of Dao & Gu
+(arXiv:2405.21060): intra-chunk quadratic term + inter-chunk state scan.
+
+Tensor parallelism: heads (and the d_inner channels they own) are sharded
+over the tp axis; B/C projections are per-group (n_groups small) and
+replicated; out_proj is row-parallel with a psum. Decode carries
+(conv_state, ssm_state) per layer — constant memory in sequence length,
+which is what makes the 500k-token decode shape feasible.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .parallel import ParallelCtx
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray   # (B, K-1, d_inner_local)
+    ssm: jnp.ndarray    # (B, H_local, P, N) fp32
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] (i>=j)."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), jnp.bool_), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv. x: (B, S, C), w: (K, C). Returns (y, new_state)
+    where state holds the trailing K-1 inputs for decode continuation."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad
+    return y, new_state
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                b: jnp.ndarray, c: jnp.ndarray, *, chunk: int = 256,
+                init_state: jnp.ndarray | None = None):
+    """SSD forward. x: (B, S, H, P); dt: (B, S, H) (post-softplus);
+    a_log: (H,); b, c: (B, S, G, N) with H % G == 0.
+    Returns y: (B, S, H, P) and final state (B, H, P, N).
+    """
+    bs, s, h, p = x.shape
+    g = b.shape[2]
+    n = b.shape[3]
+    pad = (-s) % chunk
+    if pad:
+        # zero-pad the tail: dt=0 makes padded steps identity transitions
+        # (decay exp(0)=1, zero state contribution), so the final state and
+        # the first s outputs are exact
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s_out = s
+        s = s + pad
+    else:
+        s_out = s
+    nc = s // chunk
+    rep = h // g
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                       # (H,)
+    dta = dt.astype(jnp.float32) * a[None, None, :]               # (B, S, H)
+
+    xc = x.reshape(bs, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bs, nc, chunk, h).astype(jnp.float32)
+    dtac = dta.reshape(bs, nc, chunk, h)
+    bc = jnp.repeat(b.reshape(bs, nc, chunk, g, n), rep, axis=3)  # (B,NC,C,H,N)
+    cc = jnp.repeat(c.reshape(bs, nc, chunk, g, n), rep, axis=3)
+    bc = bc.astype(jnp.float32)
+    cc = cc.astype(jnp.float32)
+
+    # intra-chunk (quadratic) term
+    seg = _segsum(dtac.transpose(0, 1, 3, 2))                     # (B,NC,H,C,C)
+    decay = jnp.exp(seg)
+    scores = jnp.einsum("zcihn,zcjhn,zchij->zchij", cc, bc, decay)
+    y_intra = jnp.einsum("zchij,zcjhp,zcjh->zcihp", scores, xc, dtc)
+
+    # chunk states: contribution of each chunk to the running state
+    decay_to_end = jnp.exp(jnp.cumsum(dtac, axis=2)[:, :, -1:, :]
+                           - jnp.cumsum(dtac, axis=2))            # (B,NC,C,H)
+    states = jnp.einsum("zcjhn,zcjh,zcjhp->zchpn",
+                        bc, decay_to_end * dtc, xc)               # (B,NC,H,P,N)
+
+    # inter-chunk scan: carry state with per-chunk total decay
+    chunk_decay = jnp.exp(jnp.sum(dtac, axis=2))                  # (B,NC,H)
+
+    def scan_fn(carry, inp):
+        st_in = carry                                             # (B,H,P,N)
+        st_chunk, dec = inp
+        st_out = st_in * dec[:, :, None, None] + st_chunk
+        return st_out, st_in
+
+    init = (jnp.zeros((bs, h, p, n), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final_state, states_in = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    states_in = states_in.transpose(1, 0, 2, 3, 4)                # (B,NC,H,P,N)
+
+    # inter-chunk output: y_inter[t] = C_t . (decay into t) state_in
+    decay_from_start = jnp.exp(jnp.cumsum(dtac, axis=2))          # (B,NC,C,H)
+    y_inter = jnp.einsum("zcihn,zcih,zchpn->zcihp",
+                         cc, decay_from_start, states_in)
+
+    y = (y_intra + y_inter).reshape(bs, s, h, p)
+    if s_out != s:
+        y = y[:, :s_out]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                    b: jnp.ndarray, c: jnp.ndarray,
+                    state: jnp.ndarray):
+    """One-token recurrence. x: (B, 1, H, P); dt: (B, 1, H);
+    b, c: (B, 1, G, N); state: (B, H, P, N) fp32. Returns (y, new_state)."""
+    bs, _, h, p = x.shape
+    g = b.shape[2]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dta = jnp.exp(dt[:, 0].astype(jnp.float32) * a[None, :])      # (B, H)
+    bh = jnp.repeat(b[:, 0], rep, axis=1).astype(jnp.float32)     # (B, H, N)
+    ch = jnp.repeat(c[:, 0], rep, axis=1).astype(jnp.float32)
+    xf = x[:, 0].astype(jnp.float32)                              # (B, H, P)
+    dtf = dt[:, 0].astype(jnp.float32)
+    new_state = state * dta[:, :, None, None] + \
+        jnp.einsum("zhn,zh,zhp->zhpn", bh, dtf, xf)
+    y = jnp.einsum("zhn,zhpn->zhp", ch, new_state)
+    return y[:, None].astype(x.dtype), new_state
+
+
+def mamba2_forward(x: jnp.ndarray, w: dict, pctx: ParallelCtx, *,
+                   chunk: int = 256,
+                   state: SSMState | None = None,
+                   decode: bool = False):
+    """Mamba-2 block. x: (B, S, D) replicated over tp.
+
+    w: wx/wz (D, d_inner_l), wB/wC (D, G*N) replicated, wdt (D, H_l),
+    conv_w (K, d_inner_l), a_log (H_l,), d_skip (H_l,), dt_bias (H_l,),
+    out_proj (d_inner_l, D), norm_scale (d_inner_l,).
+    Returns (y, new_state); y psum'd over tp.
+    """
+    bsz, s, _ = x.shape
+    n = w["d_state"]
+    g = w["n_groups"]
+    xz = jnp.einsum("bsd,di->bsi", x, w["wx"].astype(x.dtype))
+    z = jnp.einsum("bsd,di->bsi", x, w["wz"].astype(x.dtype))
+    bproj = jnp.einsum("bsd,dk->bsk", x, w["wB"].astype(x.dtype))
+    cproj = jnp.einsum("bsd,dk->bsk", x, w["wC"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, w["wdt"].astype(x.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         w["dt_bias"].astype(jnp.float32))
+
+    conv_state = state.conv if state is not None else None
+    xz, new_conv = _causal_conv(jax.nn.silu(xz), w["conv_w"].astype(x.dtype),
+                                conv_state)
+
+    h_local = w["a_log"].shape[0]
+    p = xz.shape[-1] // h_local
+    xh = xz.reshape(bsz, s, h_local, p)
+    bmat = bproj.reshape(bsz, s, g, n)
+    cmat = cproj.reshape(bsz, s, g, n)
+    # replicate groups onto local heads (G is global & small; tp shards heads)
+    if decode:
+        ssm_in = state.ssm if state is not None else \
+            jnp.zeros((bsz, h_local, p, n), jnp.float32)
+        y, new_ssm = ssd_decode_step(xh, dt, w["a_log"], bmat, cmat, ssm_in)
+    else:
+        ssm_in = state.ssm if state is not None else None
+        y, new_ssm = ssd_chunked(xh, dt, w["a_log"], bmat, cmat, chunk=chunk,
+                                 init_state=ssm_in)
+    y = y + xh * w["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, h_local * p)
+    y = y * jax.nn.silu(z)                          # gated output
+    out = jnp.einsum("bsi,id->bsd", y, w["out_proj"].astype(x.dtype))
+    out = pctx.reduce_output(out)   # psum, or psum_scatter(seq) under SP
+    return out, SSMState(conv=new_conv, ssm=new_ssm)

@@ -1,0 +1,202 @@
+"""Optimizers (no optax in this environment): SGD(+momentum), AdamW, and a
+factored Adafactor-lite. States are pure pytrees mirroring the parameter
+tree, so they inherit the parameters' sharding specs (FSDP shards optimizer
+state for free — the ZeRO property). ``state_dtype`` trades memory for
+precision on the moment buffers (bf16 moments are what lets the 480B arch
+fit 16 GB/chip; see EXPERIMENTS §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    momentum: float = 0.9
+    state_dtype: Any = jnp.float32   # moments dtype (bf16 for giant models)
+    grad_clip: float = 1.0
+    # sequence the update over layer-stacked leaves (lax.map over dim 0):
+    # bounds the fp32 upcast transients to one layer instead of the whole
+    # tree — required to fit the 480B arch's update in 16 GB/chip
+    scan_update: bool = True
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable   # (grads, state, params, lr, step) -> (new_p, new_s)
+    state_like_params: bool  # True if state leaves mirror param leaves
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def sgd(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params)
+
+    def update(grads, state, params, lr, step):
+        del step
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                          ).astype(p.dtype), params, grads)
+        return new_p, state
+
+    return Optimizer(init, update, state_like_params=False)
+
+
+def _maybe_scan_leaf(cfg: OptimizerConfig, fn, *leaves):
+    """Apply fn across dim 0 of layer-stacked leaves (bounded transients)."""
+    if cfg.scan_update and leaves[0].ndim >= 3:
+        return jax.lax.map(lambda t: fn(*t), leaves)
+    return fn(*leaves)
+
+
+def momentum_sgd(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, cfg.state_dtype), params)
+
+    def update(grads, state, params, lr, step):
+        del step
+
+        def upd(p, g, m):
+            mf = (cfg.momentum * m.astype(jnp.float32)
+                  + g.astype(jnp.float32))
+            pf = p.astype(jnp.float32) - lr * mf
+            return pf.astype(p.dtype), mf.astype(cfg.state_dtype)
+
+        out = jax.tree.map(
+            lambda p, g, m: _maybe_scan_leaf(cfg, upd, p, g, m),
+            params, grads, state)
+        leaves, treedef = jax.tree.flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+        ps = treedef.unflatten([l[0] for l in leaves])
+        ms = treedef.unflatten([l[1] for l in leaves])
+        return ps, ms
+
+    return Optimizer(init, update, state_like_params=True)
+
+
+class AdamState(NamedTuple):
+    m: Any
+    v: Any
+
+
+def adamw(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+        return AdamState(m=jax.tree.map(z, params), v=jax.tree.map(z, params))
+
+    def update(grads, state, params, lr, step):
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - cfg.beta1 ** t
+        bc2 = 1.0 - cfg.beta2 ** t
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = cfg.beta1 * m.astype(jnp.float32) + (1 - cfg.beta1) * gf
+            vf = cfg.beta2 * v.astype(jnp.float32) + (1 - cfg.beta2) * gf * gf
+            mhat = mf / bc1
+            vhat = vf / bc2
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                            + cfg.weight_decay * pf)
+            return (pf.astype(p.dtype), mf.astype(cfg.state_dtype),
+                    vf.astype(cfg.state_dtype))
+
+        out = jax.tree.map(
+            lambda p, g, m, v: _maybe_scan_leaf(cfg, upd, p, g, m, v),
+            params, grads, state.m, state.v)
+        leaves, treedef = jax.tree.flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+            and all(isinstance(y, jax.Array) for y in x))
+        ps = treedef.unflatten([l[0] for l in leaves])
+        ms = treedef.unflatten([l[1] for l in leaves])
+        vs = treedef.unflatten([l[2] for l in leaves])
+        return ps, AdamState(m=ms, v=vs)
+
+    return Optimizer(init, update, state_like_params=True)
+
+
+class AdafactorState(NamedTuple):
+    row: Any   # per-leaf row stats (or full v for <2D leaves)
+    col: Any
+
+
+def adafactor(cfg: OptimizerConfig) -> Optimizer:
+    """Factored second moment over the trailing two dims (Shazeer-Stern,
+    simplified: no update clipping / relative step)."""
+    def init(params):
+        def rows(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def cols(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return AdafactorState(row=jax.tree.map(rows, params),
+                              col=jax.tree.map(cols, params))
+
+    def update(grads, state, params, lr, step):
+        b2 = cfg.beta2
+
+        def upd(p, g, r, c):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + 1e-30
+            if p.ndim >= 2:
+                rn = b2 * r + (1 - b2) * jnp.mean(g2, axis=-1)
+                cn = b2 * c + (1 - b2) * jnp.mean(g2, axis=-2)
+                rmean = jnp.mean(rn, axis=-1, keepdims=True)
+                vhat = (rn[..., None] * cn[..., None, :]
+                        / jnp.maximum(rmean[..., None], 1e-30))
+            else:
+                rn = b2 * r + (1 - b2) * g2
+                cn = c
+                vhat = rn
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (gf / (jnp.sqrt(vhat) + cfg.eps)
+                            + cfg.weight_decay * pf)
+            return pf.astype(p.dtype), rn, cn
+
+        out = jax.tree.map(upd, params, grads, state.row, state.col)
+        leaves, treedef = jax.tree.flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+        ps = treedef.unflatten([l[0] for l in leaves])
+        rs = treedef.unflatten([l[1] for l in leaves])
+        cs = treedef.unflatten([l[2] for l in leaves])
+        return ps, AdafactorState(row=rs, col=cs)
+
+    return Optimizer(init, update, state_like_params=False)
+
+
+_REGISTRY = {
+    "sgd": sgd,
+    "momentum": momentum_sgd,
+    "adamw": adamw,
+    "adafactor": adafactor,
+}
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    return _REGISTRY[cfg.name](cfg)

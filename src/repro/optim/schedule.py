@@ -1,0 +1,19 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int = 100,
+                  total_steps: int = 10_000, min_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(1.0, s / max(warmup_steps, 1))
+    t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                 0.0, 1.0)
+    cos = peak_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(s < warmup_steps, warm, cos)
+
+
+def constant(step, *, peak_lr: float):
+    del step
+    return jnp.asarray(peak_lr, jnp.float32)

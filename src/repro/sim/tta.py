@@ -1,0 +1,292 @@
+"""Time-to-accuracy harness (paper §5.2, Fig 11/14/16, Table 1).
+
+TTA factors exactly as the paper argues: *what* the model learns per step
+depends only on the gradient content (drops / compression), while *how
+long* a step takes depends only on the collective + network. We therefore:
+
+1. run REAL training of the paper's GPT-2 (reduced same-family config) on
+   the synthetic-grammar LM task, with the gradient-aggregation pipeline
+   emulated worker-by-worker (N workers, per-worker gradients, drops/HT/
+   compression applied through the actual core/ implementations), and
+   measure steps-to-accuracy;
+2. take per-step wall-clock from the calibrated network simulator
+   (sim/netsim.py) for the same collective;
+3. TTA = steps x step-time.
+
+Deterministic in the seed; used by bench_tta / bench_hadamard_drops /
+bench_compression.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import compression as comp_lib
+from repro.core import drops as drops_lib
+from repro.core.hadamard import ht_decode, ht_encode
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import SINGLE, init_params, lm_loss
+from repro.optim.optimizers import OptimizerConfig, make_optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainRunConfig:
+    arch: str = "gpt2-paper"
+    n_workers: int = 8
+    per_worker_batch: int = 4
+    seq_len: int = 64
+    steps: int = 300
+    eval_every: int = 10
+    lr: float = 3e-3
+    optimizer: str = "momentum"
+    drop_rate: float = 0.0
+    drop_pattern: str = "tail"
+    use_hadamard: bool = True
+    # per-coordinate compensation of missing contributions is exactly what
+    # the HT pipeline provides (§3.3 "unbiased estimate"); the naive no-HT
+    # path sums received entries and divides by N (biased toward 0 at the
+    # dropped coordinates) — which is why Fig 14's no-HT runs degrade.
+    compensate: bool | None = None    # default: == use_hadamard
+    hadamard_block: int = 1024
+    compressor: str | None = None     # None | topk | terngrad | thc
+    topk_frac: float = 0.01
+    thc_bits: int = 4
+    markov_weight: float = 0.85
+    n_succ: int = 1
+    seed: int = 0
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in leaves]
+    sizes = [l.size for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    return flat, (treedef, shapes, sizes)
+
+
+def _unflatten(flat, meta):
+    treedef, shapes, sizes = meta
+    out, off = [], 0
+    for sh, sz in zip(shapes, sizes):
+        out.append(flat[off:off + sz].reshape(sh))
+        off += sz
+    return jax.tree.unflatten(treedef, out)
+
+
+def _aggregate_per_receiver(worker_flats: jnp.ndarray, key,
+                            rc: TrainRunConfig) -> tuple[jnp.ndarray, float]:
+    """Full two-stage TAR emulation with per-receiver outcomes.
+
+    Stage 1: owner r reduces peers' shard-r contributions under its arrival
+    mask. Stage 2: each receiver gets every owner's aggregate under its own
+    (tail-drop) mask — so receivers end up with *different* buckets, which
+    is the replica-divergence pathology HT exists to tame (Fig 6/14).
+    Returns (per-receiver buckets (N, L), drop fraction).
+    """
+    n, length = worker_flats.shape
+    block = rc.hadamard_block
+    pad = (-length) % (n * block)
+    g = jnp.pad(worker_flats, ((0, 0), (0, pad)))
+    lp = g.shape[1]
+    chunk = lp // n
+    compensate = rc.use_hadamard if rc.compensate is None else rc.compensate
+
+    if rc.drop_rate <= 0.0:
+        mean = jnp.mean(g, 0)
+        return jnp.broadcast_to(mean[None], (n, lp))[:, :length], 0.0
+
+    if rc.use_hadamard:
+        g = jax.vmap(lambda r: ht_encode(r, key, block=block))(g)
+
+    shards = g.reshape(n, n, chunk)              # [worker, owner, chunk]
+    dropped = 0.0
+    total = 0.0
+    aggs = []
+    for r in range(n):                           # stage 1, per owner
+        m = drops_lib.make_mask(rc.drop_pattern,
+                                jax.random.fold_in(key, r), n, chunk,
+                                rate=rc.drop_rate, self_index=jnp.int32(r))
+        contrib = shards[:, r, :]
+        if compensate:
+            cnt = jnp.sum(m, 0)
+            agg = jnp.where(cnt > 0, jnp.sum(contrib * m, 0)
+                            / jnp.maximum(cnt, 1), 0.0)
+        else:
+            agg = jnp.sum(contrib * m, 0) / n
+        dropped += jnp.sum(1.0 - m)
+        total += m.size
+        aggs.append(agg)
+    agg_all = jnp.stack(aggs)                    # (owner, chunk)
+
+    buckets = []
+    for i in range(n):                           # stage 2, per receiver
+        m2 = drops_lib.make_mask(rc.drop_pattern,
+                                 jax.random.fold_in(key, 100 + i), n, chunk,
+                                 rate=rc.drop_rate, self_index=jnp.int32(i))
+        if compensate:
+            # §3.3: receiver rescales by its known received fraction
+            frac = jnp.mean(m2, axis=1, keepdims=True)
+            recv = agg_all * m2 / jnp.maximum(frac, 1e-3)
+        else:
+            recv = agg_all * m2
+        dropped += jnp.sum(1.0 - m2)
+        total += m2.size
+        bucket = recv.reshape(lp)
+        if rc.use_hadamard:
+            bucket = ht_decode(bucket, key, block=block)
+        buckets.append(bucket)
+    out = jnp.stack(buckets)
+    drop_frac = float(dropped / total)
+    return out[:, :length], drop_frac
+
+
+def _aggregate(worker_flats: jnp.ndarray, key, rc: TrainRunConfig,
+               state: dict) -> tuple[jnp.ndarray, float]:
+    """Emulate the collective on N per-worker flat gradients -> (mean,
+    observed drop fraction). Uses the real core/ implementations."""
+    n, length = worker_flats.shape
+    block = rc.hadamard_block
+    pad = (-length) % (n * block)
+    g = jnp.pad(worker_flats, ((0, 0), (0, pad)))
+
+    if rc.compressor == "topk":
+        k = max(1, int(rc.topk_frac * g.shape[1]))
+        outs = []
+        for i in range(n):
+            sparse, state["topk"][i] = comp_lib.topk_compress(
+                g[i], state["topk"][i], k=k)
+            outs.append(sparse)
+        return jnp.mean(jnp.stack(outs), 0)[:length], 0.0
+    if rc.compressor == "terngrad":
+        outs = [comp_lib.terngrad_compress(g[i], jax.random.fold_in(key, i))
+                for i in range(n)]
+        return jnp.mean(jnp.stack(outs), 0)[:length], 0.0
+    if rc.compressor == "thc":
+        lo = jnp.min(g) * 1.2 - 1e-3
+        hi = jnp.max(g) * 1.2 + 1e-3
+        lohi = jnp.stack([lo, hi])
+        codes = [comp_lib.thc_compress(g[i], key, lohi, bits=rc.thc_bits,
+                                       block=block).codes.astype(jnp.int32)
+                 for i in range(n)]
+        code_sum = functools.reduce(lambda a, b: a + b, codes)
+        out = comp_lib.thc_decompress_sum(code_sum, key, lohi,
+                                          bits=rc.thc_bits, block=block,
+                                          nsum=n)
+        return out[:length], 0.0
+
+    # --- OptiReduce path (or reliable mean when drop_rate == 0) ----------
+    if rc.drop_rate <= 0.0:
+        return jnp.mean(g, 0)[:length], 0.0
+    compensate = rc.use_hadamard if rc.compensate is None else rc.compensate
+    if rc.use_hadamard:
+        g = jax.vmap(lambda r: ht_encode(r, key, block=block))(g)
+    mask = drops_lib.make_mask(rc.drop_pattern, key, n, g.shape[1],
+                               rate=rc.drop_rate)
+    if compensate:
+        cnt = jnp.sum(mask, 0)
+        mean = jnp.where(cnt > 0,
+                         jnp.sum(g * mask, 0) / jnp.maximum(cnt, 1), 0.0)
+    else:
+        mean = jnp.sum(g * mask, 0) / n
+    if rc.use_hadamard:
+        mean = ht_decode(mean, key, block=block)
+    drop_frac = float(1.0 - jnp.mean(mask))
+    return mean[:length], drop_frac
+
+
+def run_training(rc: TrainRunConfig) -> dict:
+    """Per-worker replica training (the real DDP topology): each of the N
+    workers holds a model copy, computes gradients on its batch shard, and
+    updates with *its own received bucket* — so stage-2 drops produce real
+    replica divergence, the pathology Fig 14 measures.
+
+    Returns {'steps', 'acc', 'drops', 'divergence', 'mean_drop'}."""
+    cfg = get_smoke(rc.arch)
+    key = jax.random.PRNGKey(rc.seed)
+    params0 = init_params(key, cfg)
+    n = rc.n_workers
+    params = jax.tree.map(lambda p: jnp.stack([p] * n), params0)
+    opt = make_optimizer(OptimizerConfig(name=rc.optimizer, lr=rc.lr,
+                                         weight_decay=0.0))
+    opt_state = jax.vmap(opt.init)(params)
+    data = SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=rc.seq_len,
+        global_batch=rc.n_workers * rc.per_worker_batch, seed=rc.seed,
+        markov_weight=rc.markov_weight, n_succ=rc.n_succ))
+    eval_batch = data.global_batch(10**6)
+
+    @jax.jit
+    def worker_grads(ps, batch):
+        def per_worker(p, tok, lab):
+            return jax.grad(lambda pp: lm_loss(
+                pp, {"tokens": tok, "labels": lab}, cfg, SINGLE,
+                key=jax.random.PRNGKey(0), seq_chunk=rc.seq_len))(p)
+        tok = batch["tokens"].reshape(n, rc.per_worker_batch, -1)
+        lab = batch["labels"].reshape(n, rc.per_worker_batch, -1)
+        return jax.vmap(per_worker)(ps, tok, lab)
+
+    @jax.jit
+    def eval_acc(ps):
+        from repro.models import forward_hidden
+        p = jax.tree.map(lambda x: x[0], ps)     # worker-0 replica
+        x = forward_hidden(p, {"tokens": jnp.asarray(eval_batch["tokens"])},
+                           cfg, SINGLE, key=jax.random.PRNGKey(0),
+                           remat=False)
+        emb = p["embed"]
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                            emb.astype(jnp.float32))
+        pred = jnp.argmax(logits, -1)
+        return jnp.mean(pred == jnp.asarray(eval_batch["labels"]))
+
+    @jax.jit
+    def divergence(ps):
+        return sum(jnp.mean(jnp.std(x.astype(jnp.float32), axis=0))
+                   for x in jax.tree.leaves(ps))
+
+    @jax.jit
+    def apply_updates(ps, os, gflats, step):
+        def one(p, o, gflat):
+            g = _unflatten(gflat, meta)
+            g = jax.tree.map(lambda gg, pp: gg.astype(pp.dtype), g, p)
+            return opt.update(g, o, p, jnp.float32(rc.lr), step)
+        return jax.vmap(one)(ps, os, gflats)
+
+    flat0, meta = _flatten(params0)
+    state = {"topk": [comp_lib.topk_init(
+        flat0.shape[0] + ((-flat0.shape[0]) %
+                          (rc.n_workers * rc.hadamard_block)))
+        for _ in range(rc.n_workers)]}
+
+    hist = {"steps": [], "acc": [], "drops": [], "divergence": []}
+    for step in range(rc.steps):
+        batch = jax.tree.map(jnp.asarray, data.global_batch(step))
+        gtree = worker_grads(params, batch)
+        flats = jax.vmap(lambda t: _flatten(t)[0])(gtree)
+        skey = jax.random.fold_in(key, step)
+        if rc.compressor is not None:
+            mean_flat, drop = _aggregate(flats, skey, rc, state)
+            buckets = jnp.broadcast_to(mean_flat[None], (n,) + mean_flat.shape)
+        else:
+            buckets, drop = _aggregate_per_receiver(flats, skey, rc)
+        params, opt_state = apply_updates(params, opt_state, buckets,
+                                          jnp.asarray(step))
+        hist["drops"].append(drop)
+        if step % rc.eval_every == 0 or step == rc.steps - 1:
+            hist["steps"].append(step)
+            hist["acc"].append(float(eval_acc(params)))
+            hist["divergence"].append(float(divergence(params)))
+    hist["mean_drop"] = float(np.mean(hist["drops"]))
+    return hist
+
+
+def steps_to_accuracy(hist: dict, target: float) -> int | None:
+    for s, a in zip(hist["steps"], hist["acc"]):
+        if a >= target:
+            return s + 1
+    return None

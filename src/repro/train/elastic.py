@@ -1,0 +1,66 @@
+"""Elastic scaling: continue a job on a different worker count.
+
+OptiReduce makes this cheap: the collective is defined for any N (TAR shard
+count follows the axis size) and the drop machinery already tolerates
+departed peers mid-step (a failed node is a 100%-dropped peer until the
+controller re-forms the mesh). What remains is state surgery:
+
+* replicated params: nothing to do — every survivor holds the full state.
+* fsdp shards: concatenate old shards along each leaf's fsdp dim and
+  re-split by the new axis size (``reshard``).
+* data pipeline: deterministic (step, host, n_hosts) indexing re-partitions
+  the global stream automatically (data/pipeline.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import Leaf, _tree_map_table, param_table
+
+
+def _fsdp_dims(cfg: ModelConfig, tp: int) -> Any:
+    table = param_table(cfg, tp=tp, fsdp_axes=("data",))
+    return _tree_map_table(lambda l: l.fsdp_dim, table)
+
+
+def gather_shards(shard_trees: list, cfg: ModelConfig, tp: int = 1) -> Any:
+    """Reassemble full params from the per-worker fsdp shards."""
+    dims = _fsdp_dims(cfg, tp)
+    flat_dims = jax.tree.leaves(dims, is_leaf=lambda x: x is None or
+                                isinstance(x, int))
+    flats = [jax.tree.leaves(t) for t in shard_trees]
+    treedef = jax.tree.structure(shard_trees[0])
+    out = []
+    for i, dim in enumerate(flat_dims):
+        parts = [f[i] for f in flats]
+        if dim is None:
+            out.append(parts[0])            # replicated leaf
+        else:
+            out.append(np.concatenate([np.asarray(p) for p in parts],
+                                      axis=dim))
+    return jax.tree.unflatten(treedef, out)
+
+
+def reshard(full_params: Any, cfg: ModelConfig, new_n: int, *, tp: int = 1
+            ) -> list:
+    """Split full params into ``new_n`` fsdp shards (one per new worker)."""
+    dims = _fsdp_dims(cfg, tp)
+    flat_dims = jax.tree.leaves(dims, is_leaf=lambda x: x is None or
+                                isinstance(x, int))
+    flat = jax.tree.leaves(full_params)
+    treedef = jax.tree.structure(full_params)
+    shards = [[] for _ in range(new_n)]
+    for leaf, dim in zip(flat, flat_dims):
+        if dim is None:
+            for s in shards:
+                s.append(leaf)
+            continue
+        arr = np.asarray(leaf)
+        assert arr.shape[dim] % new_n == 0, (arr.shape, dim, new_n)
+        for w, piece in enumerate(np.split(arr, new_n, axis=dim)):
+            shards[w].append(piece)
+    return [jax.tree.unflatten(treedef, s) for s in shards]

@@ -1,0 +1,12 @@
+"""Test configuration. NOTE: no XLA device-count flags here by design —
+smoke tests run on the single real device; collective-equivalence tests
+spawn a subprocess with their own XLA_FLAGS (test_collectives.py)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")

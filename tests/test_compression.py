@@ -1,0 +1,82 @@
+"""Compression baselines: Top-K error feedback, TernGrad unbiasedness,
+THC homomorphic roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.compression import (THCCompressed, terngrad_compress,
+                                    thc_compress, thc_decompress_sum,
+                                    topk_compress, topk_init)
+
+
+def test_topk_keeps_largest_and_feeds_back():
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 0.0])
+    state = topk_init(6)
+    sparse, state = topk_compress(x, state, k=2)
+    nz = np.nonzero(np.asarray(sparse))[0]
+    assert set(nz) == {1, 3}
+    np.testing.assert_allclose(np.asarray(state.error),
+                               np.asarray(x - sparse), atol=1e-7)
+
+
+def test_topk_error_feedback_recovers_mass():
+    """Entries skipped now are sent later: cumulative transmitted -> x*T
+    up to the O(1/T) residual still sitting in the feedback memory."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256,))
+    state = topk_init(256)
+    sent = jnp.zeros_like(x)
+    T = 50
+    for _ in range(T):
+        s, state = topk_compress(x, state, k=16)
+        sent = sent + s
+    est = np.asarray(sent / T)
+    ref = np.asarray(x)
+    rel_l2 = np.linalg.norm(est - ref) / np.linalg.norm(ref)
+    assert rel_l2 < 0.25, rel_l2
+    # exact mass conservation: sent + residual error == T * x
+    total = np.asarray(sent + state.error)
+    np.testing.assert_allclose(total, T * ref, rtol=1e-3, atol=1e-3)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_terngrad_unbiased(seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (64,)) * 0.3
+    trials = 300
+    keys = jax.random.split(jax.random.fold_in(key, 1), trials)
+    outs = jax.vmap(lambda k: terngrad_compress(x, k))(keys)
+    mean = jnp.mean(outs, 0)
+    assert float(jnp.max(jnp.abs(mean - x))) < 0.25
+
+
+def test_terngrad_values_ternary():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (512,))
+    out = np.asarray(terngrad_compress(x, key))
+    s = float(jnp.max(jnp.abs(x)))
+    uniq = np.unique(np.round(np.abs(out[out != 0]) / s, 5))
+    assert len(uniq) <= 1
+
+
+def test_thc_roundtrip_error_bound():
+    key = jax.random.PRNGKey(2)
+    n, block = 4, 1024
+    # data key must differ from the transform key: deriving both from one
+    # key correlates the Rademacher signs with the values, which piles the
+    # whole bucket into the DC coefficient and clips it (found the hard way)
+    xs = jax.random.normal(jax.random.PRNGKey(99), (n, block))
+    lohi = jnp.array([-8.0, 8.0])
+    codes = []
+    for i in range(n):
+        c = thc_compress(xs[i], key, lohi, bits=8, block=block)
+        assert isinstance(c, THCCompressed)
+        codes.append(c.codes.astype(jnp.int32))
+    out = thc_decompress_sum(sum(codes), key, lohi, bits=8, block=block,
+                             nsum=n)
+    step = 16.0 / 255
+    # the rotation spreads per-coordinate quantization noise: bound the RMS
+    # (max-norm can concentrate up to ||e||_2 after the inverse transform)
+    rms = float(jnp.sqrt(jnp.mean((out - jnp.mean(xs, 0)) ** 2)))
+    assert rms < step, rms

@@ -1,0 +1,58 @@
+"""Config registry: published parameter counts, shape rules, input specs."""
+import jax
+import pytest
+
+from repro.configs import (ARCHS, SHAPES, get_config, get_smoke, input_specs,
+                           shape_applicable)
+from repro.models import active_params, count_params
+
+EXPECTED_B = {  # total params (1e9), +-15% of the published size
+    "arctic-480b": 480, "qwen2-moe-a2.7b": 14.3, "mamba2-1.3b": 1.3,
+    "command-r-plus-104b": 104, "stablelm-1.6b": 1.6, "smollm-360m": 0.36,
+    "glm4-9b": 9.0, "llava-next-mistral-7b": 7.1, "musicgen-medium": 1.7,
+    "jamba-v0.1-52b": 52,
+}
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_param_counts_match_published(arch):
+    n = count_params(get_config(arch)) / 1e9
+    assert abs(n - EXPECTED_B[arch]) / EXPECTED_B[arch] < 0.15, n
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen2-moe-a2.7b")
+    a = active_params(cfg) / 1e9
+    assert 1.5 < a < 3.5        # "A2.7B"
+
+
+def test_long500k_rules():
+    ok, _ = shape_applicable(get_config("mamba2-1.3b"), SHAPES["long_500k"])
+    assert ok
+    ok, _ = shape_applicable(get_config("jamba-v0.1-52b"),
+                             SHAPES["long_500k"])
+    assert ok
+    ok, why = shape_applicable(get_config("glm4-9b"), SHAPES["long_500k"])
+    assert not ok and "sub-quadratic" in why
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_shapes(arch, shape):
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    specs = input_specs(cfg, sh)
+    assert specs["tokens"].shape[0] == sh.global_batch
+    if sh.kind == "train":
+        assert specs["labels"].shape == specs["tokens"].shape
+        total = specs["tokens"].shape[1] + \
+            (specs["prefix_embeds"].shape[1] if "prefix_embeds" in specs
+             else 0)
+        assert total == sh.seq_len
+    if sh.kind == "decode":
+        assert specs["tokens"].shape == (sh.global_batch, 1)
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_smoke_configs_are_small(arch):
+    assert count_params(get_smoke(arch)) < 5e6

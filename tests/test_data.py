@@ -1,0 +1,39 @@
+"""Synthetic data pipeline: determinism, host sharding, resumability."""
+import numpy as np
+
+from repro.data.pipeline import DataConfig, SyntheticLM
+
+
+def test_deterministic_across_instances():
+    a = SyntheticLM(DataConfig(vocab_size=100, seq_len=16, global_batch=8))
+    b = SyntheticLM(DataConfig(vocab_size=100, seq_len=16, global_batch=8))
+    np.testing.assert_array_equal(a.global_batch(5)["tokens"],
+                                  b.global_batch(5)["tokens"])
+
+
+def test_host_shards_partition_global():
+    data = SyntheticLM(DataConfig(vocab_size=100, seq_len=16,
+                                  global_batch=8))
+    g = data.global_batch(3)
+    parts = [data.host_batch(3, h, 4) for h in range(4)]
+    stitched = np.concatenate([p["tokens"] for p in parts], axis=0)
+    np.testing.assert_array_equal(stitched, g["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    data = SyntheticLM(DataConfig(vocab_size=100, seq_len=16,
+                                  global_batch=2))
+    b = data.global_batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_grammar_signal_exists():
+    """The Markov structure must be learnable: successor pairs repeat."""
+    data = SyntheticLM(DataConfig(vocab_size=64, seq_len=512,
+                                  global_batch=4, markov_weight=0.9,
+                                  n_succ=1))
+    b = data.global_batch(0)
+    tok, lab = b["tokens"], b["labels"]
+    # for deterministic successors, P(label == succ[token]) ~ markov_weight
+    hits = np.mean(lab == data.succ[tok, 0])
+    assert hits > 0.75

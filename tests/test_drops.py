@@ -1,0 +1,49 @@
+"""Drop-mask generators: rates, patterns, self-preservation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.drops import (bernoulli_mask, loss_fraction, make_mask,
+                              straggler_mask, tail_mask)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.01, 0.3))
+def test_bernoulli_rate(seed, rate):
+    m = bernoulli_mask(jax.random.PRNGKey(seed), 16, 4096, rate=rate,
+                       packet_elems=64)
+    observed = float(1 - jnp.mean(m))
+    assert abs(observed - rate) < 0.08
+
+
+def test_tail_mask_is_suffix():
+    m = np.asarray(tail_mask(jax.random.PRNGKey(3), 8, 4096, rate=0.2,
+                             packet_elems=64))
+    for row in m:
+        # once dropped, stays dropped (contiguous tail)
+        drops = np.where(row == 0)[0]
+        if len(drops):
+            assert row[drops[0]:].max() == 0
+
+
+def test_straggler_whole_rows():
+    m = np.asarray(straggler_mask(jax.random.PRNGKey(4), 64, 128, rate=0.3))
+    for row in m:
+        assert row.min() == row.max()       # all-or-nothing per peer
+
+
+def test_self_row_never_dropped():
+    m = make_mask("straggler", jax.random.PRNGKey(0), 8, 100, rate=0.99,
+                  self_index=jnp.asarray(3))
+    assert float(jnp.min(m[3])) == 1.0
+
+
+def test_zero_rate_is_ones():
+    m = make_mask("tail", jax.random.PRNGKey(0), 4, 64, rate=0.0)
+    assert float(jnp.min(m)) == 1.0
+
+
+def test_loss_fraction():
+    m = jnp.concatenate([jnp.ones((2, 50)), jnp.zeros((2, 50))], axis=1)
+    assert float(loss_fraction(m)) == pytest.approx(0.5)

@@ -1,0 +1,52 @@
+"""Dry-run tooling: HLO collective parsing and the linear cost model."""
+import pytest
+
+from repro.launch.dryrun import _shape_bytes, parse_collective_bytes
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[16,256]{1,0} all-gather(bf16[1,256]{1,0} %x), replica_groups={}
+  %ar.1 = f32[1024]{0} all-reduce(f32[1024]{0} %y), to_apply=%add
+  %aa = (bf16[8,64]{1,0}, u8[128]{0}) all-to-all(bf16[8,64]{1,0} %z)
+  %cp-start = bf16[32]{0} collective-permute-start(bf16[32]{0} %w)
+  %cp-done = bf16[32]{0} collective-permute-done(bf16[32]{0} %cp-start)
+  %rs = f32[64]{0} reduce-scatter(f32[512]{0} %v)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,256]") == 16 * 256 * 2
+    assert _shape_bytes("f32[1024]") == 4096
+    assert _shape_bytes("(bf16[8,64], u8[128])") == 8 * 64 * 2 + 128
+
+
+def test_parse_collectives():
+    out = parse_collective_bytes(HLO)
+    assert out["all-gather"] == 16 * 256 * 2
+    assert out["all-reduce"] == 4096
+    assert out["all-to-all"] == 8 * 64 * 2 + 128
+    assert out["collective-permute"] == 64      # start counted, done skipped
+    assert out["reduce-scatter"] == 256
+    assert out["count_all-gather"] == 1
+
+
+def test_cost_model_linear_fit():
+    """The 4-point fit must recover an exactly affine metric."""
+    d1, d2, b1, b2 = 1, 2, 16, 32
+    L, B = 64, 256
+    fix_base, tok_base, fix_layer, tok_layer = 5.0, 3.0, 7.0, 11.0
+
+    def m(d, b):
+        return fix_base + b * tok_base + d * (fix_layer + b * tok_layer)
+
+    lay_b1 = (m(d2, b1) - m(d1, b1)) / (d2 - d1)
+    lay_b2 = (m(d2, b2) - m(d1, b2)) / (d2 - d1)
+    tl = (lay_b2 - lay_b1) / (b2 - b1)
+    fl = lay_b1 - b1 * tl
+    base_b1 = m(d1, b1) - d1 * lay_b1
+    base_b2 = m(d1, b2) - d1 * lay_b2
+    tb = (base_b2 - base_b1) / (b2 - b1)
+    fb = base_b1 - b1 * tb
+    val = fb + B * tb + L * (fl + B * tl)
+    assert val == pytest.approx(m(L, B))

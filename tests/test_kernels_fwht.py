@@ -1,0 +1,74 @@
+"""FWHT kernel: Pallas (interpret) vs butterfly oracle across shapes/dtypes,
+plus the algebraic properties the OptiReduce pipeline relies on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.kernels.fwht import (fwht, fwht_mxu_ref, fwht_ref,
+                                hadamard_matrix, randomized_fwht)
+from repro.kernels.fwht.fwht import fwht_pallas
+
+
+@pytest.mark.parametrize("block", [64, 256, 1024, 4096])
+@pytest.mark.parametrize("rows", [1, 3, 32])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_matches_oracle(block, rows, dtype):
+    key = jax.random.PRNGKey(block + rows)
+    x = jax.random.normal(key, (rows, block), jnp.float32)
+    ref = fwht_ref(x)
+    out = fwht_pallas(x.astype(dtype).astype(jnp.float32), interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block", [128, 512, 2048])
+def test_mxu_form_matches_butterfly(block):
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, block))
+    np.testing.assert_allclose(np.asarray(fwht_mxu_ref(x)),
+                               np.asarray(fwht_ref(x)), atol=1e-4)
+
+
+def test_involution():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 1024))
+    np.testing.assert_allclose(np.asarray(fwht(fwht(x))), np.asarray(x),
+                               atol=1e-4)
+
+
+def test_hadamard_matrix_orthonormal():
+    h = np.asarray(hadamard_matrix(64))
+    np.testing.assert_allclose(h @ h.T, np.eye(64), atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([256, 1024]))
+def test_rht_roundtrip_property(seed, block):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (2, block))
+    sign = jnp.where(jax.random.bernoulli(key, 0.5, (block,)), 1., -1.)
+    enc = randomized_fwht(x, sign, mode="encode")
+    dec = randomized_fwht(enc, sign, mode="decode")
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(x), atol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_energy_preservation(seed):
+    """Orthonormal transform: ||Hx|| == ||x|| (what makes drop MSE bounded)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1024,))
+    y = fwht(x)
+    np.testing.assert_allclose(float(jnp.sum(y * y)), float(jnp.sum(x * x)),
+                               rtol=1e-4)
+
+
+def test_linearity():
+    """decode(mean(encode(g_i))) == mean(g_i): OptiReduce's exactness when
+    no drops occur."""
+    key = jax.random.PRNGKey(3)
+    xs = jax.random.normal(key, (8, 2048))
+    sign = jnp.where(jax.random.bernoulli(key, 0.5, (2048,)), 1., -1.)
+    enc = jax.vmap(lambda v: randomized_fwht(v[None], sign,
+                                             mode="encode")[0])(xs)
+    dec = randomized_fwht(jnp.mean(enc, 0)[None], sign, mode="decode")[0]
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(jnp.mean(xs, 0)),
+                               atol=1e-4)

@@ -1,0 +1,55 @@
+"""§3.4 safeguards: in-graph skip + host-side monitor/rollback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.safeguards import LossMonitor, guard_update
+
+
+def test_guard_passes_normal():
+    upd = {"w": jnp.ones((4,))}
+    out, skipped = guard_update(upd, jnp.asarray(0.01), skip_threshold=0.1)
+    assert not bool(skipped)
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0)
+
+
+def test_guard_skips_excessive_loss():
+    upd = {"w": jnp.ones((4,))}
+    out, skipped = guard_update(upd, jnp.asarray(0.5), skip_threshold=0.1)
+    assert bool(skipped)
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.0)
+
+
+def test_guard_is_jittable():
+    f = jax.jit(lambda u, l: guard_update(u, l))
+    out, skipped = f({"w": jnp.ones(3)}, jnp.asarray(0.5))
+    assert bool(skipped)
+
+
+def test_monitor_halts_after_consecutive_skips():
+    mon = LossMonitor(halt_after_consecutive_skips=3)
+    for step in range(3):
+        mon.observe(step, 0.5, skipped=True)
+    assert mon.halted
+    assert mon.total_skips == 3
+
+
+def test_monitor_resets_on_clean_step():
+    mon = LossMonitor(halt_after_consecutive_skips=3)
+    mon.observe(0, 0.5, True)
+    mon.observe(1, 0.0, False)
+    mon.observe(2, 0.5, True)
+    assert not mon.halted
+    assert mon.consecutive_skips == 1
+
+
+def test_snapshot_rollback():
+    mon = LossMonitor(snapshot_every=2, snapshot_keep=2)
+    p0 = {"w": jnp.zeros(2)}
+    mon.maybe_snapshot(0, p0)
+    mon.maybe_snapshot(2, {"w": jnp.ones(2)})
+    mon.maybe_snapshot(4, {"w": 2 * jnp.ones(2)})
+    step, params = mon.rollback()
+    assert step == 4
+    np.testing.assert_allclose(np.asarray(params["w"]), 2.0)
+    assert not mon.halted

@@ -1,0 +1,59 @@
+"""Network simulator invariants + paper-shape checks."""
+import numpy as np
+import pytest
+
+from repro.sim.netsim import GASimulator, NetworkModel, simulate_job
+
+
+def test_deterministic_in_seed():
+    kw = dict(n_nodes=8, bucket_bytes=1e7, n_steps=20,
+              compute_ms=0.0, overlap=0.0)
+    a = simulate_job("gloo_ring", env=NetworkModel.environment("local_1.5",
+                                                               seed=3), **kw)
+    b = simulate_job("gloo_ring", env=NetworkModel.environment("local_1.5",
+                                                               seed=3), **kw)
+    assert a["total_ms"] == b["total_ms"]
+
+
+def test_p99_calibration():
+    env = NetworkModel(median_ms=1.0, p99_over_p50=3.0, stall_prob=0.0)
+    s = env.base_ms(0, n=200_000)
+    ratio = np.percentile(s, 99) / np.percentile(s, 50)
+    assert ratio == pytest.approx(3.0, rel=0.05)
+
+
+def test_optireduce_beats_ring_more_at_higher_tail():
+    kw = dict(n_nodes=8, bucket_bytes=25 * 2**20, n_steps=100,
+              compute_ms=0.0, overlap=0.0)
+    gaps = {}
+    for name in ("local_1.5", "local_3.0"):
+        ring = simulate_job("gloo_ring",
+                            env=NetworkModel.environment(name, 7), **kw)
+        opti = simulate_job("optireduce",
+                            env=NetworkModel.environment(name, 7), **kw)
+        gaps[name] = ring["mean_ga_ms"] / opti["mean_ga_ms"]
+    assert gaps["local_1.5"] > 1.0
+    assert gaps["local_3.0"] > gaps["local_1.5"]    # paper's headline trend
+
+
+def test_optireduce_drops_bounded():
+    r = simulate_job("optireduce", n_nodes=8, bucket_bytes=25 * 2**20,
+                     n_steps=150, compute_ms=0.0, overlap=0.0,
+                     env=NetworkModel.environment("local_3.0", 3))
+    assert 0.0 < r["mean_drop"] < 0.01    # paper Table 1: 0.05%-0.18%
+
+
+def test_reliable_strategies_never_drop():
+    for s in ("gloo_ring", "nccl_tree", "bcube", "tar_tcp"):
+        r = simulate_job(s, n_nodes=8, bucket_bytes=1e7, n_steps=10,
+                         compute_ms=0.0, overlap=0.0,
+                         env=NetworkModel.environment("local_3.0", 1))
+        assert r["mean_drop"] == 0.0
+
+
+def test_tar_incast_reduces_rounds():
+    env = NetworkModel.environment("local_1.5", 5)
+    sim = GASimulator(env, 8)
+    r1 = sim.tar_tcp(1e7, incast=1)
+    r2 = sim.tar_tcp(1e7, incast=4)
+    assert r2.rounds < r1.rounds

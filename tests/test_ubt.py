@@ -1,0 +1,92 @@
+"""UBT controllers vs the paper's §3.2 update rules."""
+import numpy as np
+import pytest
+
+from repro.core.ubt import AdaptiveTimeout, DynamicIncast, TimelyRateControl
+
+
+class TestAdaptiveTimeout:
+    def test_warmup_p95(self):
+        at = AdaptiveTimeout(warmup_iters=20)
+        for t in range(1, 21):
+            at.observe_warmup(float(t))
+        assert at.ready
+        assert at.t_b == pytest.approx(np.percentile(range(1, 21), 95))
+
+    def test_deadline_uses_tc_when_last_pctile_seen(self):
+        at = AdaptiveTimeout(warmup_iters=2)
+        at.observe_warmup(10.0)
+        at.observe_warmup(10.0)
+        assert at.round_deadline(last_pctile_seen=False) == at.t_b
+        assert at.round_deadline(True) == pytest.approx(
+            min(at.t_b, 1.1 * at.t_c))
+
+    def test_x_doubles_on_high_loss_and_caps(self):
+        at = AdaptiveTimeout(warmup_iters=1)
+        at.observe_warmup(10.0)
+        for _ in range(10):
+            at.update(stage_times=[5.0], timed_out=[False],
+                      frac_received=[1.0], loss_frac=0.01)  # > 0.1%
+        assert at.x == pytest.approx(0.50)                  # capped at 50%
+
+    def test_x_decrements_on_low_loss(self):
+        at = AdaptiveTimeout(warmup_iters=1, x_init=0.10)
+        at.observe_warmup(10.0)
+        at.x = 0.10
+        at.update(stage_times=[5.0], timed_out=[False],
+                  frac_received=[1.0], loss_frac=0.0)       # < 0.01%
+        assert at.x == pytest.approx(0.09)
+
+    def test_tc_sources(self):
+        """(1) on-time -> observed, (2) timeout -> t_B, (3) partial ->
+        extrapolated; median across nodes then EMA with alpha=0.95."""
+        at = AdaptiveTimeout(warmup_iters=1, alpha=0.95)
+        at.observe_warmup(10.0)
+        t_c0 = at.t_c
+        at.update(stage_times=[4.0, 6.0, 5.0],
+                  timed_out=[False, True, False],
+                  frac_received=[1.0, 0.5, 0.5], loss_frac=5e-4)
+        # samples: 4.0 (on time), t_b=10.0 (timeout), 5.0/0.5=10.0 (extrap)
+        expected = 0.95 * np.median([4.0, 10.0, 10.0]) + 0.05 * t_c0
+        assert at.t_c == pytest.approx(expected)
+
+    def test_hadamard_activation_threshold(self):
+        at = AdaptiveTimeout()
+        assert at.hadamard_active(0.03)      # > 2%
+        assert not at.hadamard_active(0.01)
+
+
+class TestDynamicIncast:
+    def test_grows_on_clean_rounds(self):
+        di = DynamicIncast(n_nodes=8, i_init=1)
+        for _ in range(10):
+            di.update(loss_frac=0.0, timed_out=False)
+        assert di.value == 7                  # capped at N-1
+
+    def test_halves_on_loss(self):
+        di = DynamicIncast(n_nodes=8, i_init=4)
+        di.update(loss_frac=0.01, timed_out=False)
+        assert di.value == 2
+        di.update(loss_frac=0.0, timed_out=True)
+        assert di.value == 1
+        di.update(loss_frac=0.01, timed_out=True)
+        assert di.value == 1                  # floor
+
+    def test_senders_take_min(self):
+        assert DynamicIncast.effective([4, 2, 7]) == 2
+
+
+class TestTimely:
+    def test_additive_increase(self):
+        rc = TimelyRateControl(rate=1e9)
+        rc.update(10e-6)                      # below T_low
+        assert rc.rate == pytest.approx(1e9 + 50e6)
+
+    def test_multiplicative_decrease(self):
+        rc = TimelyRateControl(rate=10e9)
+        r = rc.update(500e-6)                 # above T_high
+        assert r == pytest.approx(10e9 * (1 - 0.5 * (1 - 250e-6 / 500e-6)))
+
+    def test_hold_in_band(self):
+        rc = TimelyRateControl(rate=5e9)
+        assert rc.update(100e-6) == pytest.approx(5e9)
