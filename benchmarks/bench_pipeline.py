@@ -1,0 +1,100 @@
+"""End-to-end sync_pytree timing: fused BucketPlan engine (one lax.scan'd
+strategy body) vs the seed per-bucket Python loop, swept over bucket counts.
+
+Three costs are reported per (variant, B):
+
+  trace_ms   — trace + lower time (the O(#buckets) HLO-growth tax the
+               BucketPlan removes; this is host time paid on EVERY reshape
+               of the step function)
+  hlo_kb     — lowered module size (proxy for compile time / program cache
+               pressure at production scale)
+  steady_us  — steady-state wall time per call (dispatch + compute)
+
+plus derived per-bucket overhead slopes: d(steady)/dB via the (B_max, B_min)
+secant, which is the per-bucket host/dispatch cost the scan amortizes.
+
+Run via ``python -m benchmarks.run --only bench_pipeline``; ``run.py`` also
+serializes these rows to BENCH_pipeline.json at the repo root so future PRs
+can diff the perf trajectory mechanically.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import make_mesh, shard_map
+from repro.core import (OptiReduceConfig, SyncContext, sync_pytree,
+                        sync_pytree_unfused)
+from jax.sharding import PartitionSpec as P
+
+from .common import Rows
+
+BUCKET = 4096
+
+
+def _build(fn, nbuckets: int):
+    mesh = make_mesh((1,), ("data",))
+    cfg = OptiReduceConfig(strategy="optireduce", drop_rate=0.0,
+                           hadamard_block=256)
+    tree = {"g": jnp.zeros((nbuckets * BUCKET,), jnp.float32)}
+    spec = {"g": P()}
+
+    def body(t):
+        ctx = SyncContext(cfg=cfg, key=jax.random.PRNGKey(0))
+        return fn(t, ctx, bucket_elems=BUCKET)
+
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                          check_vma=False))
+    return f, tree
+
+
+def _measure(fn, nbuckets: int, reps: int):
+    f, tree = _build(fn, nbuckets)
+    t0 = time.perf_counter()
+    lowered = f.lower(tree)
+    trace_ms = (time.perf_counter() - t0) * 1e3
+    hlo_kb = len(lowered.as_text()) / 1024
+    # reuse the lowering (calling f would re-trace the whole pipeline)
+    compiled = lowered.compile()
+    jax.block_until_ready(compiled(tree))             # warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(compiled(tree))
+    steady_us = (time.perf_counter() - t0) / reps * 1e6
+    return trace_ms, hlo_kb, steady_us
+
+
+def run(quick: bool = True) -> Rows:
+    rows = Rows()
+    counts = [1, 2, 4, 8] if quick else [1, 2, 4, 8, 16, 32]
+    reps = 5 if quick else 20
+    steady = {}
+    for name, fn in (("fused", sync_pytree),
+                     ("unfused", sync_pytree_unfused)):
+        for b in counts:
+            trace_ms, hlo_kb, steady_us = _measure(fn, b, reps)
+            steady[(name, b)] = steady_us
+            rows.add(f"pipeline/{name}_B{b}_trace_ms", trace_ms,
+                     "trace+lower host time")
+            rows.add(f"pipeline/{name}_B{b}_hlo_kb", hlo_kb,
+                     "lowered module size")
+            rows.add(f"pipeline/{name}_B{b}_steady_us", steady_us,
+                     f"wall us/call, {reps} reps")
+    b_lo, b_hi = counts[0], counts[-1]
+    slopes = {}
+    for name in ("fused", "unfused"):
+        slopes[name] = ((steady[(name, b_hi)] - steady[(name, b_lo)])
+                        / (b_hi - b_lo))
+        rows.add(f"pipeline/{name}_per_bucket_us", slopes[name],
+                 f"d(steady)/dB secant over B={b_lo}..{b_hi}")
+    if slopes["unfused"] > 0:
+        rows.add("pipeline/per_bucket_overhead_reduction_pct",
+                 100.0 * (1 - slopes["fused"] / slopes["unfused"]),
+                 "fused vs seed loop (higher is better)")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import os
 import sys
 import time
 
@@ -22,7 +24,27 @@ MODULES = [
     "bench_tta",              # Fig 11 + Table 1
     "bench_compression",      # Fig 16
     "bench_kernels",          # §4 kernel layer parity/perf
+    "bench_pipeline",         # fused BucketPlan sync engine vs seed loop
 ]
+
+# rows from these modules are serialized to BENCH_<name>.json at the repo
+# root so the perf trajectory is machine-readable across PRs (see PERF.md)
+JSON_MODULES = {"bench_pipeline": "BENCH_pipeline.json"}
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _write_json(name: str, rows, *, full: bool) -> None:
+    path = os.path.join(_REPO_ROOT, JSON_MODULES[name])
+    payload = {r[0]: {"value": r[1], "derived": r[2]} for r in rows.rows}
+    # record which sweep produced the file: quick- and full-mode rows have
+    # different key sets / rep counts and must not be diffed against each
+    # other across PRs
+    payload["_meta"] = {"mode": "full" if full else "quick", "bench": name}
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"# wrote {path}", flush=True)
 
 
 def main(argv=None) -> int:
@@ -38,7 +60,9 @@ def main(argv=None) -> int:
         t0 = time.time()
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            mod.run(quick=not args.full)
+            rows = mod.run(quick=not args.full)
+            if name in JSON_MODULES and rows is not None:
+                _write_json(name, rows, full=args.full)
         except Exception as e:  # keep the suite going
             failures += 1
             print(f"{name}/FAILED,0,{type(e).__name__}: {e}", flush=True)

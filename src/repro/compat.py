@@ -1,0 +1,94 @@
+"""Version-compat shims for JAX APIs that moved between releases.
+
+The repo targets the modern spelling (``jax.shard_map``,
+``jax.sharding.AxisType``); older runtimes (<= 0.4.x) only ship
+``jax.experimental.shard_map.shard_map`` (with ``check_rep`` instead of
+``check_vma``) and a ``jax.make_mesh`` without ``axis_types``. All mesh /
+shard_map construction goes through here so the rest of the codebase can
+stay on the new API.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` on new JAX, experimental fallback on old JAX."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def _needs_barrier_vjp() -> bool:
+    # jax < 0.5 ships optimization_barrier without a differentiation rule
+    return jax.__version_info__ < (0, 5, 0)
+
+
+def _register_barrier_batching() -> None:
+    """Old JAX also lacks a vmap rule for optimization_barrier; the barrier
+    is shape-oblivious, so batching is a pass-through of the batch dims."""
+    try:
+        from jax._src.lax import lax as _lax_internal
+        from jax.interpreters import batching
+        prim = _lax_internal.optimization_barrier_p
+    except (ImportError, AttributeError):      # pragma: no cover - new JAX
+        return
+    if prim in batching.primitive_batchers:
+        return
+
+    def _batch(args, dims):
+        outs = prim.bind(*args)
+        return outs, dims
+
+    batching.primitive_batchers[prim] = _batch
+
+
+if _needs_barrier_vjp():
+    _register_barrier_batching()
+
+
+@jax.custom_vjp
+def _barrier_vjp(xs):
+    return jax.lax.optimization_barrier(xs)
+
+
+def _barrier_fwd(xs):
+    return _barrier_vjp(xs), None
+
+
+def _barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_barrier_vjp.defvjp(_barrier_fwd, _barrier_bwd)
+
+
+def optimization_barrier(xs):
+    """``jax.lax.optimization_barrier`` that is differentiable on old JAX
+    (identity VJP with a matching barrier on the cotangents)."""
+    if _needs_barrier_vjp():
+        return _barrier_vjp(xs)
+    return jax.lax.optimization_barrier(xs)
+
+
+def axis_size(axis) -> int:
+    """Static size of a named mesh axis, inside a shard_map body.
+
+    Old JAX has no ``jax.lax.axis_size``; ``psum(1, axis)`` constant-folds
+    to the same static int there.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    try:
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axis_names)
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types)
+    except (AttributeError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names)

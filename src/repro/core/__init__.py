@@ -1,12 +1,15 @@
 """OptiReduce core: the paper's contribution as composable JAX modules."""
-from .allreduce import OptiReduceConfig, SyncContext, strategies, sync_bucket, sync_pytree
+from .allreduce import (OptiReduceConfig, SyncContext, strategies,
+                        sync_bucket, sync_pytree, sync_pytree_unfused)
+from .bucket_plan import BucketPlan
 from .hadamard import ht_decode, ht_encode, rademacher_sign
 from .safeguards import LossMonitor, guard_update
 from .ubt import AdaptiveTimeout, DynamicIncast, TimelyRateControl, UbtState
 
 __all__ = [
     "OptiReduceConfig", "SyncContext", "strategies", "sync_bucket",
-    "sync_pytree", "ht_decode", "ht_encode", "rademacher_sign",
+    "sync_pytree", "sync_pytree_unfused", "BucketPlan",
+    "ht_decode", "ht_encode", "rademacher_sign",
     "LossMonitor", "guard_update", "AdaptiveTimeout", "DynamicIncast",
     "TimelyRateControl", "UbtState",
 ]

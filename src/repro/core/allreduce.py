@@ -29,10 +29,14 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from . import drops as drops_lib
 from . import ring as ring_lib
 from . import tar as tar_lib
-from .hadamard import ht_decode, ht_encode
+from .bucket_plan import BucketPlan
+from .hadamard import ht_decode, ht_encode, ht_encode_amax, ht_encode_quant
+from repro.kernels.dequant_reduce import dequant_masked_mean
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,7 +108,7 @@ def _psum(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
 
 
 def _gloo_ring(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
-    n = jax.lax.axis_size(ctx.cfg.data_axis)
+    n = compat.axis_size(ctx.cfg.data_axis)
     x, length = tar_lib.pad_for_tar(bucket, n)
     out = ring_lib.ring_allreduce(x, ctx.cfg.data_axis)
     if ctx.cfg.pod_axis is not None:
@@ -113,7 +117,7 @@ def _gloo_ring(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
 
 
 def _nccl_tree(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
-    n = jax.lax.axis_size(ctx.cfg.data_axis)
+    n = compat.axis_size(ctx.cfg.data_axis)
     x, length = tar_lib.pad_for_tar(bucket, n)
     out = ring_lib.tree_allreduce(x, ctx.cfg.data_axis)
     if ctx.cfg.pod_axis is not None:
@@ -122,7 +126,7 @@ def _nccl_tree(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
 
 
 def _bcube(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
-    n = jax.lax.axis_size(ctx.cfg.data_axis)
+    n = compat.axis_size(ctx.cfg.data_axis)
     base = 4 if n % 4 == 0 else 2
     x, length = tar_lib.pad_for_tar(bucket, n)
     out = ring_lib.bcube_allreduce(x, ctx.cfg.data_axis, base=base)
@@ -133,7 +137,7 @@ def _bcube(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
 
 def _tar_tcp(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
     """Reliable TAR (no drops, no HT) — the paper's TAR+TCP baseline."""
-    n = jax.lax.axis_size(ctx.cfg.data_axis)
+    n = compat.axis_size(ctx.cfg.data_axis)
     x, length = tar_lib.pad_for_tar(bucket, n)
     if ctx.cfg.pod_axis is not None:
         out = tar_lib.tar_allreduce_2d(x, ctx.cfg.data_axis, ctx.cfg.pod_axis,
@@ -145,7 +149,7 @@ def _tar_tcp(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
 
 
 def _tar_rounds(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
-    n = jax.lax.axis_size(ctx.cfg.data_axis)
+    n = compat.axis_size(ctx.cfg.data_axis)
     x, length = tar_lib.pad_for_tar(bucket, n)
     out = tar_lib.tar_allreduce_rounds(x, ctx.cfg.data_axis,
                                        incast=ctx.cfg.incast)
@@ -158,7 +162,7 @@ def _optireduce(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
     """The paper's system: TAR + UBT drop model + HT + compensated reduce."""
     cfg = ctx.cfg
     axis = cfg.data_axis
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     block = cfg.hadamard_block if cfg.use_hadamard else 1
     x, length = tar_lib.pad_for_tar(bucket, n, block)
     if cfg.use_hadamard:
@@ -192,33 +196,45 @@ def _optireduce_q(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
     codes are homomorphic — the THC property, made cheap by the rotation
     (rotated blocks are near-Gaussian with comparable scales). Wire bytes:
     quant_bits/16 of the bf16 exchange.
+
+    Under ``use_kernels`` the encode side runs the fused engine
+    (kernels/ht_quant): a rotate-and-amax pass for the grids, then one
+    sign+FWHT+quantize pass emitting uint8 — the rotated fp32 bucket is
+    never written to HBM. The receive side fuses dequant with the
+    drop-compensated mean (kernels/dequant_reduce), so no (N, S) float32
+    intermediate exists either. The jnp path below is the parity oracle
+    (identical math, same RNG draws).
     """
     cfg = ctx.cfg
     axis = cfg.data_axis
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     block = cfg.hadamard_block
     levels = (1 << cfg.quant_bits) - 1
     x, length = tar_lib.pad_for_tar(bucket, n, block)
-    x = ht_encode(x, ctx.key, block=block, use_kernel=cfg.use_kernels)
-    xb = x.reshape(-1, block)
-    amax = jnp.max(jnp.abs(xb), axis=1)
+    if cfg.use_kernels:
+        amax = ht_encode_amax(x, ctx.key, block=block, use_kernel=True)
+        xb = None                         # rotated bucket never materialized
+    else:
+        x = ht_encode(x, ctx.key, block=block, use_kernel=False)
+        xb = x.reshape(-1, block)
+        amax = jnp.max(jnp.abs(xb), axis=1)
     amax = jax.lax.pmax(amax, axis)
     if cfg.pod_axis is not None:
         amax = jax.lax.pmax(amax, cfg.pod_axis)
     amax = jnp.maximum(amax, 1e-12)
-    step = (2.0 * amax / levels)[:, None]               # (nblocks, 1)
-    lo = -amax[:, None]
-
-    def quantize(vals, subkey):
-        u = jax.random.uniform(subkey, vals.shape)
-        q = jnp.floor((vals - lo) / step + u)
-        return jnp.clip(q, 0, levels).astype(jnp.uint8)
-
-    def dequantize(codes):
-        return codes.astype(jnp.float32) * step + lo
+    step = 2.0 * amax / levels                          # (nblocks,)
+    lo = -amax
 
     s = x.shape[0] // n
-    codes = quantize(xb, jax.random.fold_in(ctx.key, 3)).reshape(n, s)
+    noise = jax.random.uniform(jax.random.fold_in(ctx.key, 3),
+                               (x.shape[0] // block, block))
+    if cfg.use_kernels:
+        codes = ht_encode_quant(x, ctx.key, noise, lo, step, block=block,
+                                bits=cfg.quant_bits,
+                                use_kernel=True).reshape(n, s)
+    else:
+        q = jnp.floor((xb - lo[:, None]) / step[:, None] + noise)
+        codes = jnp.clip(q, 0, levels).astype(jnp.uint8).reshape(n, s)
     received = jax.lax.all_to_all(codes, axis, split_axis=0, concat_axis=0,
                                   tiled=True)
     # this receiver's shard spans blocks [i*s/block, (i+1)*s/block)
@@ -227,25 +243,30 @@ def _optireduce_q(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
     my_lo = jax.lax.dynamic_slice_in_dim(lo, i * nblk_shard, nblk_shard, 0)
     my_step = jax.lax.dynamic_slice_in_dim(step, i * nblk_shard,
                                            nblk_shard, 0)
-    vals = (received.reshape(n, nblk_shard, block).astype(jnp.float32)
-            * my_step[None] + my_lo[None]).reshape(n, s)
     mask = _mask_for(ctx, n, s, axis)
     if mask is not None:
         ctx.stats["dropped"] = ctx.stats.get("dropped", 0.0) + \
             jnp.sum(1.0 - mask)
         ctx.stats["total"] = ctx.stats.get("total", 0.0) + mask.size
-    own = tar_lib._reduce(vals, mask, cfg.use_kernels)
+    if cfg.use_kernels:
+        own = dequant_masked_mean(received, my_lo, my_step, mask,
+                                  block=block, use_kernel=True)
+    else:
+        vals = (received.reshape(n, nblk_shard, block).astype(jnp.float32)
+                * my_step[None, :, None] + my_lo[None, :, None]
+                ).reshape(n, s)
+        own = tar_lib._reduce(vals, mask, cfg.use_kernels)
     if cfg.pod_axis is not None:
         own = jax.lax.pmean(own, cfg.pod_axis)
     # stage 2: broadcast the aggregate, also quantized on the same grids
     ob = own.reshape(nblk_shard, block)
-    oq = jnp.clip(jnp.floor((ob - my_lo) / my_step +
+    oq = jnp.clip(jnp.floor((ob - my_lo[:, None]) / my_step[:, None] +
                             jax.random.uniform(jax.random.fold_in(ctx.key, 4),
                                                ob.shape)),
                   0, levels).astype(jnp.uint8)
     all_codes = jax.lax.all_gather(oq.reshape(s), axis, axis=0, tiled=True)
-    out = (all_codes.reshape(-1, block).astype(jnp.float32) * step + lo
-           ).reshape(-1)
+    out = (all_codes.reshape(-1, block).astype(jnp.float32) * step[:, None]
+           + lo[:, None]).reshape(-1)
     out = ht_decode(out, ctx.key, block=block, use_kernel=cfg.use_kernels)
     return out[:length]
 
@@ -277,16 +298,64 @@ def sync_bucket(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
     return fn(bucket, ctx)
 
 
-def sync_pytree(grads, ctx: SyncContext, *, bucket_elems: int = 6_553_600):
+def sync_pytree(grads, ctx: SyncContext, *, bucket_elems: int = 6_553_600,
+                plan: BucketPlan | None = None, mode: str = "scan"):
     """Sync a gradient pytree via fixed-size buckets (PyTorch uses 25 MB
-    buckets == 6.55M fp32 entries; same default here). Buckets are formed
-    by flattening leaves in pytree order and slicing — each bucket runs the
-    full strategy pipeline independently, which is what lets the runtime
-    overlap bucket k's collective with bucket k+1's backward (two in
-    flight, as the paper/PyTorch do).
+    buckets == 6.55M fp32 entries; same default here).
 
-    Returns (synced_grads, mean_loss_fraction_estimate).
+    Buckets follow a static :class:`BucketPlan` (leaf->bucket layout from
+    the treedef/shapes, computed once — pass ``plan`` to reuse it): leaves
+    are packed into one ``(B, bucket_elems)`` batch and the strategy
+    pipeline runs as a single traced body — constant HLO size in B and no
+    second full-gradient materialization. ``mode`` picks the schedule
+    tradeoff: ``'scan'`` (default) serializes buckets (smallest program;
+    bucket k+1's collective waits on bucket k), ``'vmap'`` vectorizes over
+    the bucket axis so the collectives stay batched/concurrent like the
+    seed's unrolled loop. Both are bitwise-identical to
+    :func:`sync_pytree_unfused`.
     """
+    if mode not in ("scan", "vmap"):
+        raise ValueError(f"unknown sync_pytree mode {mode!r}")
+    if plan is None:
+        plan = BucketPlan.for_tree(grads, bucket_elems)
+    batch = plan.pack(grads)                         # (B, bucket_elems)
+    keys = plan.bucket_keys(ctx.key)
+    recorded = False
+
+    def one_bucket(bucket, key):
+        nonlocal recorded
+        stats: dict = {}
+        out = sync_bucket(bucket, SyncContext(cfg=ctx.cfg, key=key,
+                                              stats=stats))
+        recorded = recorded or ("total" in stats)
+        return out, (stats.get("dropped", jnp.zeros(())),
+                     stats.get("total", jnp.zeros(())))
+
+    if plan.num_buckets == 1:
+        synced, (dropped, total) = one_bucket(batch[0], keys[0])
+        synced = synced[None]
+    elif mode == "vmap":
+        synced, (dropped, total) = jax.vmap(one_bucket)(batch, keys)
+        dropped, total = jnp.sum(dropped), jnp.sum(total)
+    else:
+        def body(carry, inp):
+            bucket, key = inp
+            out, (d, t) = one_bucket(bucket, key)
+            return (carry[0] + d, carry[1] + t), out
+
+        (dropped, total), synced = jax.lax.scan(
+            body, (jnp.zeros(()), jnp.zeros(())), (batch, keys))
+    if recorded:
+        ctx.stats["dropped"] = ctx.stats.get("dropped", 0.0) + dropped
+        ctx.stats["total"] = ctx.stats.get("total", 0.0) + total
+    return plan.unpack(synced)
+
+
+def sync_pytree_unfused(grads, ctx: SyncContext, *,
+                        bucket_elems: int = 6_553_600):
+    """The seed bucketing loop — kept as the parity oracle for
+    :func:`sync_pytree`: flatten leaves, slice fixed-size buckets, trace the
+    strategy pipeline once per bucket (O(#buckets) HLO)."""
     leaves, treedef = jax.tree.flatten(grads)
     sizes = [leaf.size for leaf in leaves]
     flat = jnp.concatenate([leaf.reshape(-1).astype(jnp.float32)
@@ -323,7 +392,7 @@ def reduce_scatter_axis(g: jnp.ndarray, axis: str, dim: int,
     the drop-compensated mean over the axis peers.
     """
     cfg = ctx.cfg
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     g2 = jnp.moveaxis(g, dim, 0)
     lead = g2.shape[0]
     rest = g2.shape[1:]
@@ -340,39 +409,62 @@ def reduce_scatter_axis(g: jnp.ndarray, axis: str, dim: int,
     pad = (-row_len) % block
     if pad:
         rows = jnp.pad(rows, ((0, 0), (0, pad)))
-    if use_ht:
+    # fused engine (kernels/ht_quant): when quantizing with kernels enabled,
+    # the rotation never materializes — a rotate+amax pass derives the
+    # grids, then one sign+FWHT+quantize pass emits the wire codes
+    fused_q = bool(quant) and cfg.use_kernels
+    if use_ht and not fused_q:
         rows = ht_encode(rows.reshape(-1), ctx.key, block=block,
                          use_kernel=cfg.use_kernels).reshape(rows.shape)
     if quant:
         # per-block shared grids (pmax over the axis): int codes on the wire
         levels = (1 << quant) - 1
-        rb = rows.reshape(-1, block)
-        amax = jnp.maximum(jax.lax.pmax(jnp.max(jnp.abs(rb), axis=1), axis),
-                           1e-12)
-        step_b = (2.0 * amax / levels)[:, None]
-        lo_b = -amax[:, None]
-        u = jax.random.uniform(jax.random.fold_in(ctx.key, 9), rb.shape)
-        codes = jnp.clip(jnp.floor((rb.astype(jnp.float32) - lo_b) / step_b
-                                   + u), 0, levels).astype(jnp.uint8)
-        received = jax.lax.all_to_all(codes.reshape(rows.shape), axis,
-                                      split_axis=0, concat_axis=0,
-                                      tiled=True)
+        if fused_q:
+            amax = ht_encode_amax(rows.reshape(-1), ctx.key, block=block,
+                                  use_kernel=True)
+        else:
+            amax = jnp.max(jnp.abs(rows.reshape(-1, block)), axis=1)
+        amax = jnp.maximum(jax.lax.pmax(amax, axis), 1e-12)
+        step_b = 2.0 * amax / levels                    # (nblocks,)
+        lo_b = -amax
+        u = jax.random.uniform(jax.random.fold_in(ctx.key, 9),
+                               (rows.size // block, block))
+        if fused_q:
+            codes = ht_encode_quant(rows.reshape(-1), ctx.key, u, lo_b,
+                                    step_b, block=block, bits=quant,
+                                    use_kernel=True).reshape(rows.shape)
+        else:
+            rb = rows.reshape(-1, block)
+            codes = jnp.clip(jnp.floor((rb.astype(jnp.float32)
+                                        - lo_b[:, None]) / step_b[:, None]
+                                       + u), 0, levels).astype(jnp.uint8)
+            codes = codes.reshape(rows.shape)
+        received = jax.lax.all_to_all(codes, axis, split_axis=0,
+                                      concat_axis=0, tiled=True)
         i = jax.lax.axis_index(axis)
         nblk = rows.shape[1] // block
         my_lo = jax.lax.dynamic_slice_in_dim(lo_b, i * nblk, nblk, 0)
         my_step = jax.lax.dynamic_slice_in_dim(step_b, i * nblk, nblk, 0)
-        received = (received.reshape(n, nblk, block).astype(jnp.float32)
-                    * my_step[None] + my_lo[None]).reshape(n, -1)
+        mask = (_mask_for(ctx, n, received.shape[1], axis)
+                if with_drops else None)
+        if cfg.use_kernels:
+            own = dequant_masked_mean(received, my_lo, my_step, mask,
+                                      block=block, use_kernel=True)
+        else:
+            vals = (received.reshape(n, nblk, block).astype(jnp.float32)
+                    * my_step[None, :, None] + my_lo[None, :, None]
+                    ).reshape(n, -1)
+            own = tar_lib._reduce(vals, mask, cfg.use_kernels)
     else:
         received = jax.lax.all_to_all(rows, axis, split_axis=0,
                                       concat_axis=0, tiled=True)
-    mask = (_mask_for(ctx, n, received.shape[1], axis)
-            if with_drops else None)
+        mask = (_mask_for(ctx, n, received.shape[1], axis)
+                if with_drops else None)
+        own = tar_lib._reduce(received, mask, cfg.use_kernels)
     if mask is not None:
         ctx.stats["dropped"] = ctx.stats.get("dropped", 0.0) + \
             jnp.sum(1.0 - mask)
         ctx.stats["total"] = ctx.stats.get("total", 0.0) + mask.size
-    own = tar_lib._reduce(received, mask, cfg.use_kernels)
     if use_ht:
         own = ht_decode(own, ctx.key, block=block, use_kernel=cfg.use_kernels)
     if pad:

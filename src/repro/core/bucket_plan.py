@@ -1,0 +1,90 @@
+"""Static bucketization plan for the gradient-sync engine.
+
+The seed ``sync_pytree`` Python-looped over buckets — every bucket traced its
+own copy of the strategy pipeline (O(#buckets) HLO growth) after
+materializing a second full-size gradient copy via concatenate-then-slice.
+``BucketPlan`` replaces that with trace-time-static layout bookkeeping:
+
+* built once from the pytree treedef + leaf shapes (hashable, so it can ride
+  in jit static args or be cached by the trainer),
+* ``pack`` lays the flat gradient stream into ONE ``(B, bucket_elems)``
+  batch (a single full-size buffer; the last bucket zero-padded),
+* the engine then runs the strategy body once under ``lax.scan`` over the
+  leading bucket axis (or vectorized via ``vmap``) — one traced pipeline
+  regardless of B,
+* ``unpack`` restores leaf shapes/dtypes from the synced batch.
+
+Zero-padding the tail bucket is sound for every strategy: the pipelines are
+elementwise across peers (pad positions sync to 0 and are sliced away), and
+it is what makes the batched layout possible at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Hashable leaf->bucket layout, computed once from treedef/shapes."""
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[str, ...]
+    bucket_elems: int
+    num_buckets: int
+
+    @classmethod
+    def for_tree(cls, tree, bucket_elems: int) -> "BucketPlan":
+        """Plan from a pytree of arrays (or ShapeDtypeStructs)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        shapes = tuple(tuple(leaf.shape) for leaf in leaves)
+        dtypes = tuple(jnp.dtype(leaf.dtype).name for leaf in leaves)
+        total = sum(math.prod(s) for s in shapes)
+        num_buckets = max(1, -(-total // bucket_elems))
+        if num_buckets == 1:
+            bucket_elems = total        # single bucket: no tail padding
+        return cls(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                   bucket_elems=bucket_elems, num_buckets=num_buckets)
+
+    @property
+    def sizes(self) -> tuple[int, ...]:
+        return tuple(math.prod(s) for s in self.shapes)
+
+    @property
+    def total(self) -> int:
+        return sum(self.sizes)
+
+    @property
+    def padded(self) -> int:
+        return self.num_buckets * self.bucket_elems
+
+    def pack(self, tree) -> jnp.ndarray:
+        """Flatten leaves (pytree order) into one (B, bucket_elems) fp32
+        batch — the engine's only full-size buffer."""
+        leaves = jax.tree.leaves(tree)
+        parts = [leaf.reshape(-1).astype(jnp.float32) for leaf in leaves]
+        pad = self.padded - self.total
+        if pad:
+            parts.append(jnp.zeros((pad,), jnp.float32))
+        flat = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+        return flat.reshape(self.num_buckets, self.bucket_elems)
+
+    def unpack(self, batch: jnp.ndarray):
+        """Inverse of ``pack``: (B, bucket_elems) -> original pytree."""
+        flat = batch.reshape(-1)
+        leaves = []
+        off = 0
+        for shape, dtype, size in zip(self.shapes, self.dtypes, self.sizes):
+            leaves.append(flat[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def bucket_keys(self, key: jax.Array) -> jax.Array:
+        """Stacked per-bucket PRNG keys: fold_in(key, bucket_index), same
+        derivation as the seed's Python loop."""
+        return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            jnp.arange(self.num_buckets, dtype=jnp.uint32))

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.fwht import randomized_fwht
+from repro.kernels.ht_quant import ht_amax, ht_encode_fused, ht_quant
 
 
 def rademacher_sign(key: jax.Array, block: int) -> jnp.ndarray:
@@ -25,13 +26,17 @@ def rademacher_sign(key: jax.Array, block: int) -> jnp.ndarray:
 
 def ht_encode(x: jnp.ndarray, key: jax.Array, *, block: int = 4096,
               use_kernel: bool = False) -> jnp.ndarray:
-    """Encode a flat, block-aligned bucket: per-block H @ (d * x)."""
+    """Encode a flat, block-aligned bucket: per-block H @ (d * x).
+
+    Routes through the fused engine's unquantized encode stage
+    (``ht_encode_fused``: sign-flip + FWHT in one pass when the kernel is
+    on) — the bits=0 configuration of kernels/ht_quant.
+    """
     n = x.shape[-1]
     if n % block:
         raise ValueError(f"bucket length {n} not a multiple of block {block}")
     sign = rademacher_sign(key, block)
-    y = randomized_fwht(x.reshape(-1, block), sign, mode="encode",
-                        use_kernel=use_kernel)
+    y = ht_encode_fused(x.reshape(-1, block), sign, use_kernel=use_kernel)
     return y.reshape(x.shape)
 
 
@@ -45,3 +50,37 @@ def ht_decode(y: jnp.ndarray, key: jax.Array, *, block: int = 4096,
     x = randomized_fwht(y.reshape(-1, block), sign, mode="decode",
                         use_kernel=use_kernel)
     return x.reshape(y.shape)
+
+
+# ------------------------------------------------- fused encode-side stages
+# Same key->sign derivation as ht_encode, but the rotated bucket is never
+# materialized: the kernels rotate in VMEM and emit only the reduction
+# (per-block amax) or the uint8 codes (see kernels/ht_quant).
+
+def ht_encode_amax(x: jnp.ndarray, key: jax.Array, *, block: int = 4096,
+                   use_kernel: bool = False) -> jnp.ndarray:
+    """Per-block amax of ``ht_encode(x)`` without materializing it.
+
+    x: flat block-aligned bucket -> (nblocks,) fp32 — the quantization-grid
+    pass of the fused sync engine (pmax these across workers, then call
+    :func:`ht_encode_quant` with the shared grids).
+    """
+    if x.shape[-1] % block:
+        raise ValueError(f"bucket length {x.shape[-1]} not a multiple of "
+                         f"block {block}")
+    sign = rademacher_sign(key, block)
+    return ht_amax(x.reshape(-1, block), sign, use_kernel=use_kernel)
+
+
+def ht_encode_quant(x: jnp.ndarray, key: jax.Array, noise: jnp.ndarray,
+                    lo: jnp.ndarray, step: jnp.ndarray, *,
+                    block: int = 4096, bits: int = 8,
+                    use_kernel: bool = False) -> jnp.ndarray:
+    """Fused ``ht_encode`` + shared-grid stochastic quantization.
+
+    x/noise: flat block-aligned; lo/step: (nblocks,) pmax-shared grids.
+    Returns (nblocks, block) uint8 codes — one VMEM-resident pass.
+    """
+    sign = rademacher_sign(key, block)
+    return ht_quant(x.reshape(-1, block), sign, noise.reshape(-1, block),
+                    lo, step, bits=bits, use_kernel=use_kernel)

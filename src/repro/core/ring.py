@@ -11,9 +11,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def _n(axis: str) -> int:
-    return jax.lax.axis_size(axis)
+    return compat.axis_size(axis)
 
 
 def psum_mean(x: jnp.ndarray, axis) -> jnp.ndarray:

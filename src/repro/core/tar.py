@@ -23,11 +23,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.kernels.masked_sum import masked_mean, masked_mean_ref
 
 
 def axis_size(axis: str) -> int:
-    return jax.lax.axis_size(axis)
+    return compat.axis_size(axis)
 
 
 def pad_for_tar(x: jnp.ndarray, n: int, block: int = 1) -> tuple[jnp.ndarray, int]:
@@ -80,26 +82,43 @@ def tar_allreduce_rounds(x: jnp.ndarray, axis: str, *, incast: int = 1,
 
     In round r (r = 1..N-1) node i sends shard (i+r) mod N to node (i+r) mod N
     and receives from (i-r) mod N — a round-robin schedule where a node-pair
-    never repeats. ``incast`` rounds are issued back-to-back per group, which
-    is how the incast parameter I shows up on a lossless fabric: I permutes
-    in flight concurrently. The broadcast stage is the mirrored schedule.
+    never repeats. ``incast`` is the paper's I: rounds are issued in groups
+    of I permutes in flight concurrently, and group g+1's sends are gated on
+    group g's arrivals (an ``optimization_barrier`` chain), so the lowered
+    HLO carries the real 2*ceil((N-1)/I) round schedule instead of one flat
+    burst. The broadcast stage is the mirrored schedule.
     """
     n = axis_size(axis)
     s = x.shape[0] // n
     shards = x.reshape(n, s)
     i = jax.lax.axis_index(axis)
+    incast = max(1, int(incast))
+
+    def grouped_rounds(send_for_round):
+        """Run rounds 1..N-1 with <= incast permutes in flight per group."""
+        rows = []
+        pending = []
+        token = None
+        for r in range(1, n):
+            # node j sends to node (j + r) % n in round r
+            perm = [(j, (j + r) % n) for j in range(n)]
+            send = send_for_round(r)
+            if token is not None:       # gate on the previous group's recvs
+                send, token = compat.optimization_barrier((send, token))
+            recv = jax.lax.ppermute(send, axis, perm)  # from (i - r) % n
+            pending.append(recv)
+            if len(pending) == incast or r == n - 1:
+                pending = list(compat.optimization_barrier(tuple(pending)))
+                rows.extend(pending)
+                token = pending[-1]
+                pending = []
+        return rows
 
     # --- stage 1: gather my shard's contributions from every peer ---------
     own_rows = [jnp.take(shards, i, axis=0)]           # my own contribution
-    for r in range(1, n):
-        # node j sends shards[(j + r) % n] to node (j + r) % n
-        perm = [(j, (j + r) % n) for j in range(n)]
-        send = jnp.take(shards, (i + r) % n, axis=0)
-        recv = jax.lax.ppermute(send, axis, perm)      # from (i - r) % n
-        own_rows.append(recv)
+    own_rows += grouped_rounds(lambda r: jnp.take(shards, (i + r) % n, axis=0))
     # rows arrive ordered by sender distance r; reorder to sender index
     received_by_dist = jnp.stack(own_rows)             # (N, S); row r = from (i-r)%n
-    dist = (i - jnp.arange(n)) % n                     # sender index for each row? invert:
     # sender of row r is (i - r) % n -> scatter rows to sender order
     senders = (i - jnp.arange(n)) % n
     received = jnp.zeros_like(received_by_dist).at[senders].set(received_by_dist)
@@ -111,13 +130,9 @@ def tar_allreduce_rounds(x: jnp.ndarray, axis: str, *, incast: int = 1,
 
     # --- stage 2: broadcast aggregated shard with the mirrored schedule ---
     out_rows = [own]
-    for r in range(1, n):
-        perm = [(j, (j + r) % n) for j in range(n)]
-        recv = jax.lax.ppermute(own, axis, perm)       # aggregated shard of (i-r)%n
-        out_rows.append(recv)
+    out_rows += grouped_rounds(lambda r: own)          # aggregated shard of (i-r)%n
     got_by_dist = jnp.stack(out_rows)                  # row r = shard of (i-r)%n
     out = jnp.zeros_like(got_by_dist).at[senders].set(got_by_dist)
-    del incast  # round grouping is a scheduling hint; lossless fabric issues all
     return out.reshape(n * s)
 
 

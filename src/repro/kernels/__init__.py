@@ -1,6 +1,10 @@
 """Pallas TPU kernels for OptiReduce's compute hot-spots.
 
-fwht        — blocked fast Walsh-Hadamard transform (MXU Kronecker form)
-masked_sum  — fused drop-compensated shard reduction
-quant       — fused uniform stochastic quantization (THC baseline)
+fwht           — blocked fast Walsh-Hadamard transform (MXU Kronecker form)
+masked_sum     — fused drop-compensated shard reduction
+quant          — fused uniform stochastic quantization (THC baseline)
+ht_quant       — fused sign+FWHT+quantize encode (single-pass, no rotated
+                 fp32 intermediate) + the rotate-and-amax grid pass
+dequant_reduce — fused per-block dequant + drop-compensated mean (receive
+                 side, no (N, S) float32 intermediate)
 """

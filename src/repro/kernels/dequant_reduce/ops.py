@@ -1,0 +1,42 @@
+"""Jit'd public wrapper for the fused dequant + compensated reduction.
+
+Accepts the per-Hadamard-block grids the collective layer carries
+((nblk,)-shaped ``lo``/``step``) and expands them to per-column rows before
+dispatching to the Pallas kernel or the jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .dequant_reduce import dequant_masked_mean_pallas
+from .ref import dequant_masked_mean_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block", "use_kernel", "tile"))
+def dequant_masked_mean(codes: jnp.ndarray, lo: jnp.ndarray,
+                        step: jnp.ndarray,
+                        mask: jnp.ndarray | None = None, *, block: int,
+                        use_kernel: bool = False,
+                        tile: int = 2048) -> jnp.ndarray:
+    """Drop-compensated mean over N peers' dequantized codes.
+
+    codes: (N, S) with S = nblk*block; lo/step: (nblk,) or (nblk, 1)
+    per-block grids; mask: (N, S) arrivals or None. Returns (S,) fp32.
+    """
+    n, length = codes.shape
+    nblk = length // block
+    lo_row = jnp.broadcast_to(lo.reshape(nblk, 1), (nblk, block)).reshape(-1)
+    step_row = jnp.broadcast_to(step.reshape(nblk, 1),
+                                (nblk, block)).reshape(-1)
+    if use_kernel:
+        return dequant_masked_mean_pallas(codes, lo_row, step_row, mask,
+                                          tile=tile,
+                                          interpret=_default_interpret())
+    return dequant_masked_mean_ref(codes, lo_row, step_row, mask)

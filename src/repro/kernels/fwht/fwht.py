@@ -23,11 +23,12 @@ from jax.experimental import pallas as pl
 from .ref import hadamard_matrix, split_factors
 
 
-def _fwht_kernel(x_ref, ha_ref, hb_ref, o_ref, *, rows: int, a: int, b: int):
-    x = x_ref[...].astype(jnp.float32)  # (rows, n)
+def mxu_rotate_block(x, ha, hb, rows: int, a: int, b: int):
+    """The blocked-FWHT body shared by every kernel that rotates: (rows, n)
+    fp32 -> (rows, n) via the two Kronecker-factor MXU matmuls. The fused
+    ht_quant kernels reuse this so there is exactly one copy of the
+    rotation math on the Pallas side."""
     x3 = x.reshape(rows, a, b)
-    hb = hb_ref[...]
-    ha = ha_ref[...]
     t = jax.lax.dot_general(
         x3, hb, (((2,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)          # (rows, a, b)
@@ -35,7 +36,12 @@ def _fwht_kernel(x_ref, ha_ref, hb_ref, o_ref, *, rows: int, a: int, b: int):
     y = jax.lax.dot_general(
         t, ha, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)          # (rows, b, a)
-    y = y.transpose(0, 2, 1).reshape(rows, a * b)
+    return y.transpose(0, 2, 1).reshape(rows, a * b)
+
+
+def _fwht_kernel(x_ref, ha_ref, hb_ref, o_ref, *, rows: int, a: int, b: int):
+    x = x_ref[...].astype(jnp.float32)  # (rows, n)
+    y = mxu_rotate_block(x, ha_ref[...], hb_ref[...], rows, a, b)
     o_ref[...] = y.astype(o_ref.dtype)
 
 
@@ -45,16 +51,7 @@ def _fwht_sign_kernel(x_ref, sign_ref, ha_ref, hb_ref, o_ref, *, rows: int,
     sign = sign_ref[...].astype(jnp.float32)         # (1, n)
     if sign_mode == "pre":
         x = x * sign
-    x3 = x.reshape(rows, a, b)
-    hb = hb_ref[...]
-    ha = ha_ref[...]
-    t = jax.lax.dot_general(
-        x3, hb, (((2,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    y = jax.lax.dot_general(
-        t, ha, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    y = y.transpose(0, 2, 1).reshape(rows, a * b)
+    y = mxu_rotate_block(x, ha_ref[...], hb_ref[...], rows, a, b)
     if sign_mode == "post":
         y = y * sign
     o_ref[...] = y.astype(o_ref.dtype)

@@ -1,0 +1,137 @@
+"""Pallas TPU kernels: fused randomized-Hadamard encode + THC quantization.
+
+The unfused OptiReduce-Q encode path costs three full HBM round trips per
+bucket: FWHT encode (read x, write rotated), per-block amax (read rotated),
+quantize (read rotated + noise, write codes) — the rotated fp32 copy is
+materialized purely to be re-read twice. The fused engine never writes it:
+
+  ht_amax   — sign-flip + blocked MXU FWHT + per-block |.|max in one
+              VMEM-resident pass (reads x once, writes one scalar per block).
+  ht_quant  — sign-flip + blocked MXU FWHT + shared-grid stochastic uniform
+              quantization in one VMEM-resident pass (reads x + noise once,
+              writes uint8 codes). The rotation is recomputed (MXU FLOPs are
+              free next to HBM here), so per bucket the encode side touches
+              HBM exactly twice per input byte instead of four times and
+              emits 1/4 the bytes.
+
+The grids arrive as per-row (= per-Hadamard-block) ``lo``/``step`` operands
+because THC needs them pmax-shared across workers *between* the amax and the
+quantization — that collective is the only thing that cannot fuse.
+
+Each program holds (block_rows, n) of x in VMEM plus the two Kronecker
+factor matrices (H_n = H_a (x) H_b, two dense MXU matmuls — see
+kernels/fwht). VMEM per program (fp32, block_rows=64, n=4096): ~3.2 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fwht.fwht import mxu_rotate_block
+from repro.kernels.fwht.ref import hadamard_matrix, split_factors
+
+
+def _rotate(x, sign, ha, hb, rows: int, a: int, b: int):
+    """sign-flip + blocked FWHT of (rows, n), sharing the fwht kernel's
+    rotation body (single copy of the MXU math on the Pallas side)."""
+    return mxu_rotate_block(x.astype(jnp.float32) * sign, ha, hb, rows, a, b)
+
+
+def _ht_amax_kernel(x_ref, sign_ref, ha_ref, hb_ref, o_ref, *, rows: int,
+                    a: int, b: int):
+    y = _rotate(x_ref[...], sign_ref[...].astype(jnp.float32),
+                ha_ref[...], hb_ref[...], rows, a, b)
+    o_ref[...] = jnp.max(jnp.abs(y), axis=1, keepdims=True)
+
+
+def _ht_quant_kernel(x_ref, sign_ref, noise_ref, lo_ref, step_ref,
+                     ha_ref, hb_ref, o_ref, *, rows: int, a: int, b: int,
+                     levels: int):
+    y = _rotate(x_ref[...], sign_ref[...].astype(jnp.float32),
+                ha_ref[...], hb_ref[...], rows, a, b)
+    u = noise_ref[...].astype(jnp.float32)
+    lo = lo_ref[...]                                 # (rows, 1)
+    step = step_ref[...]                             # (rows, 1)
+    q = jnp.floor((y - lo) / step + u)
+    o_ref[...] = jnp.clip(q, 0, levels).astype(o_ref.dtype)
+
+
+def _factors(n: int):
+    a, b = split_factors(n)
+    return a, b, hadamard_matrix(a), hadamard_matrix(b)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def ht_amax_pallas(x: jnp.ndarray, sign: jnp.ndarray, *,
+                   block_rows: int = 64,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Per-block amax of the rotated blocks. x: (rows, n) -> (rows,) fp32."""
+    if x.ndim != 2:
+        raise ValueError("ht_amax_pallas expects (rows, n)")
+    rows, n = x.shape
+    a, b, ha, hb = _factors(n)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_ht_amax_kernel, rows=br, a=a, b=b),
+        grid=(x.shape[0] // br,),
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((a, a), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], 1), jnp.float32),
+        interpret=interpret,
+    )(x, sign.reshape(1, n).astype(jnp.float32), ha, hb)
+    return out[:rows, 0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "block_rows", "interpret"))
+def ht_quant_pallas(x: jnp.ndarray, sign: jnp.ndarray, noise: jnp.ndarray,
+                    lo: jnp.ndarray, step: jnp.ndarray, *, bits: int = 8,
+                    block_rows: int = 64,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Fused encode: codes = clip(floor((H(d*x) - lo)/step + noise)).
+
+    x/noise: (rows, n); lo/step: (rows,) per-block grid bounds (already
+    pmax-shared across workers). Returns (rows, n) uint8 codes.
+    """
+    if x.ndim != 2 or noise.shape != x.shape:
+        raise ValueError("x and noise must both be (rows, n)")
+    rows, n = x.shape
+    a, b, ha, hb = _factors(n)
+    levels = (1 << bits) - 1
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        noise = jnp.pad(noise, ((0, pad), (0, 0)))
+        lo = jnp.pad(lo.reshape(-1), (0, pad))
+        step = jnp.pad(step.reshape(-1), (0, pad), constant_values=1.0)
+    out = pl.pallas_call(
+        functools.partial(_ht_quant_kernel, rows=br, a=a, b=b, levels=levels),
+        grid=(x.shape[0] // br,),
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((a, a), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.uint8),
+        interpret=interpret,
+    )(x, sign.reshape(1, n).astype(jnp.float32), noise,
+      lo.reshape(-1, 1).astype(jnp.float32),
+      step.reshape(-1, 1).astype(jnp.float32), ha, hb)
+    return out[:rows]

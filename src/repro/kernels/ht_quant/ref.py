@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the fused HT-encode + quantize kernels.
+
+Each oracle composes the existing building blocks (``fwht_mxu_ref`` — the
+same MXU Kronecker math the Pallas kernel runs — and the THC uniform
+quantizer) so the fused kernels have a bit-exact reference: fused output ==
+composed-pipeline output, the parity contract the tests assert.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.fwht.ref import fwht_mxu_ref
+
+
+def ht_rotate_ref(x: jnp.ndarray, sign: jnp.ndarray) -> jnp.ndarray:
+    """sign-flip + blocked FWHT of (rows, n) — the encode rotation."""
+    return fwht_mxu_ref(x.astype(jnp.float32) * sign[None, :])
+
+
+def ht_amax_ref(x: jnp.ndarray, sign: jnp.ndarray) -> jnp.ndarray:
+    """Per-block amax of rotated blocks. (rows, n) -> (rows,) fp32."""
+    return jnp.max(jnp.abs(ht_rotate_ref(x, sign)), axis=1)
+
+
+def ht_quant_ref(x: jnp.ndarray, sign: jnp.ndarray, noise: jnp.ndarray,
+                 lo: jnp.ndarray, step: jnp.ndarray, *,
+                 bits: int) -> jnp.ndarray:
+    """Rotate then quantize onto per-block [lo, lo + levels*step] grids.
+
+    lo/step: (rows,) — already pmax-shared across workers by the caller.
+    """
+    levels = (1 << bits) - 1
+    y = ht_rotate_ref(x, sign)
+    q = jnp.floor((y - lo[:, None]) / step[:, None] + noise)
+    return jnp.clip(q, 0, levels).astype(jnp.uint8)

@@ -18,12 +18,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def compensated_mean_cols(x, m):
+    """Drop-compensated mean over peers for an (N, TILE) slab -> (TILE,).
+    The single copy of the compensation rule on the Pallas side — the fused
+    dequant_reduce kernel reuses it."""
+    cnt = jnp.sum(m, axis=0)                    # (TILE,)
+    s = jnp.sum(x * m, axis=0)                  # (TILE,)
+    return jnp.where(cnt > 0, s / jnp.maximum(cnt, 1.0), 0.0)
+
+
 def _masked_mean_kernel(x_ref, m_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)          # (N, TILE)
     m = m_ref[...].astype(jnp.float32)          # (N, TILE)
-    cnt = jnp.sum(m, axis=0)                    # (TILE,)
-    s = jnp.sum(x * m, axis=0)                  # (TILE,)
-    out = jnp.where(cnt > 0, s / jnp.maximum(cnt, 1.0), 0.0)
+    out = compensated_mean_cols(x, m)
     o_ref[...] = out[None, :].astype(o_ref.dtype)
 
 

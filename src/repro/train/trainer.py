@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.core.allreduce import (OptiReduceConfig, SyncContext,
                                   reduce_scatter_axis, sync_pytree)
@@ -200,6 +201,9 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
 
         # ---- gradient sync: the paper's contribution lives here ----------
+        # sync_pytree builds a static BucketPlan from the local grad shapes
+        # at trace time (free at runtime) and traces ONE strategy body
+        # (lax.scan over the bucket axis) regardless of bucket count
         ctx = SyncContext(cfg=sync_cfg, key=jax.random.fold_in(skey, 7))
         if fsdp:
             # large leaves already reduced via the gather VJP; sync the rest
@@ -254,7 +258,7 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
     def make_step(opt_state_example, batch_example):
         o_specs = opt_specs_like(p_specs, opt_state_example)
         batch_spec = jax.tree.map(lambda _: batch_dim_spec, batch_example)
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             body, mesh=mesh,
             in_specs=(p_specs, o_specs, batch_spec, P(), P()),
             out_specs=(p_specs, o_specs,

@@ -6,7 +6,11 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import settings
+try:
+    from hypothesis import settings
+except ImportError:       # hypothesis absent: profile registration is
+    settings = None       # best-effort; tests fall back to _hypothesis_fallback
 
-settings.register_profile("ci", max_examples=20, deadline=None)
-settings.load_profile("ci")
+if settings is not None:
+    settings.register_profile("ci", max_examples=20, deadline=None)
+    settings.load_profile("ci")

@@ -3,7 +3,10 @@ THC homomorphic roundtrip."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
+try:
+    from hypothesis import given, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, strategies as st
 
 from repro.core.compression import (THCCompressed, terngrad_compress,
                                     thc_compress, thc_decompress_sum,

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+try:
+    from hypothesis import given, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, strategies as st
 
 from repro.core.drops import (bernoulli_mask, loss_fraction, make_mask,
                               straggler_mask, tail_mask)

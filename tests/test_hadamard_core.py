@@ -3,7 +3,10 @@ drop-dispersal (Fig 9 property)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
+try:
+    from hypothesis import given, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, strategies as st
 
 from repro.core.hadamard import ht_decode, ht_encode, rademacher_sign
 

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+try:
+    from hypothesis import given, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, strategies as st
 
 from repro.kernels.fwht import (fwht, fwht_mxu_ref, fwht_ref,
                                 hadamard_matrix, randomized_fwht)
