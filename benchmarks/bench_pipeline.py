@@ -34,9 +34,9 @@ from .common import Rows
 BUCKET = 4096
 
 
-def _build(fn, nbuckets: int):
+def _build(fn, nbuckets: int, strategy: str = "optireduce"):
     mesh = make_mesh((1,), ("data",))
-    cfg = OptiReduceConfig(strategy="optireduce", drop_rate=0.0,
+    cfg = OptiReduceConfig(strategy=strategy, drop_rate=0.0,
                            hadamard_block=256)
     tree = {"g": jnp.zeros((nbuckets * BUCKET,), jnp.float32)}
     spec = {"g": P()}
@@ -50,8 +50,8 @@ def _build(fn, nbuckets: int):
     return f, tree
 
 
-def _measure(fn, nbuckets: int, reps: int):
-    f, tree = _build(fn, nbuckets)
+def _measure(fn, nbuckets: int, reps: int, strategy: str = "optireduce"):
+    f, tree = _build(fn, nbuckets, strategy)
     t0 = time.perf_counter()
     lowered = f.lower(tree)
     trace_ms = (time.perf_counter() - t0) * 1e3
@@ -93,6 +93,18 @@ def run(quick: bool = True) -> Rows:
         rows.add("pipeline/per_bucket_overhead_reduction_pct",
                  100.0 * (1 - slopes["fused"] / slopes["unfused"]),
                  "fused vs seed loop (higher is better)")
+    # composable-pipeline specs: the same fused engine over other registry
+    # entries (the quantized exchange and a register_strategy'd composition)
+    # — tracks the trace/steady cost of the Topology x Transport x Codec
+    # dispatch vs the plain optireduce spec above
+    b_spec = 4
+    for strat in ("optireduce_q", "optireduce_rounds"):
+        trace_ms, hlo_kb, steady_us = _measure(sync_pytree, b_spec, reps,
+                                               strategy=strat)
+        rows.add(f"pipeline/spec_{strat}_B{b_spec}_trace_ms", trace_ms,
+                 "trace+lower host time, fused engine")
+        rows.add(f"pipeline/spec_{strat}_B{b_spec}_steady_us", steady_us,
+                 f"wall us/call, {reps} reps")
     return rows
 
 

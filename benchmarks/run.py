@@ -5,13 +5,22 @@ Prints ``name,value,derived`` CSV rows (plus section comments).
   python -m benchmarks.run            # quick mode (CI-sized)
   python -m benchmarks.run --full     # paper-sized sweeps
   python -m benchmarks.run --only bench_tta
+
+Every module's rows are validated against a small schema (machine-readable
+row keys, finite numeric values, non-empty) and JSON-serialized modules are
+additionally diffed against the previous BENCH_*.json of the same sweep
+mode — a key that disappears is a regression-breaking shape change and the
+suite exits non-zero (the perf trajectory across PRs is diffed mechanically;
+see PERF.md).
 """
 from __future__ import annotations
 
 import argparse
 import importlib
 import json
+import math
 import os
+import re
 import sys
 import time
 
@@ -33,6 +42,31 @@ JSON_MODULES = {"bench_pipeline": "BENCH_pipeline.json"}
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# machine-readable row keys: a path-like identifier, no spaces/commas (the
+# CSV/JSON consumers split on them)
+_KEY_RE = re.compile(r"^[A-Za-z0-9_][A-Za-z0-9_/.:+-]*$")
+
+
+class BenchSchemaError(RuntimeError):
+    """A bench emitted rows that downstream tooling cannot consume."""
+
+
+def _validate_rows(name: str, rows) -> None:
+    """Schema gate on a module's emitted rows (see module docstring)."""
+    if not getattr(rows, "rows", None):
+        raise BenchSchemaError(f"{name}: emitted no rows")
+    for key, value, derived in rows.rows:
+        if not isinstance(key, str) or not _KEY_RE.match(key):
+            raise BenchSchemaError(
+                f"{name}: row key {key!r} is not machine-readable "
+                f"(must match {_KEY_RE.pattern})")
+        if not isinstance(value, (int, float)) or not math.isfinite(value):
+            raise BenchSchemaError(
+                f"{name}: row {key!r} value {value!r} is not a finite number")
+        if not isinstance(derived, str):
+            raise BenchSchemaError(
+                f"{name}: row {key!r} derived field must be a string")
+
 
 def _write_json(name: str, rows, *, full: bool) -> None:
     path = os.path.join(_REPO_ROOT, JSON_MODULES[name])
@@ -41,6 +75,30 @@ def _write_json(name: str, rows, *, full: bool) -> None:
     # different key sets / rep counts and must not be diffed against each
     # other across PRs
     payload["_meta"] = {"mode": "full" if full else "quick", "bench": name}
+    previous = None
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                previous = json.load(fh)
+        except (OSError, json.JSONDecodeError):
+            previous = None
+    # shape-regression gate: same-mode reruns may add keys but never lose
+    # them (PR-over-PR diffs would silently stop covering the lost rows).
+    # On regression the previous file stays the baseline (so a rerun cannot
+    # self-accept the shrunken key set) and the offending payload goes to a
+    # .rejected.json side file for inspection.
+    if previous and previous.get("_meta", {}).get("mode") == \
+            payload["_meta"]["mode"]:
+        missing = sorted(set(previous) - set(payload) - {"_meta"})
+        if missing:
+            rejected = path + ".rejected.json"
+            with open(rejected, "w") as fh:
+                json.dump(payload, fh, indent=2, sort_keys=True)
+                fh.write("\n")
+            raise BenchSchemaError(
+                f"{name}: keys disappeared from {JSON_MODULES[name]} "
+                f"vs the previous {payload['_meta']['mode']} sweep: "
+                f"{missing[:8]} (payload kept at {rejected})")
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)
         fh.write("\n")
@@ -61,6 +119,8 @@ def main(argv=None) -> int:
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             rows = mod.run(quick=not args.full)
+            if rows is not None:
+                _validate_rows(name, rows)
             if name in JSON_MODULES and rows is not None:
                 _write_json(name, rows, full=args.full)
         except Exception as e:  # keep the suite going

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke
-from repro.core.allreduce import OptiReduceConfig
+from repro.core import OptiReduceConfig, strategies
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params
@@ -28,10 +28,14 @@ from repro.train.trainer import TrainConfig, build_train_step
 
 def main():
     steps = int(os.environ.get("QUICKSTART_STEPS", 200))
+    # any registered Topology x Transport x Codec composition works here —
+    # see repro.core.pipeline.register_strategy for adding your own
+    strategy = os.environ.get("QUICKSTART_STRATEGY", "optireduce")
+    print(f"strategy={strategy} (registered: {', '.join(strategies())})")
     cfg = get_smoke("gpt2-paper")
     mesh = make_host_mesh(dp=1, tp=1)
     tc = TrainConfig(
-        sync=OptiReduceConfig(strategy="optireduce", drop_rate=0.01,
+        sync=OptiReduceConfig(strategy=strategy, drop_rate=0.01,
                               drop_pattern="tail", hadamard_block=1024),
         optimizer=OptimizerConfig(name="adamw", lr=3e-3),
         dp_mode="replicated", seq_chunk=64)

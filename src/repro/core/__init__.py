@@ -1,14 +1,23 @@
 """OptiReduce core: the paper's contribution as composable JAX modules."""
-from .allreduce import (OptiReduceConfig, SyncContext, strategies,
-                        sync_bucket, sync_pytree, sync_pytree_unfused)
+from .allreduce import (OptiReduceConfig, SyncContext, reduce_scatter_axis,
+                        strategies, sync_bucket, sync_pytree,
+                        sync_pytree_unfused)
 from .bucket_plan import BucketPlan
 from .hadamard import ht_decode, ht_encode, rademacher_sign
+from .pipeline import (AdaptiveTransport, Codec, CollectiveSpec, Hadamard,
+                       HTQuant, Identity, Lossy, PsumTopology, Reliable,
+                       RingTopology, TarTopology, Topology, register_strategy,
+                       resolve_spec, strategy_names)
 from .safeguards import LossMonitor, guard_update
 from .ubt import AdaptiveTimeout, DynamicIncast, TimelyRateControl, UbtState
 
 __all__ = [
     "OptiReduceConfig", "SyncContext", "strategies", "sync_bucket",
-    "sync_pytree", "sync_pytree_unfused", "BucketPlan",
+    "sync_pytree", "sync_pytree_unfused", "reduce_scatter_axis", "BucketPlan",
+    "CollectiveSpec", "register_strategy", "resolve_spec", "strategy_names",
+    "Topology", "PsumTopology", "RingTopology", "TarTopology",
+    "Reliable", "Lossy", "AdaptiveTransport",
+    "Codec", "Identity", "Hadamard", "HTQuant",
     "ht_decode", "ht_encode", "rademacher_sign",
     "LossMonitor", "guard_update", "AdaptiveTimeout", "DynamicIncast",
     "TimelyRateControl", "UbtState",

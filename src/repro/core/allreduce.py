@@ -1,9 +1,27 @@
-"""Gradient-sync strategy registry — OptiReduce as a first-class feature.
+"""Gradient-sync entrypoints over the composable collective pipeline.
 
-Every strategy is a function ``(bucket, ctx) -> bucket`` mapping a flat
-per-worker gradient bucket to its (approximate) mean over the data-parallel
-axis/axes, callable inside a ``shard_map`` body. The trainer and the dry-run
-select strategies by name:
+The strategy implementations live in :mod:`repro.core.pipeline`: every named
+strategy is a :class:`~repro.core.pipeline.CollectiveSpec` composing three
+orthogonal protocols — a **Topology** (psum / ring / tree / bcube / TAR with
+all_to_all or explicit round schedules, 1D or hierarchical 2D pod×data), a
+**Transport** (``Reliable``, ``Lossy`` = the UBT drop model + stats,
+``AdaptiveTransport`` = the §3.2 controllers picking next-step codec/incast),
+and a **Codec** (``Identity``, ``Hadamard``, ``HTQuant`` shared-grid
+quantization, kernel-dispatched under ``cfg.use_kernels``).  See DESIGN.md
+§3 for the layering and the strategy-author migration notes.
+
+This module keeps the stable, config-driven surface:
+
+  ``OptiReduceConfig`` / ``SyncContext``  — static knobs + per-step context
+  ``sync_bucket``        — one flat bucket through the resolved spec
+  ``sync_pytree``        — the fused BucketPlan engine (scan/vmap over a
+                           packed (B, bucket_elems) batch)
+  ``sync_pytree_unfused``— the seed bucketing loop, kept as the bitwise
+                           parity oracle for the ``parity`` test suite
+  ``reduce_scatter_axis``— the FSDP/ZeRO reduction (deferred stage 2),
+                           resolved to a TAR spec with the rs-specific codec
+
+Built-in strategy names (``strategies()``):
 
   psum        — XLA's native all-reduce (what a stock JAX program does)
   gloo_ring   — explicit ring reduce-scatter + all-gather (Gloo Ring)
@@ -13,293 +31,52 @@ select strategies by name:
   tar_rounds  — TAR with the paper's explicit round schedule (ppermute form)
   optireduce  — TAR + UBT drop model + compensated reduce + randomized HT
   optireduce_2d — hierarchical 2D TAR across (pod, data) for multi-pod meshes
+  optireduce_q — TAR with THC-quantized shard exchange (beyond-paper)
+  optireduce_rounds / tar_rounds_q / ring_ht — registered cross-product
+                compositions (see pipeline.register_strategy)
 
-OptiReduce pipeline (one bucket):
-  pad -> HT encode (Pallas FWHT) -> all_to_all -> masked compensated mean
-  (Pallas masked_sum) -> all_gather -> HT decode -> unpad
 Drops are applied on stage 1 only by default (the aggregated shard is then
 authoritative and every replica receives identical bytes from the broadcast,
 keeping replicas consistent; see DESIGN §2).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 
-from repro import compat
-
-from . import drops as drops_lib
-from . import ring as ring_lib
-from . import tar as tar_lib
 from .bucket_plan import BucketPlan
-from .hadamard import ht_decode, ht_encode, ht_encode_amax, ht_encode_quant
-from repro.kernels.dequant_reduce import dequant_masked_mean
+from .pipeline import (CollectiveSpec, Hadamard, HTQuant, Identity, Lossy,
+                       OptiReduceConfig, Reliable, SyncContext, TarTopology,
+                       register_strategy, resolve_spec, strategy_names)
 
-
-@dataclasses.dataclass(frozen=True)
-class OptiReduceConfig:
-    """Static (hashable) configuration for gradient sync."""
-    strategy: str = "optireduce"
-    data_axis: str = "data"
-    pod_axis: str | None = None          # set for multi-pod meshes
-    # UBT drop model (stand-in for timeouts/loss on a lossy fabric)
-    drop_rate: float = 0.0
-    drop_pattern: str = "tail"           # bernoulli | tail | straggler
-    packet_elems: int = 256
-    # Hadamard transform
-    use_hadamard: bool = True
-    hadamard_block: int = 4096
-    # kernels: use Pallas (TPU) or the jnp MXU-form (identical math)
-    use_kernels: bool = False
-    # safeguards
-    skip_threshold: float = 0.10
-    # round-form incast (tar_rounds only)
-    incast: int = 1
-    # quantized TAR exchange (optireduce_q): THC-style shared-grid uniform
-    # stochastic quantization of the HT-rotated shards — beyond-paper
-    # optimization (the paper notes THC is orthogonal); cuts the wire bytes
-    # of both TAR stages by 32/quant_bits
-    quant_bits: int = 8
-    # quantize the FSDP gradient reduce-scatter wire to this many bits
-    # (0 = native dtype). Per-Hadamard-block grids, pmax-shared; §Perf H2.
-    rs_wire_bits: int = 0
-
-
-@dataclasses.dataclass
-class SyncContext:
-    """Per-step dynamic context threaded into the strategy."""
-    cfg: OptiReduceConfig
-    key: jax.Array                        # replicated per-step PRNG key
-    stats: dict = dataclasses.field(default_factory=dict)
-
-    def data_axes(self) -> tuple[str, ...]:
-        if self.cfg.pod_axis is not None:
-            return (self.cfg.pod_axis, self.cfg.data_axis)
-        return (self.cfg.data_axis,)
-
-    def loss_fraction(self) -> jnp.ndarray:
-        """Observed entry-loss fraction this step, pmean'd across receivers
-        (what the §3.4 safeguards and the UBT controller monitor)."""
-        if "total" not in self.stats:
-            return jnp.zeros(())
-        frac = self.stats["dropped"] / jnp.maximum(self.stats["total"], 1.0)
-        return jax.lax.pmean(frac, self.data_axes())
-
-
-def _mask_for(ctx: SyncContext, n: int, s: int, axis: str) -> jnp.ndarray | None:
-    """Receiver-specific (N, S) arrival mask for TAR stage 1."""
-    cfg = ctx.cfg
-    if cfg.drop_rate <= 0.0:
-        return None
-    me = jax.lax.axis_index(axis)
-    key = jax.random.fold_in(ctx.key, me)
-    return drops_lib.make_mask(cfg.drop_pattern, key, n, s,
-                               rate=cfg.drop_rate,
-                               packet_elems=cfg.packet_elems,
-                               self_index=me)
-
-
-# ----------------------------------------------------------------- strategies
-def _psum(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
-    return jax.lax.pmean(bucket, ctx.data_axes())
-
-
-def _gloo_ring(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
-    n = compat.axis_size(ctx.cfg.data_axis)
-    x, length = tar_lib.pad_for_tar(bucket, n)
-    out = ring_lib.ring_allreduce(x, ctx.cfg.data_axis)
-    if ctx.cfg.pod_axis is not None:
-        out = jax.lax.pmean(out, ctx.cfg.pod_axis)
-    return out[:length]
-
-
-def _nccl_tree(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
-    n = compat.axis_size(ctx.cfg.data_axis)
-    x, length = tar_lib.pad_for_tar(bucket, n)
-    out = ring_lib.tree_allreduce(x, ctx.cfg.data_axis)
-    if ctx.cfg.pod_axis is not None:
-        out = jax.lax.pmean(out, ctx.cfg.pod_axis)
-    return out[:length]
-
-
-def _bcube(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
-    n = compat.axis_size(ctx.cfg.data_axis)
-    base = 4 if n % 4 == 0 else 2
-    x, length = tar_lib.pad_for_tar(bucket, n)
-    out = ring_lib.bcube_allreduce(x, ctx.cfg.data_axis, base=base)
-    if ctx.cfg.pod_axis is not None:
-        out = jax.lax.pmean(out, ctx.cfg.pod_axis)
-    return out[:length]
-
-
-def _tar_tcp(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
-    """Reliable TAR (no drops, no HT) — the paper's TAR+TCP baseline."""
-    n = compat.axis_size(ctx.cfg.data_axis)
-    x, length = tar_lib.pad_for_tar(bucket, n)
-    if ctx.cfg.pod_axis is not None:
-        out = tar_lib.tar_allreduce_2d(x, ctx.cfg.data_axis, ctx.cfg.pod_axis,
-                                       use_kernel=ctx.cfg.use_kernels)
-    else:
-        out = tar_lib.tar_allreduce(x, ctx.cfg.data_axis,
-                                    use_kernel=ctx.cfg.use_kernels)
-    return out[:length]
-
-
-def _tar_rounds(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
-    n = compat.axis_size(ctx.cfg.data_axis)
-    x, length = tar_lib.pad_for_tar(bucket, n)
-    out = tar_lib.tar_allreduce_rounds(x, ctx.cfg.data_axis,
-                                       incast=ctx.cfg.incast)
-    if ctx.cfg.pod_axis is not None:
-        out = jax.lax.pmean(out, ctx.cfg.pod_axis)
-    return out[:length]
-
-
-def _optireduce(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
-    """The paper's system: TAR + UBT drop model + HT + compensated reduce."""
-    cfg = ctx.cfg
-    axis = cfg.data_axis
-    n = compat.axis_size(axis)
-    block = cfg.hadamard_block if cfg.use_hadamard else 1
-    x, length = tar_lib.pad_for_tar(bucket, n, block)
-    if cfg.use_hadamard:
-        x = ht_encode(x, ctx.key, block=block, use_kernel=cfg.use_kernels)
-    s = x.shape[0] // n
-    mask = _mask_for(ctx, n, s, axis)
-    if mask is not None:
-        ctx.stats["dropped"] = ctx.stats.get("dropped", 0.0) + \
-            jnp.sum(1.0 - mask)
-        ctx.stats["total"] = ctx.stats.get("total", 0.0) + mask.size
-    if cfg.pod_axis is not None:
-        out = tar_lib.tar_allreduce_2d(x, axis, cfg.pod_axis, mask=mask,
-                                       use_kernel=cfg.use_kernels)
-    else:
-        out = tar_lib.tar_allreduce(x, axis, mask=mask,
-                                    use_kernel=cfg.use_kernels)
-    if cfg.use_hadamard:
-        out = ht_decode(out, ctx.key, block=block, use_kernel=cfg.use_kernels)
-    return out[:length]
-
-
-def _optireduce_q(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
-    """OptiReduce with THC-quantized shard exchange (beyond-paper §Perf).
-
-    Pipeline: HT encode -> per-Hadamard-block uniform stochastic quantize
-    -> all_to_all uint8 codes -> dequantize + drop-compensated mean ->
-    all_gather aggregate codes -> dequant -> HT decode.
-
-    The per-block [−amax_b, amax_b] grids are pmax'd across workers, so
-    every node derives identical grids locally (no scale exchange) and the
-    codes are homomorphic — the THC property, made cheap by the rotation
-    (rotated blocks are near-Gaussian with comparable scales). Wire bytes:
-    quant_bits/16 of the bf16 exchange.
-
-    Under ``use_kernels`` the encode side runs the fused engine
-    (kernels/ht_quant): a rotate-and-amax pass for the grids, then one
-    sign+FWHT+quantize pass emitting uint8 — the rotated fp32 bucket is
-    never written to HBM. The receive side fuses dequant with the
-    drop-compensated mean (kernels/dequant_reduce), so no (N, S) float32
-    intermediate exists either. The jnp path below is the parity oracle
-    (identical math, same RNG draws).
-    """
-    cfg = ctx.cfg
-    axis = cfg.data_axis
-    n = compat.axis_size(axis)
-    block = cfg.hadamard_block
-    levels = (1 << cfg.quant_bits) - 1
-    x, length = tar_lib.pad_for_tar(bucket, n, block)
-    if cfg.use_kernels:
-        amax = ht_encode_amax(x, ctx.key, block=block, use_kernel=True)
-        xb = None                         # rotated bucket never materialized
-    else:
-        x = ht_encode(x, ctx.key, block=block, use_kernel=False)
-        xb = x.reshape(-1, block)
-        amax = jnp.max(jnp.abs(xb), axis=1)
-    amax = jax.lax.pmax(amax, axis)
-    if cfg.pod_axis is not None:
-        amax = jax.lax.pmax(amax, cfg.pod_axis)
-    amax = jnp.maximum(amax, 1e-12)
-    step = 2.0 * amax / levels                          # (nblocks,)
-    lo = -amax
-
-    s = x.shape[0] // n
-    noise = jax.random.uniform(jax.random.fold_in(ctx.key, 3),
-                               (x.shape[0] // block, block))
-    if cfg.use_kernels:
-        codes = ht_encode_quant(x, ctx.key, noise, lo, step, block=block,
-                                bits=cfg.quant_bits,
-                                use_kernel=True).reshape(n, s)
-    else:
-        q = jnp.floor((xb - lo[:, None]) / step[:, None] + noise)
-        codes = jnp.clip(q, 0, levels).astype(jnp.uint8).reshape(n, s)
-    received = jax.lax.all_to_all(codes, axis, split_axis=0, concat_axis=0,
-                                  tiled=True)
-    # this receiver's shard spans blocks [i*s/block, (i+1)*s/block)
-    i = jax.lax.axis_index(axis)
-    nblk_shard = s // block
-    my_lo = jax.lax.dynamic_slice_in_dim(lo, i * nblk_shard, nblk_shard, 0)
-    my_step = jax.lax.dynamic_slice_in_dim(step, i * nblk_shard,
-                                           nblk_shard, 0)
-    mask = _mask_for(ctx, n, s, axis)
-    if mask is not None:
-        ctx.stats["dropped"] = ctx.stats.get("dropped", 0.0) + \
-            jnp.sum(1.0 - mask)
-        ctx.stats["total"] = ctx.stats.get("total", 0.0) + mask.size
-    if cfg.use_kernels:
-        own = dequant_masked_mean(received, my_lo, my_step, mask,
-                                  block=block, use_kernel=True)
-    else:
-        vals = (received.reshape(n, nblk_shard, block).astype(jnp.float32)
-                * my_step[None, :, None] + my_lo[None, :, None]
-                ).reshape(n, s)
-        own = tar_lib._reduce(vals, mask, cfg.use_kernels)
-    if cfg.pod_axis is not None:
-        own = jax.lax.pmean(own, cfg.pod_axis)
-    # stage 2: broadcast the aggregate, also quantized on the same grids
-    ob = own.reshape(nblk_shard, block)
-    oq = jnp.clip(jnp.floor((ob - my_lo[:, None]) / my_step[:, None] +
-                            jax.random.uniform(jax.random.fold_in(ctx.key, 4),
-                                               ob.shape)),
-                  0, levels).astype(jnp.uint8)
-    all_codes = jax.lax.all_gather(oq.reshape(s), axis, axis=0, tiled=True)
-    out = (all_codes.reshape(-1, block).astype(jnp.float32) * step[:, None]
-           + lo[:, None]).reshape(-1)
-    out = ht_decode(out, ctx.key, block=block, use_kernel=cfg.use_kernels)
-    return out[:length]
-
-
-_STRATEGIES: dict[str, Callable] = {
-    "psum": _psum,
-    "gloo_ring": _gloo_ring,
-    "nccl_tree": _nccl_tree,
-    "bcube": _bcube,
-    "tar_tcp": _tar_tcp,
-    "tar_rounds": _tar_rounds,
-    "optireduce": _optireduce,
-    "optireduce_2d": _optireduce,   # pod_axis in cfg drives the 2D path
-    "optireduce_q": _optireduce_q,  # quantized exchange (beyond-paper)
-}
+__all__ = [
+    "OptiReduceConfig", "SyncContext", "CollectiveSpec", "register_strategy",
+    "resolve_spec", "strategies", "sync_bucket", "sync_pytree",
+    "sync_pytree_unfused", "reduce_scatter_axis",
+]
 
 
 def strategies() -> tuple[str, ...]:
-    return tuple(_STRATEGIES)
+    """Registered strategy names (see pipeline.register_strategy)."""
+    return strategy_names()
 
 
-def sync_bucket(bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
-    """Reduce one flat bucket to its (approximate) DP mean."""
-    try:
-        fn = _STRATEGIES[ctx.cfg.strategy]
-    except KeyError:
-        raise ValueError(
-            f"unknown strategy {ctx.cfg.strategy!r}; one of {strategies()}")
-    return fn(bucket, ctx)
+def sync_bucket(bucket: jnp.ndarray, ctx: SyncContext,
+                spec: CollectiveSpec | None = None) -> jnp.ndarray:
+    """Reduce one flat bucket to its (approximate) DP mean.
+
+    Resolves ``ctx.cfg.strategy`` through the spec registry unless an
+    explicit ``spec`` is given (e.g. an unregistered composition or one
+    holding a stateful :class:`~repro.core.pipeline.AdaptiveTransport`).
+    """
+    if spec is None:
+        spec = resolve_spec(ctx.cfg)
+    return spec.all_reduce(bucket, ctx)
 
 
 def sync_pytree(grads, ctx: SyncContext, *, bucket_elems: int = 6_553_600,
-                plan: BucketPlan | None = None, mode: str = "scan"):
+                plan: BucketPlan | None = None, mode: str = "scan",
+                spec: CollectiveSpec | None = None):
     """Sync a gradient pytree via fixed-size buckets (PyTorch uses 25 MB
     buckets == 6.55M fp32 entries; same default here).
 
@@ -316,6 +93,8 @@ def sync_pytree(grads, ctx: SyncContext, *, bucket_elems: int = 6_553_600,
     """
     if mode not in ("scan", "vmap"):
         raise ValueError(f"unknown sync_pytree mode {mode!r}")
+    if spec is None:
+        spec = resolve_spec(ctx.cfg)
     if plan is None:
         plan = BucketPlan.for_tree(grads, bucket_elems)
     batch = plan.pack(grads)                         # (B, bucket_elems)
@@ -326,7 +105,7 @@ def sync_pytree(grads, ctx: SyncContext, *, bucket_elems: int = 6_553_600,
         nonlocal recorded
         stats: dict = {}
         out = sync_bucket(bucket, SyncContext(cfg=ctx.cfg, key=key,
-                                              stats=stats))
+                                              stats=stats), spec=spec)
         recorded = recorded or ("total" in stats)
         return out, (stats.get("dropped", jnp.zeros(())),
                      stats.get("total", jnp.zeros(())))
@@ -356,6 +135,7 @@ def sync_pytree_unfused(grads, ctx: SyncContext, *,
     """The seed bucketing loop — kept as the parity oracle for
     :func:`sync_pytree`: flatten leaves, slice fixed-size buckets, trace the
     strategy pipeline once per bucket (O(#buckets) HLO)."""
+    spec = resolve_spec(ctx.cfg)
     leaves, treedef = jax.tree.flatten(grads)
     sizes = [leaf.size for leaf in leaves]
     flat = jnp.concatenate([leaf.reshape(-1).astype(jnp.float32)
@@ -368,7 +148,7 @@ def sync_pytree_unfused(grads, ctx: SyncContext, *,
         end = min(start + bucket_elems, total)
         sub = jax.random.fold_in(ctx.key, bucket_idx)
         bucket_ctx = SyncContext(cfg=ctx.cfg, key=sub, stats=ctx.stats)
-        out_parts.append(sync_bucket(flat[start:end], bucket_ctx))
+        out_parts.append(sync_bucket(flat[start:end], bucket_ctx, spec=spec))
         start = end
         bucket_idx += 1
     synced = jnp.concatenate(out_parts) if len(out_parts) > 1 else out_parts[0]
@@ -381,6 +161,29 @@ def sync_pytree_unfused(grads, ctx: SyncContext, *,
     return jax.tree.unflatten(treedef, new_leaves)
 
 
+def rs_spec(cfg: OptiReduceConfig, *, with_drops: bool = True) -> CollectiveSpec:
+    """The reduce-scatter spec for a config: TAR stage 1 with the rs codec.
+
+    Codec selection mirrors the bucketed strategies but with the rs knobs:
+    ``rs_wire_bits`` picks the shared-grid quantizer (rotation implied —
+    quantization needs it), otherwise the Hadamard rotation rides along only
+    when drops are live (``with_drops`` and a positive ``drop_rate``).  The
+    quantizer draws its stochastic-rounding noise from fold_in(key, 9) so
+    the rs wire never correlates with the bucketed stage-1 draws.
+    """
+    quant = cfg.rs_wire_bits
+    use_ht = (with_drops and cfg.use_hadamard and cfg.drop_rate > 0) or \
+        bool(quant)                                     # quant needs rotation
+    if quant:
+        codec = HTQuant(bits=quant, noise_salt=9)
+    elif use_ht:
+        codec = Hadamard()
+    else:
+        codec = Identity()
+    return CollectiveSpec(TarTopology(), Lossy() if with_drops else Reliable(),
+                          codec)
+
+
 def reduce_scatter_axis(g: jnp.ndarray, axis: str, dim: int,
                         ctx: SyncContext, *,
                         with_drops: bool = True) -> jnp.ndarray:
@@ -391,83 +194,5 @@ def reduce_scatter_axis(g: jnp.ndarray, axis: str, dim: int,
     g: full tensor; returns the local shard (dim size / axis size) holding
     the drop-compensated mean over the axis peers.
     """
-    cfg = ctx.cfg
-    n = compat.axis_size(axis)
-    g2 = jnp.moveaxis(g, dim, 0)
-    lead = g2.shape[0]
-    rest = g2.shape[1:]
-    assert lead % n == 0, (lead, n)
-    # keep the wire dtype (bf16 grads stay bf16): halves collective bytes
-    # and the per-layer transients; the masked reduction and the FWHT both
-    # accumulate in fp32 internally
-    rows = g2.reshape(n, -1)                           # row j -> shard j
-    row_len = rows.shape[1]
-    quant = cfg.rs_wire_bits
-    use_ht = (with_drops and cfg.use_hadamard and cfg.drop_rate > 0) or \
-        bool(quant)                                     # quant needs rotation
-    block = cfg.hadamard_block if use_ht else 1
-    pad = (-row_len) % block
-    if pad:
-        rows = jnp.pad(rows, ((0, 0), (0, pad)))
-    # fused engine (kernels/ht_quant): when quantizing with kernels enabled,
-    # the rotation never materializes — a rotate+amax pass derives the
-    # grids, then one sign+FWHT+quantize pass emits the wire codes
-    fused_q = bool(quant) and cfg.use_kernels
-    if use_ht and not fused_q:
-        rows = ht_encode(rows.reshape(-1), ctx.key, block=block,
-                         use_kernel=cfg.use_kernels).reshape(rows.shape)
-    if quant:
-        # per-block shared grids (pmax over the axis): int codes on the wire
-        levels = (1 << quant) - 1
-        if fused_q:
-            amax = ht_encode_amax(rows.reshape(-1), ctx.key, block=block,
-                                  use_kernel=True)
-        else:
-            amax = jnp.max(jnp.abs(rows.reshape(-1, block)), axis=1)
-        amax = jnp.maximum(jax.lax.pmax(amax, axis), 1e-12)
-        step_b = 2.0 * amax / levels                    # (nblocks,)
-        lo_b = -amax
-        u = jax.random.uniform(jax.random.fold_in(ctx.key, 9),
-                               (rows.size // block, block))
-        if fused_q:
-            codes = ht_encode_quant(rows.reshape(-1), ctx.key, u, lo_b,
-                                    step_b, block=block, bits=quant,
-                                    use_kernel=True).reshape(rows.shape)
-        else:
-            rb = rows.reshape(-1, block)
-            codes = jnp.clip(jnp.floor((rb.astype(jnp.float32)
-                                        - lo_b[:, None]) / step_b[:, None]
-                                       + u), 0, levels).astype(jnp.uint8)
-            codes = codes.reshape(rows.shape)
-        received = jax.lax.all_to_all(codes, axis, split_axis=0,
-                                      concat_axis=0, tiled=True)
-        i = jax.lax.axis_index(axis)
-        nblk = rows.shape[1] // block
-        my_lo = jax.lax.dynamic_slice_in_dim(lo_b, i * nblk, nblk, 0)
-        my_step = jax.lax.dynamic_slice_in_dim(step_b, i * nblk, nblk, 0)
-        mask = (_mask_for(ctx, n, received.shape[1], axis)
-                if with_drops else None)
-        if cfg.use_kernels:
-            own = dequant_masked_mean(received, my_lo, my_step, mask,
-                                      block=block, use_kernel=True)
-        else:
-            vals = (received.reshape(n, nblk, block).astype(jnp.float32)
-                    * my_step[None, :, None] + my_lo[None, :, None]
-                    ).reshape(n, -1)
-            own = tar_lib._reduce(vals, mask, cfg.use_kernels)
-    else:
-        received = jax.lax.all_to_all(rows, axis, split_axis=0,
-                                      concat_axis=0, tiled=True)
-        mask = (_mask_for(ctx, n, received.shape[1], axis)
-                if with_drops else None)
-        own = tar_lib._reduce(received, mask, cfg.use_kernels)
-    if mask is not None:
-        ctx.stats["dropped"] = ctx.stats.get("dropped", 0.0) + \
-            jnp.sum(1.0 - mask)
-        ctx.stats["total"] = ctx.stats.get("total", 0.0) + mask.size
-    if use_ht:
-        own = ht_decode(own, ctx.key, block=block, use_kernel=cfg.use_kernels)
-    if pad:
-        own = own[:row_len]
-    out = own.reshape((lead // n,) + rest)
-    return jnp.moveaxis(out, 0, dim)
+    return rs_spec(ctx.cfg, with_drops=with_drops).reduce_scatter(
+        g, axis, dim, ctx)

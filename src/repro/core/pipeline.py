@@ -1,0 +1,637 @@
+"""Composable collective pipeline: Topology × Transport × Codec (DESIGN §3).
+
+OptiReduce is inherently layered — a transpose topology (TAR, §3.1), an
+unreliable bounded transport (UBT, §3.2), and accuracy-preserving codecs
+(randomized Hadamard §3.3, THC-style quantization) — and each axis varies
+independently of the others (StragglAR swaps only the schedule; loss-bound
+policies swap only the transport).  This module makes every gradient-sync
+strategy a :class:`CollectiveSpec` composing three orthogonal protocols:
+
+  Topology  — who exchanges with whom and in what schedule:
+              :class:`PsumTopology` (XLA native), :class:`RingTopology`
+              (ring / recursive-halving tree / bcube), :class:`TarTopology`
+              (all_to_all or the paper's explicit round schedule;
+              hierarchical 2D over a ``pod`` axis).
+  Transport — what arrives: :class:`Reliable` (everything),
+              :class:`Lossy` (the UBT drop-mask model + loss stats), and
+              :class:`AdaptiveTransport` (the §3.2 controllers in the loop:
+              observed loss feeds ``AdaptiveTimeout.hadamard_active`` and
+              ``DynamicIncast`` to pick next-step codec/incast).
+  Codec     — what goes on the wire: :class:`Identity`, :class:`Hadamard`
+              (blockwise randomized HT), :class:`HTQuant` (shared-grid
+              uniform stochastic quantization of the rotated blocks — the
+              single implementation both the bucketed strategies and the
+              FSDP ``reduce_scatter`` use, kernel-dispatched under
+              ``cfg.use_kernels``).
+
+A strategy *name* resolves through a registry of named specs; new
+compositions are one-liners::
+
+    register_strategy("ring_ht",
+                      CollectiveSpec(RingTopology("ring"), Reliable(),
+                                     Hadamard()))
+
+or, for cfg-dependent composition, a decorated factory::
+
+    @register_strategy("my_strategy")
+    def _spec(cfg):
+        return CollectiveSpec(TarTopology(), Lossy(),
+                              Hadamard() if cfg.use_hadamard else Identity())
+
+``core.allreduce`` keeps the stable entrypoints (``sync_bucket``,
+``sync_pytree``, ``reduce_scatter_axis``) as thin wrappers that resolve to
+specs; every pre-existing strategy name is bitwise-identical to the seed
+monolithic implementations (the ``parity`` pytest suite pins this against
+the ``sync_pytree_unfused`` oracle).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+
+from . import drops as drops_lib
+from . import ring as ring_lib
+from . import tar as tar_lib
+from .hadamard import ht_decode, ht_encode, ht_encode_amax, ht_encode_quant
+from .ubt import UbtState
+from repro.kernels.dequant_reduce import dequant_masked_mean
+from repro.kernels.quant import grid_quant
+
+
+# ------------------------------------------------------------- configuration
+@dataclasses.dataclass(frozen=True)
+class OptiReduceConfig:
+    """Static (hashable) configuration for gradient sync."""
+    strategy: str = "optireduce"
+    data_axis: str = "data"
+    pod_axis: str | None = None          # set for multi-pod meshes
+    # UBT drop model (stand-in for timeouts/loss on a lossy fabric)
+    drop_rate: float = 0.0
+    drop_pattern: str = "tail"           # bernoulli | tail | straggler
+    packet_elems: int = 256
+    # Hadamard transform
+    use_hadamard: bool = True
+    hadamard_block: int = 4096
+    # kernels: use Pallas (TPU) or the jnp MXU-form (identical math)
+    use_kernels: bool = False
+    # safeguards
+    skip_threshold: float = 0.10
+    # round-form incast (rounds-scheduled topologies only)
+    incast: int = 1
+    # quantized TAR exchange (optireduce_q): THC-style shared-grid uniform
+    # stochastic quantization of the HT-rotated shards — beyond-paper
+    # optimization (the paper notes THC is orthogonal); cuts the wire bytes
+    # of both TAR stages by 32/quant_bits
+    quant_bits: int = 8
+    # quantize the FSDP gradient reduce-scatter wire to this many bits
+    # (0 = native dtype). Per-Hadamard-block grids, pmax-shared; §Perf H2.
+    rs_wire_bits: int = 0
+
+
+@dataclasses.dataclass
+class SyncContext:
+    """Per-step dynamic context threaded into the pipeline."""
+    cfg: OptiReduceConfig
+    key: jax.Array                        # replicated per-step PRNG key
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    def data_axes(self) -> tuple[str, ...]:
+        if self.cfg.pod_axis is not None:
+            return (self.cfg.pod_axis, self.cfg.data_axis)
+        return (self.cfg.data_axis,)
+
+    def loss_fraction(self) -> jnp.ndarray:
+        """Observed entry-loss fraction this step, pmean'd across receivers
+        (what the §3.4 safeguards and the UBT controller monitor)."""
+        if "total" not in self.stats:
+            return jnp.zeros(())
+        frac = self.stats["dropped"] / jnp.maximum(self.stats["total"], 1.0)
+        return jax.lax.pmean(frac, self.data_axes())
+
+
+def _mask_for(ctx: SyncContext, n: int, s: int, axis: str) -> jnp.ndarray | None:
+    """Receiver-specific (N, S) arrival mask for TAR stage 1."""
+    cfg = ctx.cfg
+    if cfg.drop_rate <= 0.0:
+        return None
+    me = jax.lax.axis_index(axis)
+    key = jax.random.fold_in(ctx.key, me)
+    return drops_lib.make_mask(cfg.drop_pattern, key, n, s,
+                               rate=cfg.drop_rate,
+                               packet_elems=cfg.packet_elems,
+                               self_index=me)
+
+
+# ------------------------------------------------------------------- codecs
+@dataclasses.dataclass
+class Encoded:
+    """A codec's wire representation of one flat bucket.
+
+    ``data`` is what travels (fp values or uint8 codes, flat); ``lo`` /
+    ``step`` are the per-Hadamard-block quantization grids (pmax-shared
+    across the whole DP group) a quantizing codec needs on the receive side.
+    """
+    data: jnp.ndarray
+    lo: jnp.ndarray | None = None
+    step: jnp.ndarray | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """Identity codec — also the base class defining the codec protocol.
+
+    Hooks, in pipeline order:
+      ``encode``          full-bucket encode before the stage-1 exchange
+      ``reduce``          decode + drop-compensated mean of the (N, S)
+                          received matrix for this node's shard
+      ``encode_shard``    re-encode the aggregated shard for stage 2
+      ``decode_gathered`` full-bucket decode after the stage-2 broadcast
+      ``decode_values``   value-domain decode of one shard (the deferred-
+                          stage-2 ``reduce_scatter`` path)
+    ``linear`` marks codecs whose decode commutes with averaging (so they
+    compose with topologies that reduce internally, e.g. ring).
+    """
+    linear: bool = dataclasses.field(default=True, init=False)
+
+    def block(self, cfg: OptiReduceConfig) -> int:
+        return 1
+
+    def encode(self, x: jnp.ndarray, ctx: SyncContext, axis: str) -> Encoded:
+        return Encoded(x)
+
+    def reduce(self, received: jnp.ndarray, mask: jnp.ndarray | None,
+               shard_index: jnp.ndarray, enc: Encoded,
+               ctx: SyncContext) -> jnp.ndarray:
+        return tar_lib.masked_mean(received, mask, ctx.cfg.use_kernels)
+
+    def encode_shard(self, own: jnp.ndarray, shard_index: jnp.ndarray,
+                     enc: Encoded, ctx: SyncContext) -> jnp.ndarray:
+        return own
+
+    def decode_gathered(self, gathered: jnp.ndarray, enc: Encoded,
+                        ctx: SyncContext) -> jnp.ndarray:
+        return gathered
+
+    def decode_values(self, vals: jnp.ndarray, enc: Encoded,
+                      ctx: SyncContext) -> jnp.ndarray:
+        return vals
+
+
+class Identity(Codec):
+    """Raw wire bytes: no rotation, no compression."""
+
+
+class Hadamard(Codec):
+    """Blockwise randomized Hadamard transform (§3.3): linear, so drops
+    spread across the block and the decoded mean stays unbiased."""
+
+    def block(self, cfg: OptiReduceConfig) -> int:
+        return cfg.hadamard_block
+
+    def encode(self, x, ctx, axis):
+        return Encoded(ht_encode(x, ctx.key, block=ctx.cfg.hadamard_block,
+                                 use_kernel=ctx.cfg.use_kernels))
+
+    def decode_gathered(self, gathered, enc, ctx):
+        return ht_decode(gathered, ctx.key, block=ctx.cfg.hadamard_block,
+                         use_kernel=ctx.cfg.use_kernels)
+
+    def decode_values(self, vals, enc, ctx):
+        return ht_decode(vals, ctx.key, block=ctx.cfg.hadamard_block,
+                         use_kernel=ctx.cfg.use_kernels)
+
+
+@dataclasses.dataclass(frozen=True)
+class HTQuant(Codec):
+    """Hadamard rotation + THC-style shared-grid uniform stochastic
+    quantization (beyond-paper §Perf).
+
+    Per-block [−amax_b, amax_b] grids are pmax'd across the *whole* DP group
+    (the exchange axis plus every other configured data axis), so all nodes
+    derive identical grids locally (no scale exchange) and the codes are
+    homomorphic — the THC property, made cheap by the rotation (rotated
+    blocks are near-Gaussian with comparable scales).
+
+    Under ``cfg.use_kernels`` all three quantization stages run fused
+    kernels: rotate+amax (grids), sign+FWHT+quantize (stage-1 codes — the
+    rotated fp32 bucket never hits HBM), dequant+compensated-mean (receive),
+    and the stage-2 re-quantization of the aggregated shard dispatches to
+    the grid-quantize kernel.  The jnp path is the bit-parity oracle.
+
+    ``bits=None`` reads ``cfg.quant_bits``; ``reduce_scatter_axis`` passes
+    ``bits=cfg.rs_wire_bits`` and its own ``noise_salt``.  Not ``linear``:
+    decode does not commute with topologies that reduce internally.
+    """
+    bits: int | None = None
+    noise_salt: int = 3        # stage-1 stochastic-rounding noise fold_in
+    stage2_salt: int = 4       # stage-2 (broadcast) noise fold_in
+    linear: bool = dataclasses.field(default=False, init=False)
+
+    def _bits(self, cfg: OptiReduceConfig) -> int:
+        return cfg.quant_bits if self.bits is None else self.bits
+
+    def block(self, cfg: OptiReduceConfig) -> int:
+        return cfg.hadamard_block
+
+    def _grids(self, enc: Encoded, shard_index, nblk: int):
+        lo = jax.lax.dynamic_slice_in_dim(enc.lo, shard_index * nblk, nblk, 0)
+        step = jax.lax.dynamic_slice_in_dim(enc.step, shard_index * nblk,
+                                            nblk, 0)
+        return lo, step
+
+    def encode(self, x, ctx, axis):
+        cfg = ctx.cfg
+        block = cfg.hadamard_block
+        bits = self._bits(cfg)
+        levels = (1 << bits) - 1
+        if cfg.use_kernels:
+            amax = ht_encode_amax(x, ctx.key, block=block, use_kernel=True)
+            xb = None                     # rotated bucket never materialized
+        else:
+            x = ht_encode(x, ctx.key, block=block, use_kernel=False)
+            xb = x.reshape(-1, block)
+            amax = jnp.max(jnp.abs(xb), axis=1)
+        amax = jax.lax.pmax(amax, axis)
+        for extra in ctx.data_axes():     # grids shared by the full DP group
+            if extra != axis:
+                amax = jax.lax.pmax(amax, extra)
+        amax = jnp.maximum(amax, 1e-12)
+        step = 2.0 * amax / levels                      # (nblocks,)
+        lo = -amax
+        noise = jax.random.uniform(
+            jax.random.fold_in(ctx.key, self.noise_salt),
+            (x.shape[0] // block, block))
+        if cfg.use_kernels:
+            codes = ht_encode_quant(x, ctx.key, noise, lo, step, block=block,
+                                    bits=bits, use_kernel=True).reshape(-1)
+        else:
+            q = jnp.floor((xb - lo[:, None]) / step[:, None] + noise)
+            codes = jnp.clip(q, 0, levels).astype(jnp.uint8).reshape(-1)
+        return Encoded(codes, lo=lo, step=step)
+
+    def reduce(self, received, mask, shard_index, enc, ctx):
+        cfg = ctx.cfg
+        block = cfg.hadamard_block
+        n, s = received.shape
+        nblk = s // block
+        my_lo, my_step = self._grids(enc, shard_index, nblk)
+        if cfg.use_kernels:
+            return dequant_masked_mean(received, my_lo, my_step, mask,
+                                       block=block, use_kernel=True)
+        vals = (received.reshape(n, nblk, block).astype(jnp.float32)
+                * my_step[None, :, None] + my_lo[None, :, None]
+                ).reshape(n, s)
+        return tar_lib.masked_mean(vals, mask, cfg.use_kernels)
+
+    def encode_shard(self, own, shard_index, enc, ctx):
+        cfg = ctx.cfg
+        block = cfg.hadamard_block
+        nblk = own.shape[0] // block
+        my_lo, my_step = self._grids(enc, shard_index, nblk)
+        noise = jax.random.uniform(
+            jax.random.fold_in(ctx.key, self.stage2_salt), (nblk, block))
+        codes = grid_quant(own.reshape(nblk, block), noise, my_lo, my_step,
+                           bits=self._bits(cfg), use_kernel=cfg.use_kernels)
+        return codes.reshape(-1)
+
+    def decode_gathered(self, gathered, enc, ctx):
+        cfg = ctx.cfg
+        block = cfg.hadamard_block
+        out = (gathered.reshape(-1, block).astype(jnp.float32)
+               * enc.step[:, None] + enc.lo[:, None]).reshape(-1)
+        return ht_decode(out, ctx.key, block=block,
+                         use_kernel=cfg.use_kernels)
+
+    def decode_values(self, vals, enc, ctx):
+        return ht_decode(vals, ctx.key, block=ctx.cfg.hadamard_block,
+                         use_kernel=ctx.cfg.use_kernels)
+
+
+# --------------------------------------------------------------- transports
+class Reliable:
+    """Everything arrives (TCP-class transports): no mask, no loss stats."""
+
+    def arrival_mask(self, ctx: SyncContext, n: int, s: int,
+                     axis: str) -> jnp.ndarray | None:
+        return None
+
+    def incast(self, ctx: SyncContext) -> int:
+        return ctx.cfg.incast
+
+
+class Lossy(Reliable):
+    """UBT best-effort delivery: the drop-mask model (core/drops.py) decides
+    per-receiver arrivals and the loss stats feed ``ctx.loss_fraction``."""
+
+    def arrival_mask(self, ctx, n, s, axis):
+        mask = _mask_for(ctx, n, s, axis)
+        if mask is not None:
+            ctx.stats["dropped"] = ctx.stats.get("dropped", 0.0) + \
+                jnp.sum(1.0 - mask)
+            ctx.stats["total"] = ctx.stats.get("total", 0.0) + mask.size
+        return mask
+
+
+class AdaptiveTransport(Lossy):
+    """§3.2 control plane in the sync loop: a :class:`Lossy` transport whose
+    next-step recommendations come from the UBT controllers.
+
+    The controllers are host state (an XLA fabric cannot drop or time out;
+    see core/ubt.py), so the loop is: run a step, call
+    ``observe(loss_frac, stage_time=...)`` with the observed loss fraction,
+    and when it returns True (recommendation changed) rebuild the step with
+    ``apply(cfg)`` — Hadamard toggles on above the §3.2.1 2% threshold and
+    ``DynamicIncast`` advertises the incast a rounds-scheduled topology
+    should use next.  ``launch/train.py --adaptive`` wires this in.
+    """
+
+    def __init__(self, state: UbtState, use_hadamard: bool = False):
+        self.state = state
+        self.use_hadamard = use_hadamard
+
+    @classmethod
+    def create(cls, n_nodes: int, **kw) -> "AdaptiveTransport":
+        return cls(state=UbtState.create(n_nodes=n_nodes, **kw))
+
+    def incast(self, ctx: SyncContext | None = None) -> int:
+        return max(1, self.state.incast.value)   # n_nodes=1 advertises I=0
+
+    def observe(self, loss_frac: float, *, stage_time: float | None = None,
+                timed_out: bool = False) -> bool:
+        """Feed one step's observations; True if the recommendation moved."""
+        before = (self.use_hadamard, self.state.incast.value)
+        if stage_time is not None and not self.state.timeout.ready:
+            self.state.timeout.observe_warmup(stage_time)
+        self.state.incast.update(loss_frac=loss_frac, timed_out=timed_out)
+        at = self.state.timeout
+        if at.hadamard_active(loss_frac):
+            self.use_hadamard = True
+        elif loss_frac < at.ht_threshold / 2.0:
+            # hysteresis band [thr/2, thr): loss hovering at the threshold
+            # must not flap the codec (each flip retraces the step)
+            self.use_hadamard = False
+        return (self.use_hadamard, self.state.incast.value) != before
+
+    def apply(self, cfg: OptiReduceConfig) -> OptiReduceConfig:
+        """Fold the current recommendation into a sync config."""
+        return dataclasses.replace(cfg, use_hadamard=self.use_hadamard,
+                                   incast=self.incast())
+
+
+# --------------------------------------------------------------- topologies
+class Topology:
+    """Exchange-schedule protocol: owns padding, the collectives, and the
+    placement of the codec/transport hooks between them."""
+
+    def validate(self, transport: Reliable, codec: Codec) -> None:
+        pass
+
+    def all_reduce(self, bucket: jnp.ndarray, transport: Reliable,
+                   codec: Codec, ctx: SyncContext) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def reduce_scatter(self, g, axis, dim, transport, codec, ctx):
+        raise NotImplementedError(
+            f"{type(self).__name__} has no reduce_scatter form")
+
+
+class PsumTopology(Topology):
+    """XLA's native all-reduce (what a stock JAX program does)."""
+
+    def validate(self, transport, codec):
+        if not isinstance(codec, Identity) or isinstance(transport, Lossy):
+            raise ValueError("psum is XLA-native: it bypasses the codec and "
+                             "cannot model drops (use a TAR topology)")
+
+    def all_reduce(self, bucket, transport, codec, ctx):
+        return jax.lax.pmean(bucket, ctx.data_axes())
+
+
+@dataclasses.dataclass(frozen=True)
+class RingTopology(Topology):
+    """Baseline schedules that reduce internally: Gloo Ring, recursive
+    halving-doubling ("NCCL Tree"), Gloo BCube.  Compose with any *linear*
+    codec (decode commutes with the internal averaging) and a reliable
+    transport; a ``pod`` axis is folded in with a pmean."""
+    kind: str = "ring"                   # ring | tree | bcube
+
+    def __post_init__(self):
+        if self.kind not in ("ring", "tree", "bcube"):
+            raise ValueError(f"unknown ring topology kind {self.kind!r}")
+
+    def validate(self, transport, codec):
+        if isinstance(transport, Lossy):
+            raise ValueError(
+                f"{self.kind} reduces in-flight partial sums; the UBT drop "
+                "model needs TAR's receive structure (Lossy -> TarTopology)")
+        if not codec.linear:
+            raise ValueError(
+                f"codec {type(codec).__name__} does not commute with "
+                f"{self.kind}'s internal reduction")
+
+    def all_reduce(self, bucket, transport, codec, ctx):
+        cfg = ctx.cfg
+        n = compat.axis_size(cfg.data_axis)
+        x, length = tar_lib.pad_for_tar(bucket, n, codec.block(cfg))
+        enc = codec.encode(x, ctx, cfg.data_axis)
+        if self.kind == "ring":
+            out = ring_lib.ring_allreduce(enc.data, cfg.data_axis)
+        elif self.kind == "tree":
+            out = ring_lib.tree_allreduce(enc.data, cfg.data_axis)
+        else:
+            base = 4 if n % 4 == 0 else 2
+            out = ring_lib.bcube_allreduce(enc.data, cfg.data_axis, base=base)
+        if cfg.pod_axis is not None:
+            out = jax.lax.pmean(out, cfg.pod_axis)
+        out = codec.decode_values(out, enc, ctx)
+        return out[:length]
+
+
+@dataclasses.dataclass(frozen=True)
+class TarTopology(Topology):
+    """Transpose AllReduce (§3.1): stage-1 shard exchange → codec reduce →
+    stage-2 broadcast, with the codec/transport hooks between the stages.
+
+    ``schedule``: ``'a2a'`` lowers the stages as tiled all_to_all/all_gather
+    (the production path); ``'rounds'`` lowers the paper's explicit
+    2*ceil((N-1)/I) ppermute round schedule, taking I from the transport
+    (so :class:`AdaptiveTransport` drives it).
+    ``outer``: how a configured ``pod`` axis joins — ``'tar'`` nests a TAR
+    over the pods between the stages (§3.1.2 hierarchical 2D), ``'pmean'``
+    folds them with a plain pmean (what a quantizing codec needs: values,
+    not codes, cross the pod boundary).
+    """
+    schedule: str = "a2a"                # a2a | rounds
+    outer: str = "tar"                   # tar | pmean
+
+    def __post_init__(self):
+        if self.schedule not in ("a2a", "rounds"):
+            raise ValueError(f"unknown TAR schedule {self.schedule!r}")
+        if self.outer not in ("tar", "pmean"):
+            raise ValueError(f"unknown TAR outer mode {self.outer!r}")
+
+    def _outer_reduce(self, own, codec, ctx):
+        cfg = ctx.cfg
+        g = compat.axis_size(cfg.pod_axis)
+        if g <= 1:
+            return own
+        if self.outer == "tar" and own.shape[0] % g == 0:
+            return tar_lib.tar_allreduce(own, cfg.pod_axis,
+                                         use_kernel=cfg.use_kernels)
+        return jax.lax.pmean(own, cfg.pod_axis)
+
+    def all_reduce(self, bucket, transport, codec, ctx):
+        cfg = ctx.cfg
+        axis = cfg.data_axis
+        n = compat.axis_size(axis)
+        x, length = tar_lib.pad_for_tar(bucket, n, codec.block(cfg))
+        enc = codec.encode(x, ctx, axis)
+        s = enc.data.shape[0] // n
+        shards = enc.data.reshape(n, s)
+        if self.schedule == "rounds":
+            received = tar_lib.tar_exchange_rounds(
+                shards, axis, incast=transport.incast(ctx))
+        else:
+            received = jax.lax.all_to_all(shards, axis, split_axis=0,
+                                          concat_axis=0, tiled=True)
+        mask = transport.arrival_mask(ctx, n, s, axis)
+        i = jax.lax.axis_index(axis)
+        own = codec.reduce(received, mask, i, enc, ctx)
+        if cfg.pod_axis is not None:
+            own = self._outer_reduce(own, codec, ctx)
+        wire = codec.encode_shard(own, i, enc, ctx)
+        if self.schedule == "rounds":
+            gathered = tar_lib.tar_broadcast_rounds(
+                wire, axis, incast=transport.incast(ctx))
+        else:
+            gathered = jax.lax.all_gather(wire, axis, axis=0, tiled=True)
+        out = codec.decode_gathered(gathered, enc, ctx)
+        return out[:length]
+
+    def reduce_scatter(self, g, axis, dim, transport, codec, ctx):
+        """TAR stage 1 + compensated reduce on an arbitrary tensor,
+        scattering ``dim`` over ``axis`` — the FSDP/ZeRO grad reduction;
+        the all_gather at next use is the deferred stage 2."""
+        cfg = ctx.cfg
+        n = compat.axis_size(axis)
+        g2 = jnp.moveaxis(g, dim, 0)
+        lead = g2.shape[0]
+        rest = g2.shape[1:]
+        assert lead % n == 0, (lead, n)
+        # keep the wire dtype (bf16 grads stay bf16): halves collective
+        # bytes and the per-layer transients; reductions accumulate in fp32
+        rows = g2.reshape(n, -1)                       # row j -> shard j
+        row_len = rows.shape[1]
+        pad = (-row_len) % codec.block(cfg)
+        if pad:
+            rows = jnp.pad(rows, ((0, 0), (0, pad)))
+        enc = codec.encode(rows.reshape(-1), ctx, axis)
+        shards = enc.data.reshape(n, -1)
+        received = jax.lax.all_to_all(shards, axis, split_axis=0,
+                                      concat_axis=0, tiled=True)
+        mask = transport.arrival_mask(ctx, n, received.shape[1], axis)
+        i = jax.lax.axis_index(axis)
+        own = codec.reduce(received, mask, i, enc, ctx)
+        own = codec.decode_values(own, enc, ctx)
+        if pad:
+            own = own[:row_len]
+        out = own.reshape((lead // n,) + rest)
+        return jnp.moveaxis(out, 0, dim)
+
+
+# ------------------------------------------------------------ spec + registry
+@dataclasses.dataclass(frozen=True)
+class CollectiveSpec:
+    """One gradient-sync strategy = Topology × Transport × Codec."""
+    topology: Topology
+    transport: Reliable
+    codec: Codec
+
+    def __post_init__(self):
+        self.topology.validate(self.transport, self.codec)
+
+    def all_reduce(self, bucket: jnp.ndarray, ctx: SyncContext) -> jnp.ndarray:
+        """Reduce one flat bucket to its (approximate) DP mean."""
+        return self.topology.all_reduce(bucket, self.transport, self.codec,
+                                        ctx)
+
+    def reduce_scatter(self, g: jnp.ndarray, axis: str, dim: int,
+                       ctx: SyncContext) -> jnp.ndarray:
+        """Scatter ``dim`` over ``axis``, returning this node's reduced
+        shard (the deferred-stage-2 / FSDP form)."""
+        return self.topology.reduce_scatter(g, axis, dim, self.transport,
+                                            self.codec, ctx)
+
+
+_REGISTRY: dict[str, Callable[[OptiReduceConfig], CollectiveSpec]] = {}
+
+
+def register_strategy(name: str, spec: CollectiveSpec | None = None):
+    """Register a named strategy: either a spec instance
+    (``register_strategy("x", spec)``) or, as a decorator, a factory
+    ``cfg -> CollectiveSpec`` for cfg-dependent composition."""
+    if spec is not None:
+        _REGISTRY[name] = lambda cfg: spec
+        return spec
+
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def strategy_names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def resolve_spec(cfg: OptiReduceConfig) -> CollectiveSpec:
+    try:
+        factory = _REGISTRY[cfg.strategy]
+    except KeyError:
+        raise ValueError(f"unknown strategy {cfg.strategy!r}; "
+                         f"one of {strategy_names()}") from None
+    return factory(cfg)
+
+
+# ------------------------------------------------- the named strategy table
+register_strategy("psum",
+                  CollectiveSpec(PsumTopology(), Reliable(), Identity()))
+register_strategy("gloo_ring",
+                  CollectiveSpec(RingTopology("ring"), Reliable(), Identity()))
+register_strategy("nccl_tree",
+                  CollectiveSpec(RingTopology("tree"), Reliable(), Identity()))
+register_strategy("bcube",
+                  CollectiveSpec(RingTopology("bcube"), Reliable(),
+                                 Identity()))
+register_strategy("tar_tcp",
+                  CollectiveSpec(TarTopology(), Reliable(), Identity()))
+register_strategy("tar_rounds",
+                  CollectiveSpec(TarTopology(schedule="rounds", outer="pmean"),
+                                 Reliable(), Identity()))
+
+
+@register_strategy("optireduce")
+@register_strategy("optireduce_2d")   # pod_axis in cfg drives the 2D path
+def _optireduce_spec(cfg: OptiReduceConfig) -> CollectiveSpec:
+    return CollectiveSpec(TarTopology(), Lossy(),
+                          Hadamard() if cfg.use_hadamard else Identity())
+
+
+register_strategy("optireduce_q",     # quantized exchange (beyond-paper)
+                  CollectiveSpec(TarTopology(outer="pmean"), Lossy(),
+                                 HTQuant()))
+
+# new cross-product compositions the layering opens (one-liners):
+register_strategy("optireduce_rounds",   # paper round schedule + drops + HT
+                  CollectiveSpec(TarTopology(schedule="rounds", outer="pmean"),
+                                 Lossy(), Hadamard()))
+register_strategy("tar_rounds_q",        # round schedule + THC quantization
+                  CollectiveSpec(TarTopology(schedule="rounds", outer="pmean"),
+                                 Lossy(), HTQuant()))
+register_strategy("ring_ht",             # Gloo ring over rotated buckets
+                  CollectiveSpec(RingTopology("ring"), Reliable(), Hadamard()))

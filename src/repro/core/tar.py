@@ -25,7 +25,8 @@ import jax.numpy as jnp
 
 from repro import compat
 
-from repro.kernels.masked_sum import masked_mean, masked_mean_ref
+from repro.kernels.masked_sum import masked_mean as _masked_mean_kernel
+from repro.kernels.masked_sum import masked_mean_ref
 
 
 def axis_size(axis: str) -> int:
@@ -42,13 +43,18 @@ def pad_for_tar(x: jnp.ndarray, n: int, block: int = 1) -> tuple[jnp.ndarray, in
     return x, length
 
 
-def _reduce(received: jnp.ndarray, mask: jnp.ndarray | None,
-            use_kernel: bool) -> jnp.ndarray:
-    """Drop-compensated mean over the peer axis. received: (N, S)."""
+def masked_mean(received: jnp.ndarray, mask: jnp.ndarray | None,
+                use_kernel: bool = False) -> jnp.ndarray:
+    """Drop-compensated mean over the peer axis. received: (N, S).
+
+    The public reduction every codec shares: no mask -> plain mean; with an
+    arrival mask -> the masked compensated mean, dispatching to the Pallas
+    kernel under ``use_kernel``.
+    """
     if mask is None:
         return jnp.mean(received, axis=0)
     if use_kernel:
-        return masked_mean(received, mask, use_kernel=True)
+        return _masked_mean_kernel(received, mask, use_kernel=True)
     return masked_mean_ref(received, mask)
 
 
@@ -65,7 +71,7 @@ def tar_reduce_scatter(x: jnp.ndarray, axis: str, *,
     shards = x.reshape(n, s)
     received = jax.lax.all_to_all(shards, axis, split_axis=0, concat_axis=0,
                                   tiled=True)          # (N, S): row p = peer p's shard for me
-    return _reduce(received, mask, use_kernel)
+    return masked_mean(received, mask, use_kernel)
 
 
 def tar_allreduce(x: jnp.ndarray, axis: str, *,
@@ -76,64 +82,96 @@ def tar_allreduce(x: jnp.ndarray, axis: str, *,
     return jax.lax.all_gather(own, axis, axis=0, tiled=True)
 
 
+def _grouped_rounds(axis: str, n: int, incast: int, send_for_round):
+    """Run rounds 1..N-1 with <= incast permutes in flight per group.
+
+    In round r (r = 1..N-1) node j sends to node (j+r) mod N and receives
+    from (j-r) mod N — a round-robin schedule where a node-pair never
+    repeats. ``incast`` is the paper's I: rounds are issued in groups of I
+    permutes in flight concurrently, and group g+1's sends are gated on
+    group g's arrivals (an ``optimization_barrier`` chain), so the lowered
+    HLO carries the real ceil((N-1)/I) round schedule instead of one flat
+    burst.
+    """
+    rows = []
+    pending = []
+    token = None
+    for r in range(1, n):
+        # node j sends to node (j + r) % n in round r
+        perm = [(j, (j + r) % n) for j in range(n)]
+        send = send_for_round(r)
+        if token is not None:           # gate on the previous group's recvs
+            send, token = compat.optimization_barrier((send, token))
+        recv = jax.lax.ppermute(send, axis, perm)      # from (i - r) % n
+        pending.append(recv)
+        if len(pending) == incast or r == n - 1:
+            pending = list(compat.optimization_barrier(tuple(pending)))
+            rows.extend(pending)
+            token = pending[-1]
+            pending = []
+    return rows
+
+
+def _sender_order(i: jnp.ndarray, n: int) -> jnp.ndarray:
+    # row r of a by-distance stack came from (i - r) % n
+    return (i - jnp.arange(n)) % n
+
+
+def tar_exchange_rounds(shards: jnp.ndarray, axis: str, *,
+                        incast: int = 1) -> jnp.ndarray:
+    """Stage-1 shard exchange on the explicit round schedule (Fig 5b).
+
+    shards: (N, S), row j = this node's contribution to peer j's shard.
+    Returns the (N, S) received matrix in *sender* order (row p = peer p's
+    shard for me) — the same layout the tiled all_to_all form produces.
+    """
+    n = axis_size(axis)
+    i = jax.lax.axis_index(axis)
+    incast = max(1, int(incast))
+    own_rows = [jnp.take(shards, i, axis=0)]           # my own contribution
+    own_rows += _grouped_rounds(axis, n, incast,
+                                lambda r: jnp.take(shards, (i + r) % n,
+                                                   axis=0))
+    # rows arrive ordered by sender distance r; reorder to sender index
+    received_by_dist = jnp.stack(own_rows)             # row r = from (i-r)%n
+    senders = _sender_order(i, n)
+    return jnp.zeros_like(received_by_dist).at[senders].set(received_by_dist)
+
+
+def tar_broadcast_rounds(own: jnp.ndarray, axis: str, *,
+                         incast: int = 1) -> jnp.ndarray:
+    """Stage-2 broadcast of the aggregated shard, mirrored round schedule.
+
+    own: (S,) this node's aggregated shard. Returns the reassembled flat
+    (N*S,) bucket — the same layout the tiled all_gather form produces.
+    """
+    n = axis_size(axis)
+    i = jax.lax.axis_index(axis)
+    incast = max(1, int(incast))
+    out_rows = [own]
+    out_rows += _grouped_rounds(axis, n, incast, lambda r: own)
+    got_by_dist = jnp.stack(out_rows)                  # row r = shard of (i-r)%n
+    senders = _sender_order(i, n)
+    out = jnp.zeros_like(got_by_dist).at[senders].set(got_by_dist)
+    return out.reshape(n * own.shape[0])
+
+
 def tar_allreduce_rounds(x: jnp.ndarray, axis: str, *, incast: int = 1,
                          mask: jnp.ndarray | None = None) -> jnp.ndarray:
-    """Round-structured TAR via collective_permute (paper Fig 5b).
-
-    In round r (r = 1..N-1) node i sends shard (i+r) mod N to node (i+r) mod N
-    and receives from (i-r) mod N — a round-robin schedule where a node-pair
-    never repeats. ``incast`` is the paper's I: rounds are issued in groups
-    of I permutes in flight concurrently, and group g+1's sends are gated on
-    group g's arrivals (an ``optimization_barrier`` chain), so the lowered
-    HLO carries the real 2*ceil((N-1)/I) round schedule instead of one flat
-    burst. The broadcast stage is the mirrored schedule.
+    """Round-structured TAR via collective_permute (paper Fig 5b):
+    exchange -> compensated mean -> mirrored broadcast, 2*ceil((N-1)/I)
+    rounds total.  The composable pipeline reaches the two stages directly
+    (:func:`tar_exchange_rounds` / :func:`tar_broadcast_rounds`) so codecs
+    can interpose; this wrapper is the plain value-domain form.
     """
     n = axis_size(axis)
     s = x.shape[0] // n
-    shards = x.reshape(n, s)
-    i = jax.lax.axis_index(axis)
-    incast = max(1, int(incast))
-
-    def grouped_rounds(send_for_round):
-        """Run rounds 1..N-1 with <= incast permutes in flight per group."""
-        rows = []
-        pending = []
-        token = None
-        for r in range(1, n):
-            # node j sends to node (j + r) % n in round r
-            perm = [(j, (j + r) % n) for j in range(n)]
-            send = send_for_round(r)
-            if token is not None:       # gate on the previous group's recvs
-                send, token = compat.optimization_barrier((send, token))
-            recv = jax.lax.ppermute(send, axis, perm)  # from (i - r) % n
-            pending.append(recv)
-            if len(pending) == incast or r == n - 1:
-                pending = list(compat.optimization_barrier(tuple(pending)))
-                rows.extend(pending)
-                token = pending[-1]
-                pending = []
-        return rows
-
-    # --- stage 1: gather my shard's contributions from every peer ---------
-    own_rows = [jnp.take(shards, i, axis=0)]           # my own contribution
-    own_rows += grouped_rounds(lambda r: jnp.take(shards, (i + r) % n, axis=0))
-    # rows arrive ordered by sender distance r; reorder to sender index
-    received_by_dist = jnp.stack(own_rows)             # (N, S); row r = from (i-r)%n
-    # sender of row r is (i - r) % n -> scatter rows to sender order
-    senders = (i - jnp.arange(n)) % n
-    received = jnp.zeros_like(received_by_dist).at[senders].set(received_by_dist)
-
+    received = tar_exchange_rounds(x.reshape(n, s), axis, incast=incast)
     if mask is None:
         own = jnp.mean(received, axis=0)
     else:
         own = masked_mean_ref(received, mask)
-
-    # --- stage 2: broadcast aggregated shard with the mirrored schedule ---
-    out_rows = [own]
-    out_rows += grouped_rounds(lambda r: own)          # aggregated shard of (i-r)%n
-    got_by_dist = jnp.stack(out_rows)                  # row r = shard of (i-r)%n
-    out = jnp.zeros_like(got_by_dist).at[senders].set(got_by_dist)
-    return out.reshape(n * s)
+    return tar_broadcast_rounds(own, axis, incast=incast)
 
 
 def tar_allreduce_2d(x: jnp.ndarray, inner_axis: str, outer_axis: str, *,

@@ -1,5 +1,5 @@
-from .ops import uniform_quant, uniform_dequant
-from .ref import uniform_quant_ref, uniform_dequant_ref
+from .ops import grid_quant, uniform_quant, uniform_dequant
+from .ref import grid_quant_ref, uniform_quant_ref, uniform_dequant_ref
 
-__all__ = ["uniform_quant", "uniform_dequant", "uniform_quant_ref",
-           "uniform_dequant_ref"]
+__all__ = ["grid_quant", "uniform_quant", "uniform_dequant",
+           "grid_quant_ref", "uniform_quant_ref", "uniform_dequant_ref"]

@@ -6,8 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .quant import uniform_quant_pallas
-from .ref import uniform_dequant_ref, uniform_quant_ref
+from .quant import grid_quant_pallas, uniform_quant_pallas
+from .ref import grid_quant_ref, uniform_dequant_ref, uniform_quant_ref
 
 
 def _default_interpret() -> bool:
@@ -26,6 +26,22 @@ def uniform_quant(x: jnp.ndarray, noise: jnp.ndarray, lohi: jnp.ndarray, *,
     else:
         out = uniform_quant_ref(x2, n2, lohi[0], lohi[1], bits=bits)
     return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "use_kernel"))
+def grid_quant(x: jnp.ndarray, noise: jnp.ndarray, lo: jnp.ndarray,
+               step: jnp.ndarray, *, bits: int = 8,
+               use_kernel: bool = False) -> jnp.ndarray:
+    """Quantize (rows, C) onto per-row [lo_r, lo_r + levels*step_r] grids.
+
+    The shard-side (TAR stage-2) quantization stage of the fused sync
+    engine: one Hadamard block per row, grids already pmax-shared. Kernel
+    and jnp paths are bit-identical.
+    """
+    if use_kernel:
+        return grid_quant_pallas(x, noise, lo, step, bits=bits,
+                                 interpret=_default_interpret())
+    return grid_quant_ref(x, noise, lo, step, bits=bits)
 
 
 def uniform_dequant(codes: jnp.ndarray, lohi: jnp.ndarray, *, bits: int = 8,

@@ -26,6 +26,57 @@ def _quant_kernel(x_ref, n_ref, r_ref, o_ref, *, levels: int):
     o_ref[...] = jnp.clip(q, 0, levels).astype(o_ref.dtype)
 
 
+def _grid_quant_kernel(x_ref, n_ref, lo_ref, step_ref, o_ref, *, levels: int):
+    x = x_ref[...].astype(jnp.float32)
+    u = n_ref[...].astype(jnp.float32)
+    lo = lo_ref[...]                                   # (rows, 1) per-row
+    step = step_ref[...]
+    q = jnp.floor((x - lo) / step + u)
+    o_ref[...] = jnp.clip(q, 0, levels).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows", "interpret"))
+def grid_quant_pallas(x: jnp.ndarray, noise: jnp.ndarray, lo: jnp.ndarray,
+                      step: jnp.ndarray, *, bits: int = 8,
+                      block_rows: int = 128,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Quantize (rows, C) onto per-row [lo_r, lo_r + levels*step_r] grids.
+
+    The grid-aware sibling of :func:`uniform_quant_pallas`: lo/step are
+    (rows,) operands tiled alongside the data, so one pass covers every
+    Hadamard block of a shard (TAR stage-2 re-quantization)."""
+    if x.ndim != 2 or noise.shape != x.shape:
+        raise ValueError("x and noise must both be (rows, C)")
+    rows, c = x.shape
+    levels = (1 << bits) - 1
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    lo2 = lo.reshape(rows, 1).astype(jnp.float32)
+    step2 = step.reshape(rows, 1).astype(jnp.float32)
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        noise = jnp.pad(noise, ((0, pad), (0, 0)))
+        lo2 = jnp.pad(lo2, ((0, pad), (0, 0)))
+        step2 = jnp.pad(step2, ((0, pad), (0, 0)),
+                        constant_values=1.0)           # avoid 0-div pad rows
+    out = pl.pallas_call(
+        functools.partial(_grid_quant_kernel, levels=levels),
+        grid=(x.shape[0] // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.uint8),
+        interpret=interpret,
+    )(x, noise, lo2, step2)
+    if pad:
+        out = out[:rows]
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "block_rows", "interpret"))
 def uniform_quant_pallas(x: jnp.ndarray, noise: jnp.ndarray,
                          lohi: jnp.ndarray, *, bits: int = 8,

@@ -24,6 +24,20 @@ def uniform_quant_ref(x: jnp.ndarray, noise: jnp.ndarray, lo: jnp.ndarray,
     return jnp.clip(q, 0, levels).astype(jnp.uint8)
 
 
+def grid_quant_ref(x: jnp.ndarray, noise: jnp.ndarray, lo: jnp.ndarray,
+                   step: jnp.ndarray, *, bits: int) -> jnp.ndarray:
+    """Per-row-grid variant: one Hadamard block per row.
+
+    x/noise: (rows, C); lo/step: (rows,) — each row quantizes onto its own
+    [lo_r, lo_r + levels*step_r] grid (the grids are already pmax-shared
+    across workers by the collective layer).
+    """
+    levels = (1 << bits) - 1
+    q = jnp.floor((x.astype(jnp.float32) - lo[:, None]) / step[:, None]
+                  + noise)
+    return jnp.clip(q, 0, levels).astype(jnp.uint8)
+
+
 def uniform_dequant_ref(codes: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
                         *, bits: int,
                         nsum: int = 1) -> jnp.ndarray:

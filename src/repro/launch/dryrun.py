@@ -38,6 +38,7 @@ from repro import compat
 from repro.configs import ARCHS, SHAPES, get_config, input_specs, shape_applicable
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.allreduce import OptiReduceConfig
+from repro.core.pipeline import resolve_spec
 from repro.launch.mesh import make_production_mesh
 from repro.models import abstract_params, active_params, count_params
 from repro.optim.optimizers import OptimizerConfig
@@ -405,6 +406,9 @@ def main(argv=None) -> int:
     ap.add_argument("--no-cost-model", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+
+    # fail fast (with the registered-name list) before any compile work
+    resolve_spec(OptiReduceConfig(strategy=args.strategy))
 
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     overrides = {}

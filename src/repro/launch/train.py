@@ -12,6 +12,7 @@ Example:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import sys
 import time
@@ -21,9 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SHAPES, get_config, get_smoke
-from repro.core.allreduce import OptiReduceConfig
+from repro.core.allreduce import OptiReduceConfig, strategies
+from repro.core.pipeline import AdaptiveTransport
 from repro.core.safeguards import LossMonitor
-from repro.core.ubt import UbtState
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import init_params
@@ -43,9 +44,16 @@ def main(argv=None) -> int:
     ap.add_argument("--dp", type=int, default=0, help="0 = all devices")
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--production-mesh", action="store_true")
-    ap.add_argument("--strategy", default="optireduce")
+    ap.add_argument("--strategy", default="optireduce",
+                    help=f"one of {', '.join(strategies())} or any "
+                         "register_strategy'd composition")
     ap.add_argument("--drop-rate", type=float, default=0.0)
     ap.add_argument("--drop-pattern", default="tail")
+    ap.add_argument("--incast", type=int, default=1,
+                    help="round-schedule incast I (rounds topologies)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="drive next-step Hadamard/incast from the UBT "
+                         "controllers (paper §3.2) fed by observed loss")
     ap.add_argument("--dp-mode", default="replicated")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -71,6 +79,7 @@ def main(argv=None) -> int:
         sync=OptiReduceConfig(strategy=args.strategy,
                               drop_rate=args.drop_rate,
                               drop_pattern=args.drop_pattern,
+                              incast=args.incast,
                               hadamard_block=1024),
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr),
         dp_mode=args.dp_mode, microbatch=args.microbatch,
@@ -104,13 +113,34 @@ def main(argv=None) -> int:
             pass
 
     monitor = LossMonitor(skip_threshold=tc.sync.skip_threshold)
-    ubt = UbtState.create(n_nodes=mesh.shape.get("data", 1))
+    # §3.2 control plane: the AdaptiveTransport feeds observed loss into
+    # AdaptiveTimeout/DynamicIncast; when its recommendation (Hadamard
+    # on/off, advertised incast) moves, the step is rebuilt with the new
+    # sync spec (host-side — the XLA fabric itself cannot drop packets).
+    adaptive = (AdaptiveTransport.create(n_nodes=mesh.shape.get("data", 1))
+                if args.adaptive else None)
+    if adaptive is not None:
+        from repro.core.pipeline import TarTopology, resolve_spec
+        # start from the configured codec so step 0 never rebuilds, and
+        # learn which knobs this spec can even observe: incast only lowers
+        # rounds schedules; use_hadamard only matters if toggling it
+        # resolves to a different spec (cfg-dependent factories)
+        adaptive.use_hadamard = tc.sync.use_hadamard
+        topo = resolve_spec(tc.sync).topology
+        incast_matters = (isinstance(topo, TarTopology)
+                          and topo.schedule == "rounds")
+        ht_matters = (resolve_spec(dataclasses.replace(
+            tc.sync, use_hadamard=True)) is not resolve_spec(
+                dataclasses.replace(tc.sync, use_hadamard=False)))
+        stable_rec, stable_for = None, 0
     t0 = time.time()
     for step in range(start_step, args.steps):
         batch = data.host_batch(step, 0, 1)
         batch = jax.device_put(batch, shardings["batch"])
+        t_step = time.time()
         params, opt_state, metrics = jf(
             params, opt_state, batch, jnp.asarray(step, jnp.int32), key)
+        loss_frac = float(metrics["loss_frac"])
         if step % args.log_every == 0 or step == args.steps - 1:
             m = jax.tree.map(float, metrics)
             rate = (step - start_step + 1) / (time.time() - t0)
@@ -118,8 +148,30 @@ def main(argv=None) -> int:
                   f"gnorm {m['grad_norm']:.3f} loss_frac {m['loss_frac']:.5f}"
                   f" skipped {int(m['skipped'])} ({rate:.2f} it/s)",
                   flush=True)
-        monitor.observe(step, float(metrics["loss_frac"]),
-                        bool(metrics["skipped"] > 0))
+        if adaptive is not None:
+            adaptive.observe(loss_frac, stage_time=time.time() - t_step)
+            new_sync = adaptive.apply(tc.sync)
+            if not incast_matters:       # incast only lowers rounds forms
+                new_sync = dataclasses.replace(new_sync,
+                                               incast=tc.sync.incast)
+            if not ht_matters:
+                new_sync = dataclasses.replace(
+                    new_sync, use_hadamard=tc.sync.use_hadamard)
+            # debounce: a growing incast ramps one step at a time, and each
+            # rebuild recompiles the whole step — wait for the controller to
+            # settle. A Hadamard toggle is an accuracy decision: immediate.
+            stable_for = stable_for + 1 if new_sync == stable_rec else 1
+            stable_rec = new_sync
+            urgent = new_sync.use_hadamard != tc.sync.use_hadamard
+            if new_sync != tc.sync and (urgent or stable_for >= 3):
+                tc = dataclasses.replace(tc, sync=new_sync)
+                make_step, opt, _ = build_train_step(cfg, tc, mesh)
+                step_fn, shardings = make_step(
+                    jax.eval_shape(opt.init, params), batch0)
+                jf = jax.jit(step_fn, donate_argnums=(0, 1))
+                print(f"adaptive: use_hadamard={new_sync.use_hadamard} "
+                      f"incast={new_sync.incast} (step rebuilt)", flush=True)
+        monitor.observe(step, loss_frac, bool(metrics["skipped"] > 0))
         if monitor.halted:
             print("HALT: excessive gradient loss (§3.4); rolling back")
             rb = monitor.rollback()

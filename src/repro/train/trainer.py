@@ -32,8 +32,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import ModelConfig
-from repro.core.allreduce import (OptiReduceConfig, SyncContext,
-                                  reduce_scatter_axis, sync_pytree)
+from repro.core.allreduce import (OptiReduceConfig, SyncContext, rs_spec,
+                                  sync_pytree)
+from repro.core.pipeline import resolve_spec
 from repro.core.safeguards import guard_update
 from repro.models import lm_loss, param_specs, param_table
 from repro.models.parallel import ParallelCtx
@@ -79,6 +80,10 @@ def make_fsdp_gather(sync_cfg: OptiReduceConfig, fsdp_axes: tuple[str, ...]):
     as its VJP. Gathers inner axis first so the layout matches a dim sharded
     by P(('pod','data')) (pod-major)."""
     inner_to_outer = tuple(reversed(fsdp_axes))   # ('data', 'pod')
+    # one resolved reduce-scatter spec per axis: drops are modeled only on
+    # the data axis (the pod hop is the reliable inter-pod aggregation)
+    axis_specs = {ax: rs_spec(sync_cfg, with_drops=ax == sync_cfg.data_axis)
+                  for ax in fsdp_axes}
 
     @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
     def gather(w, dim, key):
@@ -93,8 +98,7 @@ def make_fsdp_gather(sync_cfg: OptiReduceConfig, fsdp_axes: tuple[str, ...]):
         ctx = SyncContext(cfg=sync_cfg, key=key)
         out_dtype = g.dtype
         for ax in fsdp_axes:              # outer (pod) first, mirrors fwd
-            with_drops = ax == sync_cfg.data_axis
-            g = reduce_scatter_axis(g, ax, dim, ctx, with_drops=with_drops)
+            g = axis_specs[ax].reduce_scatter(g, ax, dim, ctx)
         return (g.astype(out_dtype), None)
 
     gather.defvjp(fwd, bwd)
@@ -159,6 +163,7 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
     sync_cfg = dataclasses.replace(
         tc.sync, data_axis=data_axis or "data",
         pod_axis=pod_axis)
+    sync_spec = resolve_spec(sync_cfg)   # fail fast on unknown strategies
     opt = make_optimizer(tc.optimizer)
     gather = make_fsdp_gather(sync_cfg, dp_axes) if fsdp else None
     pctx = ParallelCtx(tp_axis=tp_axis, dp_axis=data_axis, pod_axis=pod_axis,
@@ -212,13 +217,15 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
             small = [g for g, m_ in zip(flat_g, flat_m) if not m_]
             if small:
                 synced_small = sync_pytree(small, ctx,
-                                           bucket_elems=tc.bucket_elems)
+                                           bucket_elems=tc.bucket_elems,
+                                           spec=sync_spec)
                 it = iter(synced_small)
                 flat_g = [next(it) if not m_ else g
                           for g, m_ in zip(flat_g, flat_m)]
             grads = jax.tree.unflatten(tdef, flat_g)
         else:
-            grads = sync_pytree(grads, ctx, bucket_elems=tc.bucket_elems)
+            grads = sync_pytree(grads, ctx, bucket_elems=tc.bucket_elems,
+                                spec=sync_spec)
         loss_frac = ctx.loss_fraction()
 
         # ---- safeguards (§3.4), clip, optimizer --------------------------
