@@ -7,7 +7,8 @@ Prints ``name,value,derived`` CSV rows (plus section comments).
   python -m benchmarks.run --only bench_tta
 
 Every module's rows are validated against a small schema (machine-readable
-row keys, finite numeric values, non-empty) and JSON-serialized modules are
+row keys, finite numeric values, non-empty, a ``_steady_iqr_us`` dispersion
+sibling for every ``_steady_us`` timing row) and JSON-serialized modules are
 additionally diffed against the previous BENCH_*.json of the same sweep
 mode — a key that disappears is a regression-breaking shape change and the
 suite exits non-zero (the perf trajectory across PRs is diffed mechanically;
@@ -66,10 +67,26 @@ def _validate_rows(name: str, rows) -> None:
         if not isinstance(derived, str):
             raise BenchSchemaError(
                 f"{name}: row {key!r} derived field must be a string")
+    # steady-state timing rows must carry a dispersion sibling: a bare point
+    # estimate is not diffable across PRs (single-shot noise once inverted
+    # the bench_pipeline B1/B2 ordering), so every `X_steady_us` row needs
+    # the matching `X_steady_iqr_us`
+    keys = {r[0] for r in rows.rows}
+    for key in keys:
+        if key.endswith("_steady_us"):
+            sibling = key[:-len("_steady_us")] + "_steady_iqr_us"
+            if sibling not in keys:
+                raise BenchSchemaError(
+                    f"{name}: steady row {key!r} lacks its dispersion "
+                    f"sibling {sibling!r}")
 
 
 def _write_json(name: str, rows, *, full: bool) -> None:
-    path = os.path.join(_REPO_ROOT, JSON_MODULES[name])
+    # REPRO_BENCH_DIR redirects the JSON (and its shape-gate baseline) away
+    # from the repo root — the CI smoke test writes to a tmpdir so a test
+    # run never rewrites the checked-in trajectory files
+    out_dir = os.environ.get("REPRO_BENCH_DIR", _REPO_ROOT)
+    path = os.path.join(out_dir, JSON_MODULES[name])
     payload = {r[0]: {"value": r[1], "derived": r[2]} for r in rows.rows}
     # record which sweep produced the file: quick- and full-mode rows have
     # different key sets / rep counts and must not be diffed against each

@@ -1,6 +1,6 @@
 """OptiReduce core: the paper's contribution as composable JAX modules."""
 from .allreduce import (OptiReduceConfig, SyncContext, reduce_scatter_axis,
-                        strategies, sync_bucket, sync_pytree,
+                        strategies, sync_bucket, sync_packed, sync_pytree,
                         sync_pytree_unfused)
 from .bucket_plan import BucketPlan
 from .hadamard import ht_decode, ht_encode, rademacher_sign
@@ -13,7 +13,8 @@ from .ubt import AdaptiveTimeout, DynamicIncast, TimelyRateControl, UbtState
 
 __all__ = [
     "OptiReduceConfig", "SyncContext", "strategies", "sync_bucket",
-    "sync_pytree", "sync_pytree_unfused", "reduce_scatter_axis", "BucketPlan",
+    "sync_packed", "sync_pytree", "sync_pytree_unfused",
+    "reduce_scatter_axis", "BucketPlan",
     "CollectiveSpec", "register_strategy", "resolve_spec", "strategy_names",
     "Topology", "PsumTopology", "RingTopology", "TarTopology",
     "Reliable", "Lossy", "AdaptiveTransport",

@@ -14,8 +14,11 @@ This module keeps the stable, config-driven surface:
 
   ``OptiReduceConfig`` / ``SyncContext``  — static knobs + per-step context
   ``sync_bucket``        — one flat bucket through the resolved spec
-  ``sync_pytree``        — the fused BucketPlan engine (scan/vmap over a
-                           packed (B, bucket_elems) batch)
+  ``sync_packed``        — the fused engine core on a pre-packed
+                           (B, bucket_elems) batch: scan / vmap / the
+                           stage-skewed ``pipelined`` software schedule
+  ``sync_pytree``        — pack -> ``sync_packed`` -> unpack over a static
+                           :class:`BucketPlan`
   ``sync_pytree_unfused``— the seed bucketing loop, kept as the bitwise
                            parity oracle for the ``parity`` test suite
   ``reduce_scatter_axis``— the FSDP/ZeRO reduction (deferred stage 2),
@@ -44,14 +47,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .bucket_plan import BucketPlan
+from .bucket_plan import BucketPlan, bucket_keys
 from .pipeline import (CollectiveSpec, Hadamard, HTQuant, Identity, Lossy,
                        OptiReduceConfig, Reliable, SyncContext, TarTopology,
-                       register_strategy, resolve_spec, strategy_names)
+                       Topology, register_strategy, resolve_spec,
+                       strategy_names)
 
 __all__ = [
     "OptiReduceConfig", "SyncContext", "CollectiveSpec", "register_strategy",
-    "resolve_spec", "strategies", "sync_bucket", "sync_pytree",
+    "resolve_spec", "strategies", "sync_bucket", "sync_packed", "sync_pytree",
     "sync_pytree_unfused", "reduce_scatter_axis",
 ]
 
@@ -85,20 +89,126 @@ def sync_pytree(grads, ctx: SyncContext, *, bucket_elems: int = 6_553_600,
     are packed into one ``(B, bucket_elems)`` batch and the strategy
     pipeline runs as a single traced body — constant HLO size in B and no
     second full-gradient materialization. ``mode`` picks the schedule
-    tradeoff: ``'scan'`` (default) serializes buckets (smallest program;
-    bucket k+1's collective waits on bucket k), ``'vmap'`` vectorizes over
-    the bucket axis so the collectives stay batched/concurrent like the
-    seed's unrolled loop. Both are bitwise-identical to
+    tradeoff (see :func:`sync_packed`); all modes are bitwise-identical to
     :func:`sync_pytree_unfused`.
     """
-    if mode not in ("scan", "vmap"):
-        raise ValueError(f"unknown sync_pytree mode {mode!r}")
-    if spec is None:
-        spec = resolve_spec(ctx.cfg)
     if plan is None:
         plan = BucketPlan.for_tree(grads, bucket_elems)
     batch = plan.pack(grads)                         # (B, bucket_elems)
-    keys = plan.bucket_keys(ctx.key)
+    return plan.unpack(sync_packed(batch, ctx, mode=mode, spec=spec))
+
+
+def _sync_pipelined(batch, keys, ctx: SyncContext, spec: CollectiveSpec):
+    """Stage-skewed software pipeline over the bucket axis (depth-2 skew).
+
+    Iteration k *encodes* bucket k, *exchanges* bucket k-1, and *decodes*
+    bucket k-2; the in-flight encoded/exchanged payloads ride in the scan
+    carry, so within each traced step the exchange collectives of bucket
+    k-1 have no data dependency on the encode/decode kernels of buckets
+    k / k-2 and XLA's async collectives genuinely overlap with neighboring
+    buckets' Pallas (or MXU-form) codec work.  The first/last two buckets
+    run as an unrolled prologue/epilogue; with B <= 3 the steady-state
+    window is empty and the whole schedule unrolls (the skew is deeper than
+    the bucket count).
+
+    Per-bucket computation is the same encode/exchange/decode composition
+    ``CollectiveSpec.all_reduce`` runs, so results are bitwise-identical to
+    the scan/vmap modes and the unfused oracle (pinned by the ``parity``
+    suite).  Returns ``(synced_batch, (dropped, total), recorded)``.
+    """
+    cfg = ctx.cfg
+    nbuckets = batch.shape[0]
+    length = batch.shape[-1]
+    recorded = False
+
+    def enc(bucket, key):
+        sctx = SyncContext(cfg=cfg, key=key)
+        return (key, spec.encode_stage(bucket, sctx))
+
+    def exch(state):
+        nonlocal recorded
+        key, inner = state
+        stats: dict = {}
+        sctx = SyncContext(cfg=cfg, key=key, stats=stats)
+        out = spec.exchange_stage(inner, sctx)
+        recorded = recorded or ("total" in stats)
+        return ((key, out), (stats.get("dropped", jnp.zeros(())),
+                             stats.get("total", jnp.zeros(()))))
+
+    def dec(state):
+        key, inner = state
+        sctx = SyncContext(cfg=cfg, key=key)
+        return spec.decode_stage(inner, length, sctx)
+
+    dropped = total = jnp.zeros(())
+    if nbuckets <= 3:
+        # fully unrolled: prologue/epilogue swallow the steady-state window
+        enc_live: dict = {}
+        exch_live: dict = {}
+        outs = [None] * nbuckets
+        for it in range(nbuckets + 2):
+            if it < nbuckets:
+                enc_live[it] = enc(batch[it], keys[it])
+            if 0 <= it - 1 < nbuckets:
+                exch_live[it - 1], (d, t) = exch(enc_live.pop(it - 1))
+                dropped, total = dropped + d, total + t
+            if 0 <= it - 2 < nbuckets:
+                outs[it - 2] = dec(exch_live.pop(it - 2))
+        return jnp.stack(outs), (dropped, total), recorded
+
+    # prologue: fill the two pipeline registers
+    e_carry = enc(batch[0], keys[0])
+    e_next = enc(batch[1], keys[1])
+    x_carry, (d, t) = exch(e_carry)
+    dropped, total = dropped + d, total + t
+
+    def body(carry, inp):
+        (cd, ct), e_prev, x_prev = carry
+        bucket, key = inp
+        e_k = enc(bucket, key)                 # encode bucket k
+        x_k, (d, t) = exch(e_prev)             # exchange bucket k-1
+        out = dec(x_prev)                      # decode bucket k-2
+        return ((cd + d, ct + t), e_k, x_k), out
+
+    ((d2, t2), e_last, x_last), mid = jax.lax.scan(
+        body, ((jnp.zeros(()), jnp.zeros(())), e_next, x_carry),
+        (batch[2:], keys[2:]))
+    dropped, total = dropped + d2, total + t2
+
+    # epilogue: drain the registers for the last two buckets
+    x_fin, (d, t) = exch(e_last)
+    dropped, total = dropped + d, total + t
+    tail = jnp.stack([dec(x_last), dec(x_fin)])
+    return jnp.concatenate([mid, tail]), (dropped, total), recorded
+
+
+def sync_packed(batch: jnp.ndarray, ctx: SyncContext, *, mode: str = "scan",
+                spec: CollectiveSpec | None = None) -> jnp.ndarray:
+    """Sync an already-packed ``(B, bucket_elems)`` batch — the engine core
+    behind :func:`sync_pytree`, exposed so the trainer's packed gradient
+    arena can feed its accumulator straight in (no pack/unpack HBM passes
+    around the sync).
+
+    ``mode``:
+      ``'scan'``      one ``lax.scan``'d strategy body; buckets strictly
+                      serialized (smallest program).
+      ``'vmap'``      vectorized over the bucket axis; collectives batched/
+                      concurrent like the seed's unrolled loop.
+      ``'pipelined'`` stage-skewed software pipeline: iteration k encodes
+                      bucket k, exchanges bucket k-1, decodes bucket k-2,
+                      so the exchange collectives overlap neighboring
+                      buckets' encode/decode kernels (depth-2 skew with
+                      unrolled prologue/epilogue).
+    All modes are bitwise-identical per bucket (same stage composition).
+    Per-bucket PRNG keys are ``fold_in(ctx.key, bucket_index)``, the seed
+    loop's derivation.
+    """
+    if mode not in ("scan", "vmap", "pipelined"):
+        raise ValueError(f"unknown sync mode {mode!r}")
+    if spec is None:
+        spec = resolve_spec(ctx.cfg)
+    nbuckets = batch.shape[0]
+    keys = bucket_keys(ctx.key, nbuckets)
     recorded = False
 
     def one_bucket(bucket, key):
@@ -110,7 +220,19 @@ def sync_pytree(grads, ctx: SyncContext, *, bucket_elems: int = 6_553_600,
         return out, (stats.get("dropped", jnp.zeros(())),
                      stats.get("total", jnp.zeros(())))
 
-    if plan.num_buckets == 1:
+    if mode == "pipelined" and nbuckets > 1:
+        # capability check up front: a Topology that only overrides
+        # all_reduce (the PR-2 protocol) cannot be stage-skewed, and the
+        # error should say so rather than surface from deep in the trace
+        if type(spec.topology).encode_stage is Topology.encode_stage:
+            raise NotImplementedError(
+                f"mode='pipelined' needs the encode/exchange/decode stage "
+                f"callables; topology {type(spec.topology).__name__} does "
+                "not implement them (override the three stages — "
+                "all_reduce alone only supports mode='scan'/'vmap')")
+        synced, (dropped, total), recorded = _sync_pipelined(
+            batch, keys, ctx, spec)
+    elif nbuckets == 1:
         synced, (dropped, total) = one_bucket(batch[0], keys[0])
         synced = synced[None]
     elif mode == "vmap":
@@ -127,7 +249,7 @@ def sync_pytree(grads, ctx: SyncContext, *, bucket_elems: int = 6_553_600,
     if recorded:
         ctx.stats["dropped"] = ctx.stats.get("dropped", 0.0) + dropped
         ctx.stats["total"] = ctx.stats.get("total", 0.0) + total
-    return plan.unpack(synced)
+    return synced
 
 
 def sync_pytree_unfused(grads, ctx: SyncContext, *,

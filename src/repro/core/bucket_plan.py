@@ -10,8 +10,9 @@ materializing a second full-size gradient copy via concatenate-then-slice.
 * ``pack`` lays the flat gradient stream into ONE ``(B, bucket_elems)``
   batch (a single full-size buffer; the last bucket zero-padded),
 * the engine then runs the strategy body once under ``lax.scan`` over the
-  leading bucket axis (or vectorized via ``vmap``) — one traced pipeline
-  regardless of B,
+  leading bucket axis (or vectorized via ``vmap``, or stage-skewed across
+  buckets via ``mode="pipelined"`` — see ``allreduce.sync_packed``) — one
+  traced pipeline regardless of B,
 * ``unpack`` restores leaf shapes/dtypes from the synced batch.
 
 Zero-padding the tail bucket is sound for every strategy: the pipelines are
@@ -62,14 +63,29 @@ class BucketPlan:
     def padded(self) -> int:
         return self.num_buckets * self.bucket_elems
 
-    def pack(self, tree) -> jnp.ndarray:
-        """Flatten leaves (pytree order) into one (B, bucket_elems) fp32
-        batch — the engine's only full-size buffer."""
+    @property
+    def offsets(self) -> tuple[int, ...]:
+        """Flat-stream start offset of each leaf (pytree order) — the arena
+        coordinates consumers like ``packed_global_norm`` reduce over."""
+        offs = []
+        off = 0
+        for size in self.sizes:
+            offs.append(off)
+            off += size
+        return tuple(offs)
+
+    def pack(self, tree, dtype=jnp.float32) -> jnp.ndarray:
+        """Flatten leaves (pytree order) into one (B, bucket_elems) batch —
+        the engine's only full-size buffer.  ``dtype`` defaults to fp32 (the
+        sync engine's wire dtype); the trainer's packed gradient arena packs
+        micro-batch grads in ``accum_dtype`` and accumulates in packed space
+        (the per-leaf cast-then-concatenate is elementwise identical to the
+        seed per-leaf accumulator)."""
         leaves = jax.tree.leaves(tree)
-        parts = [leaf.reshape(-1).astype(jnp.float32) for leaf in leaves]
+        parts = [leaf.reshape(-1).astype(dtype) for leaf in leaves]
         pad = self.padded - self.total
         if pad:
-            parts.append(jnp.zeros((pad,), jnp.float32))
+            parts.append(jnp.zeros((pad,), dtype))
         flat = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
         return flat.reshape(self.num_buckets, self.bucket_elems)
 
@@ -84,7 +100,13 @@ class BucketPlan:
         return jax.tree.unflatten(self.treedef, leaves)
 
     def bucket_keys(self, key: jax.Array) -> jax.Array:
-        """Stacked per-bucket PRNG keys: fold_in(key, bucket_index), same
-        derivation as the seed's Python loop."""
-        return jax.vmap(lambda i: jax.random.fold_in(key, i))(
-            jnp.arange(self.num_buckets, dtype=jnp.uint32))
+        """Stacked per-bucket PRNG keys (see :func:`bucket_keys`)."""
+        return bucket_keys(key, self.num_buckets)
+
+
+def bucket_keys(key: jax.Array, num_buckets: int) -> jax.Array:
+    """Stacked per-bucket PRNG keys: fold_in(key, bucket_index), the same
+    derivation as the seed's Python loop — the single source of truth the
+    bitwise parity of every sync engine schedule rests on."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(num_buckets, dtype=jnp.uint32))

@@ -386,14 +386,47 @@ class AdaptiveTransport(Lossy):
 # --------------------------------------------------------------- topologies
 class Topology:
     """Exchange-schedule protocol: owns padding, the collectives, and the
-    placement of the codec/transport hooks between them."""
+    placement of the codec/transport hooks between them.
+
+    Execution is split into three stage callables so schedules can be
+    software-pipelined across buckets (``sync_pytree(mode="pipelined")``):
+
+      ``encode_stage``    bucket -> wire state (pad + codec encode; the
+                          Pallas-kernel-heavy producer side, no collectives)
+      ``exchange_stage``  wire state -> gathered state (every collective of
+                          the schedule, plus the small per-shard reduce
+                          between TAR's two stages)
+      ``decode_stage``    gathered state -> flat synced bucket (codec decode
+                          + the unpad slice; kernel-heavy consumer side)
+
+    Stage state is a flat tuple of arrays-or-None with a bucket-independent
+    structure, so it can ride in a ``lax.scan`` carry.  ``all_reduce`` is
+    exactly the three stages composed — every mode (scan / vmap / pipelined /
+    the unfused oracle) runs the identical per-bucket computation, which is
+    what keeps them bitwise-interchangeable.
+    """
 
     def validate(self, transport: Reliable, codec: Codec) -> None:
         pass
 
+    def encode_stage(self, bucket: jnp.ndarray, transport: Reliable,
+                     codec: Codec, ctx: SyncContext) -> tuple:
+        raise NotImplementedError
+
+    def exchange_stage(self, state: tuple, transport: Reliable,
+                       codec: Codec, ctx: SyncContext) -> tuple:
+        raise NotImplementedError
+
+    def decode_stage(self, state: tuple, length: int, transport: Reliable,
+                     codec: Codec, ctx: SyncContext) -> jnp.ndarray:
+        raise NotImplementedError
+
     def all_reduce(self, bucket: jnp.ndarray, transport: Reliable,
                    codec: Codec, ctx: SyncContext) -> jnp.ndarray:
-        raise NotImplementedError
+        state = self.encode_stage(bucket, transport, codec, ctx)
+        state = self.exchange_stage(state, transport, codec, ctx)
+        return self.decode_stage(state, bucket.shape[-1], transport, codec,
+                                 ctx)
 
     def reduce_scatter(self, g, axis, dim, transport, codec, ctx):
         raise NotImplementedError(
@@ -408,8 +441,15 @@ class PsumTopology(Topology):
             raise ValueError("psum is XLA-native: it bypasses the codec and "
                              "cannot model drops (use a TAR topology)")
 
-    def all_reduce(self, bucket, transport, codec, ctx):
-        return jax.lax.pmean(bucket, ctx.data_axes())
+    def encode_stage(self, bucket, transport, codec, ctx):
+        return (bucket,)
+
+    def exchange_stage(self, state, transport, codec, ctx):
+        (bucket,) = state
+        return (jax.lax.pmean(bucket, ctx.data_axes()),)
+
+    def decode_stage(self, state, length, transport, codec, ctx):
+        return state[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -434,21 +474,33 @@ class RingTopology(Topology):
                 f"codec {type(codec).__name__} does not commute with "
                 f"{self.kind}'s internal reduction")
 
-    def all_reduce(self, bucket, transport, codec, ctx):
+    def encode_stage(self, bucket, transport, codec, ctx):
         cfg = ctx.cfg
         n = compat.axis_size(cfg.data_axis)
-        x, length = tar_lib.pad_for_tar(bucket, n, codec.block(cfg))
+        x, _ = tar_lib.pad_for_tar(bucket, n, codec.block(cfg))
         enc = codec.encode(x, ctx, cfg.data_axis)
+        return (enc.data, enc.lo, enc.step)
+
+    def exchange_stage(self, state, transport, codec, ctx):
+        data, lo, step = state
+        cfg = ctx.cfg
+        n = compat.axis_size(cfg.data_axis)
         if self.kind == "ring":
-            out = ring_lib.ring_allreduce(enc.data, cfg.data_axis)
+            out = ring_lib.ring_allreduce(data, cfg.data_axis)
         elif self.kind == "tree":
-            out = ring_lib.tree_allreduce(enc.data, cfg.data_axis)
+            out = ring_lib.tree_allreduce(data, cfg.data_axis)
         else:
             base = 4 if n % 4 == 0 else 2
-            out = ring_lib.bcube_allreduce(enc.data, cfg.data_axis, base=base)
+            out = ring_lib.bcube_allreduce(data, cfg.data_axis, base=base)
         if cfg.pod_axis is not None:
             out = jax.lax.pmean(out, cfg.pod_axis)
-        out = codec.decode_values(out, enc, ctx)
+        return (out, lo, step)
+
+    def decode_stage(self, state, length, transport, codec, ctx):
+        data, lo, step = state
+        # the stage-1 encode output is gone by now — only the grids survive
+        # the exchange, so the Encoded carries data=None rather than lying
+        out = codec.decode_values(data, Encoded(None, lo=lo, step=step), ctx)
         return out[:length]
 
 
@@ -485,14 +537,21 @@ class TarTopology(Topology):
                                          use_kernel=cfg.use_kernels)
         return jax.lax.pmean(own, cfg.pod_axis)
 
-    def all_reduce(self, bucket, transport, codec, ctx):
+    def encode_stage(self, bucket, transport, codec, ctx):
+        cfg = ctx.cfg
+        n = compat.axis_size(cfg.data_axis)
+        x, _ = tar_lib.pad_for_tar(bucket, n, codec.block(cfg))
+        enc = codec.encode(x, ctx, cfg.data_axis)
+        return (enc.data, enc.lo, enc.step)
+
+    def exchange_stage(self, state, transport, codec, ctx):
+        data, lo, step = state
         cfg = ctx.cfg
         axis = cfg.data_axis
         n = compat.axis_size(axis)
-        x, length = tar_lib.pad_for_tar(bucket, n, codec.block(cfg))
-        enc = codec.encode(x, ctx, axis)
-        s = enc.data.shape[0] // n
-        shards = enc.data.reshape(n, s)
+        enc = Encoded(data, lo=lo, step=step)
+        s = data.shape[0] // n
+        shards = data.reshape(n, s)
         if self.schedule == "rounds":
             received = tar_lib.tar_exchange_rounds(
                 shards, axis, incast=transport.incast(ctx))
@@ -510,7 +569,14 @@ class TarTopology(Topology):
                 wire, axis, incast=transport.incast(ctx))
         else:
             gathered = jax.lax.all_gather(wire, axis, axis=0, tiled=True)
-        out = codec.decode_gathered(gathered, enc, ctx)
+        return (gathered, lo, step)
+
+    def decode_stage(self, state, length, transport, codec, ctx):
+        data, lo, step = state
+        # only the quantization grids survive the exchange; data=None marks
+        # the stage-1 encode output as unavailable at decode time
+        out = codec.decode_gathered(data, Encoded(None, lo=lo, step=step),
+                                    ctx)
         return out[:length]
 
     def reduce_scatter(self, g, axis, dim, transport, codec, ctx):
@@ -559,6 +625,21 @@ class CollectiveSpec:
         """Reduce one flat bucket to its (approximate) DP mean."""
         return self.topology.all_reduce(bucket, self.transport, self.codec,
                                         ctx)
+
+    # stage callables for software-pipelined schedules (sync engine's
+    # mode="pipelined"): encode -> exchange -> decode composes to all_reduce
+    def encode_stage(self, bucket: jnp.ndarray, ctx: SyncContext) -> tuple:
+        return self.topology.encode_stage(bucket, self.transport, self.codec,
+                                          ctx)
+
+    def exchange_stage(self, state: tuple, ctx: SyncContext) -> tuple:
+        return self.topology.exchange_stage(state, self.transport,
+                                            self.codec, ctx)
+
+    def decode_stage(self, state: tuple, length: int,
+                     ctx: SyncContext) -> jnp.ndarray:
+        return self.topology.decode_stage(state, length, self.transport,
+                                          self.codec, ctx)
 
     def reduce_scatter(self, g: jnp.ndarray, axis: str, dim: int,
                        ctx: SyncContext) -> jnp.ndarray:

@@ -18,6 +18,18 @@ import jax
 import jax.numpy as jnp
 
 
+def guard_scale(loss_frac: jnp.ndarray, *,
+                skip_threshold: float = 0.10) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The §3.4 skip decision as a multiplicative scale.
+
+    Returns ``(scale, skipped?)`` with scale 0.0 when loss_frac exceeds the
+    threshold, else 1.0 — the packed-arena trainer folds this scale into its
+    single fused guard+clip multiply instead of a per-leaf tree pass.
+    """
+    skipped = loss_frac > skip_threshold
+    return jnp.where(skipped, 0.0, 1.0), skipped
+
+
 def guard_update(update: Any, loss_frac: jnp.ndarray, *,
                  skip_threshold: float = 0.10) -> tuple[Any, jnp.ndarray]:
     """Zero the pytree ``update`` when loss_frac > skip_threshold.
@@ -26,8 +38,7 @@ def guard_update(update: Any, loss_frac: jnp.ndarray, *,
     loss_frac (it is computed from the aggregated result), so replicas
     stay consistent.
     """
-    skipped = loss_frac > skip_threshold
-    scale = jnp.where(skipped, 0.0, 1.0)
+    scale, skipped = guard_scale(loss_frac, skip_threshold=skip_threshold)
     return jax.tree.map(lambda u: u * scale.astype(u.dtype), update), skipped
 
 

@@ -55,6 +55,11 @@ def main(argv=None) -> int:
                     help="drive next-step Hadamard/incast from the UBT "
                          "controllers (paper §3.2) fed by observed loss")
     ap.add_argument("--dp-mode", default="replicated")
+    ap.add_argument("--sync-mode", default="pipelined",
+                    choices=("pipelined", "scan", "vmap"),
+                    help="bucket schedule: stage-skewed software pipeline "
+                         "(overlap encode/exchange/decode across buckets), "
+                         "strict scan, or batched vmap — bitwise-identical")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatch", type=int, default=None)
@@ -83,6 +88,7 @@ def main(argv=None) -> int:
                               hadamard_block=1024),
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr),
         dp_mode=args.dp_mode, microbatch=args.microbatch,
+        sync_mode=args.sync_mode,
         seq_chunk=min(512, args.seq_len))
 
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,

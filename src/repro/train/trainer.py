@@ -15,9 +15,20 @@ Two data-parallel modes (DESIGN §4):
   deferred stage-2 broadcast is the next step's weight all_gather.
   Replicated leaves (norms, routers, ...) still sync via bucketed strategy.
 
-The whole step (fwd + bwd + sync + optimizer) is a single shard_map over the
-production mesh, so XLA can overlap bucket collectives with remaining
-backward work (two in-flight buckets, as the paper prescribes).
+Cross-bucket overlap is explicit, not hoped-for: ``TrainConfig.sync_mode``
+defaults to ``"pipelined"``, the stage-skewed software schedule in
+``core.allreduce.sync_packed`` where iteration k encodes bucket k, exchanges
+bucket k-1, and decodes bucket k-2 — the paper's "two in-flight buckets"
+(§5) expressed as a depth-2 skew whose in-flight payloads ride in the scan
+carry, so the exchange collectives overlap neighboring buckets' codec
+kernels by construction (see PERF.md for the skew diagram).
+
+The replicated path also keeps the whole gradient stream in a **packed
+arena**: micro-batch accumulation adds each microbatch's grads directly
+into the ``(B, bucket_elems)`` batch (no per-leaf zeros tree, one pack
+fused into the first add), the arena feeds ``sync_packed`` without a
+repack, and the §3.4 guard + global-norm + clip run as one fused reduction
+and one multiply over the arena before a single unpack for the optimizer.
 """
 from __future__ import annotations
 
@@ -33,9 +44,10 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.configs.base import ModelConfig
 from repro.core.allreduce import (OptiReduceConfig, SyncContext, rs_spec,
-                                  sync_pytree)
+                                  sync_packed, sync_pytree)
+from repro.core.bucket_plan import BucketPlan
 from repro.core.pipeline import resolve_spec
-from repro.core.safeguards import guard_update
+from repro.core.safeguards import guard_scale, guard_update
 from repro.models import lm_loss, param_specs, param_table
 from repro.models.parallel import ParallelCtx
 from repro.models.transformer import _tree_map_table
@@ -51,6 +63,11 @@ class TrainConfig:
     seq_chunk: int = 1024                # xent sequence chunking
     remat: bool = True
     bucket_elems: int = 6_553_600        # 25 MB fp32 buckets
+    # bucket schedule: 'pipelined' (stage-skewed software pipeline, overlaps
+    # exchange collectives with neighboring buckets' encode/decode kernels),
+    # 'scan' (strictly serial), 'vmap' (batched collectives). All three are
+    # bitwise-identical per bucket (pinned by the parity suite).
+    sync_mode: str = "pipelined"
     guard: bool = True                   # §3.4 skip-update safeguard
     unroll: bool = False                 # Python-unrolled layers (cost model)
     accum_dtype: Any = jnp.float32       # grad-accumulation dtype (bf16 for
@@ -124,21 +141,66 @@ def _spec_axes(spec: P) -> tuple[str, ...]:
     return tuple(axes)
 
 
-def sharded_global_norm(grads, specs) -> jnp.ndarray:
-    """Global L2 norm of a gradient tree whose leaves are sharded per
-    ``specs`` — per-leaf squared sums are psum'd over exactly the axes the
-    leaf is sharded on, so replicated leaves are not double-counted and the
-    result is identical on every device."""
+def _summed_groups(pairs) -> dict[tuple[str, ...], jnp.ndarray]:
+    """Sum (axes, squared-sum) pairs into one accumulator per distinct
+    sharded-axes set (canonicalized by sort, so P('a','b') and P('b','a')
+    share a group)."""
+    groups: dict[tuple[str, ...], jnp.ndarray] = {}
+    for axes, ss in pairs:
+        key = tuple(sorted(axes))
+        prev = groups.get(key)
+        groups[key] = ss if prev is None else prev + ss
+    return groups
+
+
+def _psum_group_total(groups: dict[tuple[str, ...], jnp.ndarray]) -> jnp.ndarray:
     total = jnp.zeros((), jnp.float32)
-    g_leaves = jax.tree.leaves(grads)
-    s_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
-    for g, s in zip(g_leaves, s_leaves):
-        ss = jnp.sum(jnp.square(g.astype(jnp.float32)))
-        axes = _spec_axes(s)
+    for axes, ss in groups.items():
         if axes:
             ss = jax.lax.psum(ss, axes)
         total = total + ss
-    return jnp.sqrt(total)
+    return total
+
+
+def sharded_global_norm(grads, specs) -> jnp.ndarray:
+    """Global L2 norm of a gradient tree whose leaves are sharded per
+    ``specs`` — per-leaf squared sums are psum'd over exactly the axes each
+    leaf is sharded on, so replicated leaves are not double-counted and the
+    result is identical on every device.  Leaves are grouped by their
+    sharded-axes set and each group issues ONE psum (a model with hundreds
+    of leaves pays #distinct-axes-sets collectives, not #leaves)."""
+    g_leaves = jax.tree.leaves(grads)
+    s_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    groups = _summed_groups(
+        (_spec_axes(s), jnp.sum(jnp.square(g.astype(jnp.float32))))
+        for g, s in zip(g_leaves, s_leaves))
+    return jnp.sqrt(_psum_group_total(groups))
+
+
+def packed_global_norm(batch: jnp.ndarray, plan: BucketPlan,
+                       specs) -> jnp.ndarray:
+    """:func:`sharded_global_norm` over the packed gradient arena.
+
+    Adjacent leaves sharing a sharded-axes set coalesce into one contiguous
+    arena run, so the common all-replicated case is a single fused
+    sum-of-squares over the whole flat stream (one HBM pass, no per-leaf
+    Python loop) with no psum at all; mixed-sharding trees pay one reduction
+    per contiguous run and one psum per distinct axes set.  The zero-padded
+    arena tail is excluded (runs stop at ``plan.total`` — after a quantized
+    sync the tail carries codec noise, not zeros)."""
+    flat = batch.reshape(-1)
+    s_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    runs: list[tuple[tuple[str, ...], int, int]] = []
+    for off, size, s in zip(plan.offsets, plan.sizes, s_leaves):
+        axes = tuple(sorted(_spec_axes(s)))
+        if runs and runs[-1][0] == axes and runs[-1][2] == off:
+            runs[-1] = (axes, runs[-1][1], off + size)
+        else:
+            runs.append((axes, off, off + size))
+    groups = _summed_groups(
+        (axes, jnp.sum(jnp.square(flat[a:b].astype(jnp.float32))))
+        for axes, a, b in runs)
+    return jnp.sqrt(_psum_group_total(groups))
 
 
 def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
@@ -186,58 +248,107 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
         b_local = batch["tokens"].shape[0]
         mb = tc.microbatch or b_local
         n_micro = max(1, b_local // mb)
+        ctx = SyncContext(cfg=sync_cfg, key=jax.random.fold_in(skey, 7))
         if n_micro > 1:
-            def micro(carry, mbatch):
-                gacc, lacc = carry
-                l, g = jax.value_and_grad(loss_fn)(params, mbatch)
-                gacc = jax.tree.map(
-                    lambda a, b_: a + b_.astype(tc.accum_dtype), gacc, g)
-                return (gacc, lacc + l), None
-
-            zeros = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, tc.accum_dtype), params)
             mbatches = jax.tree.map(
                 lambda x: x.reshape(n_micro, mb, *x.shape[1:]), batch)
-            (grads, loss), _ = jax.lax.scan(
-                micro, (zeros, jnp.zeros(())), mbatches)
-            grads = jax.tree.map(lambda g: g / n_micro, grads)
-            loss = loss / n_micro
-        else:
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
 
-        # ---- gradient sync: the paper's contribution lives here ----------
-        # sync_pytree builds a static BucketPlan from the local grad shapes
-        # at trace time (free at runtime) and traces ONE strategy body
-        # (lax.scan over the bucket axis) regardless of bucket count
-        ctx = SyncContext(cfg=sync_cfg, key=jax.random.fold_in(skey, 7))
         if fsdp:
-            # large leaves already reduced via the gather VJP; sync the rest
+            # large leaves arrive pre-reduced through the gather VJP, so the
+            # packed arena cannot span the whole stream — keep the per-leaf
+            # accumulator and bucket-sync only the replicated leaves
+            if n_micro > 1:
+                def micro(carry, mbatch):
+                    gacc, lacc = carry
+                    l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                    gacc = jax.tree.map(
+                        lambda a, b_: a + b_.astype(tc.accum_dtype), gacc, g)
+                    return (gacc, lacc + l), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, tc.accum_dtype), params)
+                (grads, loss), _ = jax.lax.scan(
+                    micro, (zeros, jnp.zeros(())), mbatches)
+                grads = jax.tree.map(lambda g: g / n_micro, grads)
+                loss = loss / n_micro
+            else:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
             flat_g, tdef = jax.tree.flatten(grads)
             flat_m = jax.tree.leaves(fsdp_mask)
             small = [g for g, m_ in zip(flat_g, flat_m) if not m_]
             if small:
                 synced_small = sync_pytree(small, ctx,
                                            bucket_elems=tc.bucket_elems,
-                                           spec=sync_spec)
+                                           mode=tc.sync_mode, spec=sync_spec)
                 it = iter(synced_small)
                 flat_g = [next(it) if not m_ else g
                           for g, m_ in zip(flat_g, flat_m)]
             grads = jax.tree.unflatten(tdef, flat_g)
-        else:
-            grads = sync_pytree(grads, ctx, bucket_elems=tc.bucket_elems,
-                                spec=sync_spec)
-        loss_frac = ctx.loss_fraction()
+            loss_frac = ctx.loss_fraction()
 
-        # ---- safeguards (§3.4), clip, optimizer --------------------------
-        if tc.guard:
-            grads, skipped = guard_update(grads, loss_frac,
-                                          skip_threshold=sync_cfg.skip_threshold)
+            # ---- safeguards (§3.4), clip, optimizer ----------------------
+            if tc.guard:
+                grads, skipped = guard_update(
+                    grads, loss_frac, skip_threshold=sync_cfg.skip_threshold)
+            else:
+                skipped = jnp.zeros((), jnp.bool_)
+            gnorm = sharded_global_norm(grads, p_specs)
+            clip_scale = jnp.minimum(
+                1.0, tc.optimizer.grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * clip_scale.astype(g.dtype),
+                                 grads)
         else:
-            skipped = jnp.zeros((), jnp.bool_)
-        gnorm = sharded_global_norm(grads, p_specs)
-        clip_scale = jnp.minimum(
-            1.0, tc.optimizer.grad_clip / jnp.maximum(gnorm, 1e-9))
-        grads = jax.tree.map(lambda g: g * clip_scale.astype(g.dtype), grads)
+            # ---- packed gradient arena (replicated DP) -------------------
+            # the (B, bucket_elems) batch IS the accumulator: micro-batch
+            # grads pack straight into it (the pack concat fuses into the
+            # add — no per-leaf zeros tree, no second full-gradient copy),
+            # the sync engine consumes it without a repack, and guard +
+            # global-norm + clip are one fused reduction and one multiply
+            # over the arena before the single unpack the optimizer needs
+            plan = BucketPlan.for_tree(params, tc.bucket_elems)
+            if n_micro > 1:
+                def micro(carry, mbatch):
+                    acc, lacc = carry
+                    l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                    return (acc + plan.pack(g, dtype=tc.accum_dtype),
+                            lacc + l), None
+
+                arena0 = jnp.zeros((plan.num_buckets, plan.bucket_elems),
+                                   tc.accum_dtype)
+                (arena, loss), _ = jax.lax.scan(
+                    micro, (arena0, jnp.zeros(())), mbatches)
+                # accumulate in accum_dtype (bitwise vs the seed per-leaf
+                # accumulator), then take the micro-batch mean in fp32 wire
+                # space: identical for fp32 accum, and for bf16 it drops the
+                # seed's extra accum-dtype rounding of the mean
+                arena = arena.astype(jnp.float32) / n_micro
+                loss = loss / n_micro
+            else:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+                arena = plan.pack(grads)
+
+            synced = sync_packed(arena, ctx, mode=tc.sync_mode,
+                                 spec=sync_spec)
+            loss_frac = ctx.loss_fraction()
+
+            # ---- safeguards (§3.4), clip: fused over the arena -----------
+            # norm and clip read the fp32 wire values with ONE param-dtype
+            # round at unpack; for non-fp32 params the seed instead rounded
+            # at unpack and then squared/multiplied in param dtype — same
+            # math, one fewer low-bit rounding here (fp32 params: identical)
+            if tc.guard:
+                gscale, skipped = guard_scale(
+                    loss_frac, skip_threshold=sync_cfg.skip_threshold)
+            else:
+                gscale = jnp.ones(())
+                skipped = jnp.zeros((), jnp.bool_)
+            # norm-after-guard == guard_scale * norm (the scale is 0 or 1)
+            gnorm = gscale * packed_global_norm(synced, plan, p_specs)
+            clip_scale = jnp.minimum(
+                1.0, tc.optimizer.grad_clip / jnp.maximum(gnorm, 1e-9))
+            synced = synced * (gscale * clip_scale)
+            grads = plan.unpack(synced)
         lr = jnp.asarray(tc.optimizer.lr, jnp.float32)
         new_params, new_opt = opt.update(grads, opt_state, params, lr, step)
 

@@ -93,14 +93,83 @@ def test_bitwise_matches_seed_bucketing(strategy):
         np.testing.assert_array_equal(np.asarray(ref[k]), np.asarray(out[k]))
 
 
-def test_vmap_mode_matches_scan():
+@pytest.mark.parametrize("accum_dtype", [jnp.float32, jnp.bfloat16])
+def test_arena_accumulation_bitwise_vs_per_leaf(accum_dtype):
+    """The trainer's packed gradient arena — a ``lax.scan`` accumulating
+    micro-batch grads directly into the (B, bucket_elems) batch, the pack
+    concat fused into the add — is bitwise-identical to the seed per-leaf
+    ``zeros`` + ``tree.map`` scan accumulator followed by a final pack (the
+    cast-then-concatenate commutes with the adds elementwise), and the full
+    microbatch pipeline (accumulate, fp32 cast, /n_micro mean) matches the
+    per-leaf formulation of the same math.
+
+    (The mean is taken in fp32 wire space on both sides: a divide in a
+    non-fp32 accum dtype is not XLA-stable across formulations — the
+    simplifier rewrites divide->convert chains and reciprocal multiplies
+    differently per fusion context — which is why the trainer casts before
+    dividing.)"""
+    n_micro = 3
+    sizes = [(3, 500), (700,), (9, 100)]
+    micro_list = [_tree(jax.random.PRNGKey(10 + i), sizes)
+                  for i in range(n_micro)]
+    gs = jax.tree.map(lambda *xs: jnp.stack(xs), *micro_list)
+    plan = BucketPlan.for_tree(micro_list[0], 1000)
+
+    @jax.jit
+    def seed_path(gs):
+        def micro(acc, g):
+            return jax.tree.map(
+                lambda a, b: a + b.astype(accum_dtype), acc, g), None
+        zeros = jax.tree.map(
+            lambda g: jnp.zeros(g.shape[1:], accum_dtype), gs)
+        acc, _ = jax.lax.scan(micro, zeros, gs)
+        return plan.pack(acc), plan.pack(acc) / n_micro
+
+    @jax.jit
+    def arena_path(gs):
+        def micro(acc, g):
+            return acc + plan.pack(g, dtype=accum_dtype), None
+        arena0 = jnp.zeros((plan.num_buckets, plan.bucket_elems),
+                           accum_dtype)
+        arena, _ = jax.lax.scan(micro, arena0, gs)
+        return arena.astype(jnp.float32), arena.astype(jnp.float32) / n_micro
+
+    seed_acc, seed_mean = seed_path(gs)
+    arena_acc, arena_mean = arena_path(gs)
+    np.testing.assert_array_equal(np.asarray(seed_acc), np.asarray(arena_acc))
+    np.testing.assert_array_equal(np.asarray(seed_mean),
+                                  np.asarray(arena_mean))
+
+
+def test_plan_offsets_cover_stream():
+    tree = _tree(jax.random.PRNGKey(4), [(3, 500), (700,), (9, 100)])
+    plan = BucketPlan.for_tree(tree, 1000)
+    assert plan.offsets == (0, 1500, 2200)
+    assert plan.offsets[-1] + plan.sizes[-1] == plan.total
+
+
+@pytest.mark.parametrize("mode", ["vmap", "pipelined"])
+def test_alternate_modes_match_scan(mode):
     tree = _tree(jax.random.PRNGKey(3), [(2048,), (2048,)])
     cfg = OptiReduceConfig(strategy="optireduce", drop_rate=0.0,
                            hadamard_block=256)
     _, a = _sync(sync_pytree, tree, cfg, 1024)
-    _, b = _sync(sync_pytree, tree, cfg, 1024, mode="vmap")
+    _, b = _sync(sync_pytree, tree, cfg, 1024, mode=mode)
     for k in tree:
         np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+@pytest.mark.parametrize("nbuckets", [1, 2, 3, 4, 8])
+def test_pipelined_mode_every_pipeline_shape(nbuckets):
+    """Depth-2 skew across every scheduling shape: B=1/2 (skew deeper than
+    bucket count, fully unrolled), B=3 (empty steady-state window), B=4
+    (single-step scan), B=8 (steady state) — all bitwise vs scan mode."""
+    tree = {"g": jax.random.normal(jax.random.PRNGKey(6), (nbuckets * 1024,))}
+    cfg = OptiReduceConfig(strategy="optireduce", drop_rate=0.0,
+                           hadamard_block=256)
+    _, a = _sync(sync_pytree, tree, cfg, 1024)
+    _, b = _sync(sync_pytree, tree, cfg, 1024, mode="pipelined")
+    np.testing.assert_array_equal(np.asarray(a["g"]), np.asarray(b["g"]))
 
 
 def test_hlo_size_constant_in_bucket_count():

@@ -36,6 +36,36 @@ def test_resolve_unknown_strategy_raises_with_names():
         pl.resolve_spec(OptiReduceConfig(strategy="nope"))
 
 
+def test_stageless_topology_gets_descriptive_pipelined_error():
+    """A Topology overriding only ``all_reduce`` (the PR-2 protocol) still
+    works under scan/vmap, but mode='pipelined' needs the stage callables —
+    and must say so instead of dying with a bare NotImplementedError deep
+    in the schedule."""
+    from repro.core.allreduce import sync_pytree
+
+    class AllReduceOnly(pl.Topology):
+        def all_reduce(self, bucket, transport, codec, ctx):
+            return jax.lax.pmean(bucket, ctx.data_axes())
+
+    spec = pl.CollectiveSpec(AllReduceOnly(), pl.Reliable(), pl.Identity())
+    mesh = make_mesh((1,), ("data",))
+    tree = {"g": jnp.ones((2048,))}
+
+    def body(t, mode):
+        ctx = SyncContext(cfg=OptiReduceConfig(), key=jax.random.PRNGKey(0))
+        return sync_pytree(t, ctx, bucket_elems=1024, mode=mode, spec=spec)
+
+    f = shard_map(lambda t: body(t, "scan"), mesh=mesh,
+                  in_specs=({"g": P()},), out_specs={"g": P()},
+                  check_vma=False)
+    np.testing.assert_array_equal(np.asarray(f(tree)["g"]),
+                                  np.asarray(tree["g"]))
+    with pytest.raises(NotImplementedError, match="pipelined.*AllReduceOnly"):
+        shard_map(lambda t: body(t, "pipelined"), mesh=mesh,
+                  in_specs=({"g": P()},), out_specs={"g": P()},
+                  check_vma=False)(tree)
+
+
 def test_register_strategy_instance_and_decorator():
     spec = pl.CollectiveSpec(pl.RingTopology("tree"), pl.Reliable(),
                              pl.Hadamard())

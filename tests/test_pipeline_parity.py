@@ -1,9 +1,11 @@
 """Oracle-equivalence (``parity``) suite for the composable collective
 pipeline: every registered strategy routed through CollectiveSpec must be
-bitwise-identical between the fused ``sync_pytree`` engine and the
-``sync_pytree_unfused`` seed-oracle loop on an 8-device mesh — with drops,
-kernels, and quantization enabled — plus the 2D (pod, data) reduce-scatter
-replica-consistency guarantees.
+bitwise-identical between the fused ``sync_pytree`` engine — in all three
+schedules, ``scan`` / ``vmap`` / the stage-skewed ``pipelined`` software
+pipeline (including B=1/B=2, where the skew is deeper than the bucket
+count) — and the ``sync_pytree_unfused`` seed-oracle loop on an 8-device
+mesh, with drops, kernels, and quantization enabled — plus the 2D
+(pod, data) reduce-scatter replica-consistency guarantees.
 
 Runs in ONE subprocess (8 forced host devices, same pattern as
 test_collectives.py); the parametrized tests assert per-strategy markers
@@ -33,6 +35,7 @@ STRATEGIES = [
 ]
 
 CHILD = r"""
+import functools
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
@@ -48,11 +51,12 @@ tree = {"w": jax.random.normal(key, (2, 1024)),
         "b": jax.random.normal(jax.random.fold_in(key, 1), (1024,)),
         "v": jax.random.normal(jax.random.fold_in(key, 2), (1024,))}
 spec = jax.tree.map(lambda _: P(), tree)
+sync_pipelined = functools.partial(sync_pytree, mode="pipelined")
 
-def run(fn, cfg):
+def run(fn, cfg, bucket_elems=1024):
     def body(t):
         ctx = SyncContext(cfg=cfg, key=jax.random.PRNGKey(5))
-        out = fn(t, ctx, bucket_elems=1024)
+        out = fn(t, ctx, bucket_elems=bucket_elems)
         return out, ctx.loss_fraction()
     f = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,),
                           out_specs=(spec, P()), check_vma=False))
@@ -69,6 +73,37 @@ for item in %(strategies)r:
             (strat, k)
     np.testing.assert_allclose(float(ref_frac), float(out_frac), atol=1e-6)
     print("PARITY %%s OK loss_frac=%%.4f" %% (strat, float(out_frac)))
+    # every engine schedule must hit the same bits: vmap (batched
+    # collectives) and the stage-skewed software pipeline (B=4 here:
+    # prologue + a 2-step lax.scan steady state + epilogue all execute)
+    for mode in ("vmap", "pipelined"):
+        alt, alt_frac = run(functools.partial(sync_pytree, mode=mode), cfg)
+        for k in tree:
+            assert np.array_equal(np.asarray(ref[k]), np.asarray(alt[k])), \
+                (mode, strat, k)
+        np.testing.assert_allclose(float(ref_frac), float(alt_frac),
+                                   atol=1e-6)
+        print("MODE %%s %%s OK" %% (mode, strat))
+    print("PIPELINED %%s OK" %% strat)
+
+# ---- skew deeper than the bucket count: B=1 and B=2 edge cases -----------
+# (tree total is 4096, so bucket_elems 4096/2048 give full tail buckets and
+# the quantized strategies stay bitwise vs the oracle)
+for strat, dr, uk in (("optireduce", 0.1, True),
+                      ("optireduce_q", 0.05, True),
+                      ("optireduce_rounds", 0.1, False)):
+    cfg = OptiReduceConfig(strategy=strat, drop_rate=dr, hadamard_block=256,
+                           use_kernels=uk, quant_bits=8, incast=3)
+    for be, nb in ((4096, 1), (2048, 2)):
+        ref, ref_frac = run(sync_pytree_unfused, cfg, bucket_elems=be)
+        for fn in (sync_pytree, sync_pipelined):
+            out, out_frac = run(fn, cfg, bucket_elems=be)
+            for k in tree:
+                assert np.array_equal(np.asarray(ref[k]),
+                                      np.asarray(out[k])), (strat, be, k)
+            np.testing.assert_allclose(float(ref_frac), float(out_frac),
+                                       atol=1e-6)
+    print("PIPELINE_EDGE %%s OK" %% strat)
 
 # ---- 2D (pod, data) reduce-scatter: cross-pod replica consistency --------
 mesh2 = make_mesh((2, 4), ("pod", "data"))
@@ -125,6 +160,31 @@ def parity_output():
 def test_spec_bitwise_matches_seed_oracle(parity_output, strategy, drop_rate,
                                           use_kernels):
     assert f"PARITY {strategy} OK" in parity_output, parity_output
+
+
+@pytest.mark.parity
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy,drop_rate,use_kernels", STRATEGIES)
+def test_pipelined_mode_bitwise(parity_output, strategy, drop_rate,
+                                use_kernels):
+    """Every engine schedule — mode='vmap' and the stage-skewed software
+    pipeline (mode='pipelined') — is pinned bitwise to mode='scan' and the
+    sync_pytree_unfused oracle for every registered strategy on 8 devices,
+    drops + kernels + quantized exchange included."""
+    assert f"MODE vmap {strategy} OK" in parity_output, parity_output
+    assert f"MODE pipelined {strategy} OK" in parity_output, parity_output
+    assert f"PIPELINED {strategy} OK" in parity_output, parity_output
+
+
+@pytest.mark.parity
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy",
+                         ["optireduce", "optireduce_q", "optireduce_rounds"])
+def test_pipelined_skew_deeper_than_bucket_count(parity_output, strategy):
+    """B=1 and B=2 edge cases: the depth-2 skew exceeds the bucket count, so
+    the whole schedule unrolls into prologue/epilogue — still bitwise vs the
+    oracle and scan mode."""
+    assert f"PIPELINE_EDGE {strategy} OK" in parity_output, parity_output
 
 
 @pytest.mark.parity
