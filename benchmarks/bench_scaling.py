@@ -15,10 +15,10 @@ from .common import Rows
 def _tar2d(n: int, groups: int, nbytes: float, steps: int, envname: str):
     env = NetworkModel.environment(envname, seed=n)
     sim = GASimulator(env, n, 0.62)
-    timeout = sim.warmup(nbytes)
+    control = sim.warmup(nbytes)
     total, drops, rounds = 0.0, 0.0, 0
     for _ in range(steps):
-        r = sim.optireduce_2d(nbytes, timeout, groups)
+        r = sim.optireduce_2d(nbytes, control, groups)
         total += r.time_ms
         drops += r.drop_frac
         rounds = r.rounds

@@ -39,7 +39,8 @@ MODULES = [
 
 # rows from these modules are serialized to BENCH_<name>.json at the repo
 # root so the perf trajectory is machine-readable across PRs (see PERF.md)
-JSON_MODULES = {"bench_pipeline": "BENCH_pipeline.json"}
+JSON_MODULES = {"bench_pipeline": "BENCH_pipeline.json",
+                "bench_timeout": "BENCH_timeout.json"}
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -67,18 +68,22 @@ def _validate_rows(name: str, rows) -> None:
         if not isinstance(derived, str):
             raise BenchSchemaError(
                 f"{name}: row {key!r} derived field must be a string")
-    # steady-state timing rows must carry a dispersion sibling: a bare point
+    # timing summary rows must carry a dispersion sibling: a bare point
     # estimate is not diffable across PRs (single-shot noise once inverted
-    # the bench_pipeline B1/B2 ordering), so every `X_steady_us` row needs
-    # the matching `X_steady_iqr_us`
+    # the bench_pipeline B1/B2 ordering). Every `X_steady_us` row needs the
+    # matching `X_steady_iqr_us`, and every `X_median_ms` row its
+    # `X_iqr_ms` (the netsim-driven ablations report medians over steps).
     keys = {r[0] for r in rows.rows}
     for key in keys:
+        sibling = None
         if key.endswith("_steady_us"):
             sibling = key[:-len("_steady_us")] + "_steady_iqr_us"
-            if sibling not in keys:
-                raise BenchSchemaError(
-                    f"{name}: steady row {key!r} lacks its dispersion "
-                    f"sibling {sibling!r}")
+        elif key.endswith("_median_ms"):
+            sibling = key[:-len("_median_ms")] + "_iqr_ms"
+        if sibling is not None and sibling not in keys:
+            raise BenchSchemaError(
+                f"{name}: summary row {key!r} lacks its dispersion "
+                f"sibling {sibling!r}")
 
 
 def _write_json(name: str, rows, *, full: bool) -> None:

@@ -1,90 +1,114 @@
-"""Elastic rescaling demo: train on N workers, checkpoint, resume on N'.
+"""Elastic participation demo: straggler detected -> ejected -> probation
+-> readmitted, end to end through the runtime control plane.
 
     PYTHONPATH=src python examples/elastic_rescale.py
 
-Shows the full fault-tolerance loop: deterministic data re-partitioning,
-FSDP shard surgery (gather old shards -> re-split), and loss continuity
-across the rescale. OptiReduce itself is N-agnostic (TAR shard count
-follows the axis size), so nothing in the collective needs migrating.
+An 8-node job runs under the calibrated cloud-network simulator.  Mid-run
+one peer degrades to 7x latency on every transfer (a persistent compute/
+network straggler — the case the §3.2 timeout controllers alone cannot fix,
+since t_B just converges to the straggler's pace).  The control plane's
+EWMA detector ejects it: the SyncPolicy's active-peer set shrinks, the TAR
+round schedule regenerates over the remaining peers (the ejected peer's
+gradient contribution is excluded and compensated, and it still *receives*
+every reduced bucket, so it keeps training).  When the peer heals, the
+cooldown expires into probation and clean steps readmit it — a pure policy
+flip, served from the compiled-step cache, no checkpoint surgery.
+
+Per-phase step times and drop fractions are printed, plus every policy
+transition and the step-cache hit/miss trace (eject -> readmit reuses the
+previously compiled steps; only the first sight of each policy "compiles").
 """
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_smoke
-from repro.data.pipeline import DataConfig, SyntheticLM
-from repro.models import SINGLE, init_params, lm_loss
-from repro.optim.optimizers import OptimizerConfig, make_optimizer
-from repro.train import checkpoint as ckpt
-from repro.train.elastic import gather_shards, reshard
+from repro.runtime import ControlPlane, PolicyStepCache
+from repro.sim.netsim import GASimulator, NetworkModel
+
+N, SLOW_PEER, SLOW_FACTOR = 8, 5, 7.0
+BUCKET = 25 * 2 ** 20
 
 
-def train_phase(params, opt, opt_state, data, steps, start, n_workers):
-    """Emulated N-worker DDP phase (per-worker grads, mean-aggregated)."""
-    cfg = get_smoke("gpt2-paper")
-
-    @jax.jit
-    def step(p, o, batch, s):
-        def loss_fn(pp):
-            return lm_loss(pp, batch, cfg, SINGLE, key=jax.random.PRNGKey(0),
-                           seq_chunk=32)
-        l, g = jax.value_and_grad(loss_fn)(p)
-        p2, o2 = opt.update(g, o, p, jnp.float32(3e-3), s)
-        return p2, o2, l
-
-    losses = []
-    for s in range(start, start + steps):
-        # each worker loads only its shard; aggregate == global batch here
-        parts = [data.host_batch(s, w, n_workers) for w in range(n_workers)]
-        batch = {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
-        batch = jax.tree.map(jnp.asarray, batch)
-        params, opt_state, loss = step(params, opt_state, batch,
-                                       jnp.asarray(s))
-        losses.append(float(loss))
-    return params, opt_state, losses
+def run_phase(name, sim, control, cache, steps, transitions):
+    """Simulate one phase; returns (median step ms, mean drop frac)."""
+    times, drops = [], []
+    policy = control.policy()
+    for _ in range(steps):
+        r = sim.optireduce(BUCKET, control, fixed_incast=1)
+        times.append(r.time_ms)
+        drops.append(r.drop_frac)
+        new = control.policy()
+        if new != policy:
+            if cache.get(new) is None:
+                cache.put(new, f"compiled-step-{len(cache)}")
+                how = "compiled"
+            else:
+                how = "cache hit"
+            if new.active_peers != policy.active_peers:   # membership moved
+                status = control.detector.status(SLOW_PEER)
+                transitions.append(
+                    f"  step {control.steps:3d}: peer {SLOW_PEER} is "
+                    f"{status:9s} active={new.active_peers or 'all'} ({how})")
+            policy = new
+    med, drop = float(np.median(times)), float(np.mean(drops))
+    print(f"{name:28s} median step {med:7.2f} ms   drop {drop:.5f}   "
+          f"active={control.policy().active_peers or 'all'}")
+    return med, drop, times
 
 
 def main():
-    cfg = get_smoke("gpt2-paper")
-    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
-                                  global_batch=8, markov_weight=0.85,
-                                  n_succ=1))
-    key = jax.random.PRNGKey(0)
-    params = init_params(key, cfg)
-    opt = make_optimizer(OptimizerConfig(name="momentum", lr=3e-3,
-                                         weight_decay=0.0))
-    opt_state = opt.init(params)
+    env = NetworkModel.environment("local_1.5", seed=42)
+    sim = GASimulator(env, N)
+    # short detector windows so the whole loop fits in a demo run
+    control = ControlPlane.create(
+        n_nodes=N, detector_kw=dict(alpha=0.4, patience=3, cooldown=15,
+                                    probation=4))
+    cache = PolicyStepCache(maxsize=4)
+    cache.put(control.policy(), "compiled-step-0")
+    sim.warmup(BUCKET, control=control)
+    transitions: list[str] = []
 
-    # --- phase 1: 8 workers ------------------------------------------------
-    params, opt_state, l1 = train_phase(params, opt, opt_state, data,
-                                        steps=40, start=0, n_workers=8)
-    print(f"phase1 (N=8):  loss {l1[0]:.3f} -> {l1[-1]:.3f}")
+    print(f"8-node OptiReduce job, 25 MB buckets ({env.p99_over_p50} "
+          "tail environment)\n")
+    healthy, _, _ = run_phase("phase 1: healthy", sim, control, cache, 40,
+                              transitions)
 
-    # checkpoint as 8 FSDP shards (what each worker would hold)
-    shards = reshard(params, cfg, 8)
-    ckpt.save("/tmp/optireduce_elastic", 40, shards[0],
-              meta={"n_workers": 8, "shard": 0})
-    print("checkpointed worker-0 shard; simulating rescale 8 -> 4 workers")
+    env.peer_factors = tuple(SLOW_FACTOR if p == SLOW_PEER else 1.0
+                             for p in range(N))
+    degraded, _, t2 = run_phase(
+        f"phase 2: peer {SLOW_PEER} {SLOW_FACTOR:.0f}x slow", sim, control,
+        cache, 40, transitions)
+    det = control.detector.peers[SLOW_PEER]
+    assert det.ejections >= 1, "straggler was never ejected"
+    eject_at = next((i for i, t in enumerate(t2) if t < 2 * healthy), None)
+    if eject_at is not None:
+        waiting = float(np.median(t2[:max(eject_at, 1)]))
+        after = float(np.median(t2[eject_at:]))
+        print(f"    waiting on the straggler: {waiting:7.2f} ms/step; "
+              f"after ejection: {after:7.2f} ms/step")
 
-    # --- rescale: reassemble from shards, re-split for 4 workers -----------
-    full = gather_shards(shards, cfg)
-    new_shards = reshard(full, cfg, 4)
-    assert len(new_shards) == 4
-    restored = gather_shards(new_shards, cfg)
-    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(params)):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    env.peer_factors = None                       # the peer heals
+    healed, _, _ = run_phase("phase 3: peer healed", sim, control, cache,
+                             60, transitions)
 
-    # --- phase 2: 4 workers, same global stream ----------------------------
-    params, opt_state, l2 = train_phase(restored, opt, opt_state, data,
-                                        steps=40, start=40, n_workers=4)
-    print(f"phase2 (N=4):  loss {l2[0]:.3f} -> {l2[-1]:.3f}")
-    assert l2[0] <= l1[0], "loss must not regress across the rescale"
-    print("elastic rescale OK: training continued seamlessly on N'=4")
+    print("\npolicy transitions:")
+    print("\n".join(transitions))
+    print(f"\nstep cache: {cache.hits} hits, {cache.misses} misses "
+          f"({len(cache)} compiled steps held)")
+
+    post_eject = degraded  # median over the phase incl. pre-ejection steps
+    assert post_eject < SLOW_FACTOR * healthy, \
+        "ejection did not contain the straggler tail"
+    final = control.detector.status(SLOW_PEER)
+    assert final in ("active", "probation"), \
+        f"healed peer was never readmitted (still {final})"
+    print(f"\npeer {SLOW_PEER} final state: {final}"
+          f"{' (readmitted)' if final == 'active' else ''}")
+    print("elastic participation OK: ejected on degradation, readmitted "
+          "after probation, no checkpoint surgery")
 
 
 if __name__ == "__main__":

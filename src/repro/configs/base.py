@@ -105,7 +105,7 @@ def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
     if shape.name == "long_500k" and not cfg.sub_quadratic():
         return False, ("pure full-attention arch: 500k-token decode needs "
                        "sub-quadratic attention (skip per assignment; see "
-                       "DESIGN.md §5)")
+                       "DESIGN.md)")
     return True, ""
 
 

@@ -41,6 +41,13 @@ Built-in strategy names (``strategies()``):
 Drops are applied on stage 1 only by default (the aggregated shard is then
 authoritative and every replica receives identical bytes from the broadcast,
 keeping replicas consistent; see DESIGN §2).
+
+``OptiReduceConfig.active_peers`` (set by the runtime control plane's
+``SyncPolicy``, see repro/runtime/ and DESIGN §5) degrades participation:
+a proper subset excludes the ejected peers' contributions — via the masked
+compensated mean on a2a schedules, via round schedules regenerated over the
+active peers' virtual ring on rounds/ring schedules — while ejected peers
+still receive every reduced bucket.
 """
 from __future__ import annotations
 

@@ -91,6 +91,14 @@ class OptiReduceConfig:
     # quantize the FSDP gradient reduce-scatter wire to this many bits
     # (0 = native dtype). Per-Hadamard-block grids, pmax-shared; §Perf H2.
     rs_wire_bits: int = 0
+    # degraded participation (DESIGN §5): the SyncPolicy's active-peer set
+    # on the data axis — None (or the full set) means everyone contributes.
+    # A proper subset excludes the named-out peers' gradient contributions
+    # (compensated by the masked-mean machinery) and, on round-scheduled
+    # topologies, regenerates the round schedule over the active peers'
+    # virtual ring.  Ejected peers still receive the reduced result (they
+    # keep training, so probationary readmission is a pure policy flip).
+    active_peers: tuple[int, ...] | None = None
 
 
 @dataclasses.dataclass
@@ -114,8 +122,33 @@ class SyncContext:
         return jax.lax.pmean(frac, self.data_axes())
 
 
-def _mask_for(ctx: SyncContext, n: int, s: int, axis: str) -> jnp.ndarray | None:
-    """Receiver-specific (N, S) arrival mask for TAR stage 1."""
+def active_subset(cfg: OptiReduceConfig, n: int) -> tuple[int, ...] | None:
+    """Normalized degraded-participation set for an ``n``-peer axis.
+
+    Returns the sorted proper-subset tuple, or None when everyone
+    participates — the full set normalizes to None so a policy naming all
+    peers stays on the exact full-participation trace (what pins the
+    bitwise-parity acceptance criterion).
+    """
+    ap = cfg.active_peers
+    if ap is None:
+        return None
+    ap = tuple(sorted({int(p) for p in ap}))
+    if not ap:
+        raise ValueError("active_peers must name at least one peer")
+    if ap[0] < 0 or ap[-1] >= n:
+        raise ValueError(f"active_peers {ap} outside the {n}-peer axis")
+    return None if len(ap) == n else ap
+
+
+def _mask_for(ctx: SyncContext, n: int, s: int, axis: str,
+              self_index: jnp.ndarray | None = None) -> jnp.ndarray | None:
+    """Receiver-specific (N, S) arrival mask for TAR stage 1.
+
+    ``self_index`` overrides the row that is never dropped (a degraded
+    round schedule indexes rows by virtual ring position, not peer id);
+    the PRNG stream stays keyed on the absolute receiver id either way.
+    """
     cfg = ctx.cfg
     if cfg.drop_rate <= 0.0:
         return None
@@ -124,7 +157,8 @@ def _mask_for(ctx: SyncContext, n: int, s: int, axis: str) -> jnp.ndarray | None
     return drops_lib.make_mask(cfg.drop_pattern, key, n, s,
                                rate=cfg.drop_rate,
                                packet_elems=cfg.packet_elems,
-                               self_index=me)
+                               self_index=me if self_index is None
+                               else self_index)
 
 
 # ------------------------------------------------------------------- codecs
@@ -316,8 +350,9 @@ class HTQuant(Codec):
 class Reliable:
     """Everything arrives (TCP-class transports): no mask, no loss stats."""
 
-    def arrival_mask(self, ctx: SyncContext, n: int, s: int,
-                     axis: str) -> jnp.ndarray | None:
+    def arrival_mask(self, ctx: SyncContext, n: int, s: int, axis: str,
+                     self_index: jnp.ndarray | None = None
+                     ) -> jnp.ndarray | None:
         return None
 
     def incast(self, ctx: SyncContext) -> int:
@@ -328,8 +363,8 @@ class Lossy(Reliable):
     """UBT best-effort delivery: the drop-mask model (core/drops.py) decides
     per-receiver arrivals and the loss stats feed ``ctx.loss_fraction``."""
 
-    def arrival_mask(self, ctx, n, s, axis):
-        mask = _mask_for(ctx, n, s, axis)
+    def arrival_mask(self, ctx, n, s, axis, self_index=None):
+        mask = _mask_for(ctx, n, s, axis, self_index=self_index)
         if mask is not None:
             ctx.stats["dropped"] = ctx.stats.get("dropped", 0.0) + \
                 jnp.sum(1.0 - mask)
@@ -339,48 +374,70 @@ class Lossy(Reliable):
 
 class AdaptiveTransport(Lossy):
     """§3.2 control plane in the sync loop: a :class:`Lossy` transport whose
-    next-step recommendations come from the UBT controllers.
+    next-step recommendations come from the runtime :class:`ControlPlane`
+    (the UBT controllers plus the straggler detector; see repro/runtime/).
 
-    The controllers are host state (an XLA fabric cannot drop or time out;
-    see core/ubt.py), so the loop is: run a step, call
-    ``observe(loss_frac, stage_time=...)`` with the observed loss fraction,
-    and when it returns True (recommendation changed) rebuild the step with
-    ``apply(cfg)`` — Hadamard toggles on above the §3.2.1 2% threshold and
-    ``DynamicIncast`` advertises the incast a rounds-scheduled topology
-    should use next.  ``launch/train.py --adaptive`` wires this in.
+    This is now a thin adapter — the controllers are host state (an XLA
+    fabric cannot drop or time out), so the loop is: run a step, call
+    ``observe(loss_frac, stage_time=...)``, and when it returns True (the
+    policy moved) rebuild or cache-switch the step with ``apply(cfg)`` —
+    Hadamard toggles on above the §3.2.1 2% threshold, ``DynamicIncast``
+    advertises the next incast, and per-peer stage times (when the caller
+    can measure them) feed persistent-straggler ejection.
+    ``launch/train.py --adaptive`` wires the ControlPlane in directly.
     """
 
-    def __init__(self, state: UbtState, use_hadamard: bool = False):
-        self.state = state
-        self.use_hadamard = use_hadamard
+    def __init__(self, control=None, use_hadamard: bool | None = None, *,
+                 state: UbtState | None = None):
+        from repro.runtime import ControlPlane, StragglerDetector
+        if control is None:
+            if state is None:
+                raise ValueError("AdaptiveTransport needs a ControlPlane "
+                                 "(or a UbtState via state=)")
+            control = ControlPlane(
+                state=state,
+                detector=StragglerDetector(state.incast.n_nodes))
+        self.control = control
+        # only an explicit argument overrides the controller's current
+        # codec recommendation (a wrapped ControlPlane may already have
+        # crossed the activation threshold)
+        if use_hadamard is not None:
+            self.control.use_hadamard = bool(use_hadamard)
 
     @classmethod
     def create(cls, n_nodes: int, **kw) -> "AdaptiveTransport":
-        return cls(state=UbtState.create(n_nodes=n_nodes, **kw))
+        from repro.runtime import ControlPlane
+        return cls(control=ControlPlane.create(n_nodes=n_nodes, **kw))
+
+    @property
+    def state(self) -> UbtState:
+        return self.control.state
+
+    @property
+    def use_hadamard(self) -> bool:
+        return self.control.use_hadamard
+
+    @use_hadamard.setter
+    def use_hadamard(self, value: bool) -> None:
+        self.control.use_hadamard = bool(value)
 
     def incast(self, ctx: SyncContext | None = None) -> int:
-        return max(1, self.state.incast.value)   # n_nodes=1 advertises I=0
+        return self.control.policy().incast
 
     def observe(self, loss_frac: float, *, stage_time: float | None = None,
-                timed_out: bool = False) -> bool:
+                timed_out: bool = False,
+                peer_stage_times=None) -> bool:
         """Feed one step's observations; True if the recommendation moved."""
-        before = (self.use_hadamard, self.state.incast.value)
-        if stage_time is not None and not self.state.timeout.ready:
-            self.state.timeout.observe_warmup(stage_time)
-        self.state.incast.update(loss_frac=loss_frac, timed_out=timed_out)
-        at = self.state.timeout
-        if at.hadamard_active(loss_frac):
-            self.use_hadamard = True
-        elif loss_frac < at.ht_threshold / 2.0:
-            # hysteresis band [thr/2, thr): loss hovering at the threshold
-            # must not flap the codec (each flip retraces the step)
-            self.use_hadamard = False
-        return (self.use_hadamard, self.state.incast.value) != before
+        from repro.runtime import StepTelemetry
+        return self.control.observe(StepTelemetry(
+            step=self.control.steps, loss_frac=float(loss_frac),
+            timed_out=timed_out, step_time=stage_time,
+            peer_stage_times=(None if peer_stage_times is None
+                              else tuple(peer_stage_times))))
 
     def apply(self, cfg: OptiReduceConfig) -> OptiReduceConfig:
         """Fold the current recommendation into a sync config."""
-        return dataclasses.replace(cfg, use_hadamard=self.use_hadamard,
-                                   incast=self.incast())
+        return self.control.apply(cfg)
 
 
 # --------------------------------------------------------------- topologies
@@ -442,6 +499,11 @@ class PsumTopology(Topology):
                              "cannot model drops (use a TAR topology)")
 
     def encode_stage(self, bucket, transport, codec, ctx):
+        cfg = ctx.cfg
+        if active_subset(cfg, compat.axis_size(cfg.data_axis)) is not None:
+            raise ValueError(
+                "psum is XLA-native: it cannot exclude peers — degraded "
+                "participation needs a TAR or ring topology")
         return (bucket,)
 
     def exchange_stage(self, state, transport, codec, ctx):
@@ -474,10 +536,21 @@ class RingTopology(Topology):
                 f"codec {type(codec).__name__} does not commute with "
                 f"{self.kind}'s internal reduction")
 
+    def _active(self, cfg: OptiReduceConfig, n: int):
+        active = active_subset(cfg, n)
+        if active is not None and self.kind != "ring":
+            raise ValueError(
+                f"{self.kind} exchanges over a rigid power-of-base "
+                "structure; degraded participation supports kind='ring' "
+                "(or a TAR topology)")
+        return active
+
     def encode_stage(self, bucket, transport, codec, ctx):
         cfg = ctx.cfg
         n = compat.axis_size(cfg.data_axis)
-        x, _ = tar_lib.pad_for_tar(bucket, n, codec.block(cfg))
+        active = self._active(cfg, n)
+        x, _ = tar_lib.pad_for_tar(bucket, n if active is None
+                                   else len(active), codec.block(cfg))
         enc = codec.encode(x, ctx, cfg.data_axis)
         return (enc.data, enc.lo, enc.step)
 
@@ -485,7 +558,13 @@ class RingTopology(Topology):
         data, lo, step = state
         cfg = ctx.cfg
         n = compat.axis_size(cfg.data_axis)
-        if self.kind == "ring":
+        active = self._active(cfg, n)
+        if active is not None:
+            # virtual ring of active peers; ejected peers' garbage output is
+            # replaced by the graft before it can reach the pod reduction
+            out = ring_lib.ring_allreduce(data, cfg.data_axis, active=active)
+            out = tar_lib.graft_inactive(out, cfg.data_axis, active)
+        elif self.kind == "ring":
             out = ring_lib.ring_allreduce(data, cfg.data_axis)
         elif self.kind == "tree":
             out = ring_lib.tree_allreduce(data, cfg.data_axis)
@@ -517,6 +596,17 @@ class TarTopology(Topology):
     over the pods between the stages (§3.1.2 hierarchical 2D), ``'pmean'``
     folds them with a plain pmean (what a quantizing codec needs: values,
     not codes, cross the pod boundary).
+
+    Degraded participation (``cfg.active_peers`` a proper subset, DESIGN
+    §5): the ``'rounds'`` schedule is regenerated over the *virtual ring of
+    active peers* — A = |active| shards, 2(A-1) rounds, ejected peers
+    self-loop, plus ceil(E/A) graft rounds routing the result to ejected
+    peers.  The ``'a2a'`` schedule keeps its N-shard collectives (an
+    all_to_all cannot subset the axis) and instead zeroes ejected senders'
+    rows in the arrival mask at *every* receiver — their contributions are
+    excluded from the compensated mean, bitwise-identically on all
+    replicas.  Either way the synced gradient is the mean over active
+    contributions, and ejected peers still receive it.
     """
     schedule: str = "a2a"                # a2a | rounds
     outer: str = "tar"                   # tar | pmean
@@ -537,10 +627,19 @@ class TarTopology(Topology):
                                          use_kernel=cfg.use_kernels)
         return jax.lax.pmean(own, cfg.pod_axis)
 
+    def _participation(self, cfg: OptiReduceConfig, n: int):
+        """(active, n_shards): the rounds schedule shards over the active
+        set; a2a keeps N shards and excludes by mask."""
+        active = active_subset(cfg, n)
+        if active is not None and self.schedule == "rounds":
+            return active, len(active)
+        return active, n
+
     def encode_stage(self, bucket, transport, codec, ctx):
         cfg = ctx.cfg
         n = compat.axis_size(cfg.data_axis)
-        x, _ = tar_lib.pad_for_tar(bucket, n, codec.block(cfg))
+        _, n_shards = self._participation(cfg, n)
+        x, _ = tar_lib.pad_for_tar(bucket, n_shards, codec.block(cfg))
         enc = codec.encode(x, ctx, cfg.data_axis)
         return (enc.data, enc.lo, enc.step)
 
@@ -549,24 +648,44 @@ class TarTopology(Topology):
         cfg = ctx.cfg
         axis = cfg.data_axis
         n = compat.axis_size(axis)
+        active, n_shards = self._participation(cfg, n)
         enc = Encoded(data, lo=lo, step=step)
-        s = data.shape[0] // n
-        shards = data.reshape(n, s)
+        s = data.shape[0] // n_shards
+        shards = data.reshape(n_shards, s)
         if self.schedule == "rounds":
             received = tar_lib.tar_exchange_rounds(
-                shards, axis, incast=transport.incast(ctx))
+                shards, axis, incast=transport.incast(ctx), active=active)
         else:
             received = jax.lax.all_to_all(shards, axis, split_axis=0,
                                           concat_axis=0, tiled=True)
-        mask = transport.arrival_mask(ctx, n, s, axis)
         i = jax.lax.axis_index(axis)
-        own = codec.reduce(received, mask, i, enc, ctx)
+        if active is not None and self.schedule == "rounds":
+            # rows are in virtual-ring order; so are shard ownership and the
+            # self row of the drop mask
+            vpos, _ = tar_lib.peer_lookup(active, n)
+            shard_index = jnp.take(vpos, i)
+            mask = transport.arrival_mask(ctx, n_shards, s, axis,
+                                          self_index=shard_index)
+        else:
+            shard_index = i
+            mask = transport.arrival_mask(ctx, n, s, axis)
+            if active is not None:
+                # a2a: exclude ejected senders' rows at EVERY receiver (the
+                # ejected peer's own row included, so replicas agree) — the
+                # masked-mean machinery compensates exactly like a drop
+                _, is_active = tar_lib.peer_lookup(active, n)
+                rows = is_active[:, None]
+                mask = jnp.broadcast_to(rows, (n, s)) if mask is None \
+                    else mask * rows
+        own = codec.reduce(received, mask, shard_index, enc, ctx)
         if cfg.pod_axis is not None:
             own = self._outer_reduce(own, codec, ctx)
-        wire = codec.encode_shard(own, i, enc, ctx)
+        wire = codec.encode_shard(own, shard_index, enc, ctx)
         if self.schedule == "rounds":
             gathered = tar_lib.tar_broadcast_rounds(
-                wire, axis, incast=transport.incast(ctx))
+                wire, axis, incast=transport.incast(ctx), active=active)
+            if active is not None:
+                gathered = tar_lib.graft_inactive(gathered, axis, active)
         else:
             gathered = jax.lax.all_gather(wire, axis, axis=0, tiled=True)
         return (gathered, lo, step)
@@ -601,6 +720,12 @@ class TarTopology(Topology):
         received = jax.lax.all_to_all(shards, axis, split_axis=0,
                                       concat_axis=0, tiled=True)
         mask = transport.arrival_mask(ctx, n, received.shape[1], axis)
+        active = active_subset(cfg, n)
+        if active is not None:           # FSDP reduction: same a2a exclusion
+            _, is_active = tar_lib.peer_lookup(active, n)
+            rows = is_active[:, None]
+            mask = jnp.broadcast_to(rows, received.shape) if mask is None \
+                else mask * rows
         i = jax.lax.axis_index(axis)
         own = codec.reduce(received, mask, i, enc, ctx)
         own = codec.decode_values(own, enc, ctx)

@@ -23,39 +23,53 @@ def psum_mean(x: jnp.ndarray, axis) -> jnp.ndarray:
 
 
 def ring_allreduce(x: jnp.ndarray, axis: str, *,
-                   hop_masks: jnp.ndarray | None = None) -> jnp.ndarray:
+                   hop_masks: jnp.ndarray | None = None,
+                   active: tuple[int, ...] | None = None) -> jnp.ndarray:
     """Bandwidth-optimal ring allreduce (Patarasuk-Yuan): N-1 reduce-scatter
     hops + N-1 all-gather hops over a fixed ring i -> i+1.
 
     x: flat (L,), L % N == 0. hop_masks: (2N-2, S) 0/1 — what survived each
     hop *into this node* (1 everywhere = lossless). A dropped hop loses the
     accumulated partial sum, which is exactly Ring's pathology.
+
+    With a degraded-participation set ``active`` the ring is the *virtual
+    ring of active peers*: A chunks, 2(A-1) hops, mean over A contributions;
+    ejected peers self-loop (their partial sums never enter the ring) and
+    their garbage result must be replaced via ``tar.graft_inactive`` by the
+    caller.  ``hop_masks`` then indexes the 2(A-1) virtual hops.
     """
     n = _n(axis)
-    s = x.shape[0] // n
-    chunks = x.reshape(n, s)
-    i = jax.lax.axis_index(axis)
-    perm = [(j, (j + 1) % n) for j in range(n)]
+    if active is None:
+        ring_n, k = n, jax.lax.axis_index(axis)
+        perm = [(j, (j + 1) % n) for j in range(n)]
+    else:
+        from .tar import _ring_perms, peer_lookup
+        ring_n = len(active)
+        vpos, _ = peer_lookup(active, n)
+        k = jnp.take(vpos, jax.lax.axis_index(axis))
+        perm = _ring_perms(active, n)(1)
+    s = x.shape[0] // ring_n
+    chunks = x.reshape(ring_n, s)
 
     acc = chunks  # acc[c] = running partial sum of chunk c held at this node
-    # reduce-scatter: after N-1 hops, node i owns the full sum of chunk (i+1)%n
-    for h in range(n - 1):
-        send = jnp.take(acc, (i - h) % n, axis=0)
+    # reduce-scatter: after N-1 hops, node k owns the full sum of chunk (k+1)%n
+    for h in range(ring_n - 1):
+        send = jnp.take(acc, (k - h) % ring_n, axis=0)
         recv = jax.lax.ppermute(send, axis, perm)
         m = hop_masks[h] if hop_masks is not None else 1.0
-        acc = acc.at[(i - h - 1) % n].add(recv * m)
-    own_idx = (i + 1) % n
-    own = jnp.take(acc, own_idx, axis=0) / n
+        acc = acc.at[(k - h - 1) % ring_n].add(recv * m)
+    own_idx = (k + 1) % ring_n
+    own = jnp.take(acc, own_idx, axis=0) / ring_n
 
     # all-gather ring
     out = jnp.zeros_like(chunks).at[own_idx].set(own)
     cur = own
-    for h in range(n - 1):
+    for h in range(ring_n - 1):
         recv = jax.lax.ppermute(cur, axis, perm)
-        m = hop_masks[n - 1 + h] if hop_masks is not None else 1.0
+        m = hop_masks[ring_n - 1 + h] if hop_masks is not None else 1.0
         cur = recv * m
-        out = out.at[(i - h) % n].set(cur)
-    return out.reshape(n * s)
+        out = out.at[(k - h) % ring_n].set(cur)
+    return out.reshape(ring_n * s)
 
 
 def tree_allreduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:

@@ -82,7 +82,8 @@ def tar_allreduce(x: jnp.ndarray, axis: str, *,
     return jax.lax.all_gather(own, axis, axis=0, tiled=True)
 
 
-def _grouped_rounds(axis: str, n: int, incast: int, send_for_round):
+def _grouped_rounds(axis: str, n: int, incast: int, send_for_round,
+                    perm_for_round=None):
     """Run rounds 1..N-1 with <= incast permutes in flight per group.
 
     In round r (r = 1..N-1) node j sends to node (j+r) mod N and receives
@@ -91,14 +92,19 @@ def _grouped_rounds(axis: str, n: int, incast: int, send_for_round):
     permutes in flight concurrently, and group g+1's sends are gated on
     group g's arrivals (an ``optimization_barrier`` chain), so the lowered
     HLO carries the real ceil((N-1)/I) round schedule instead of one flat
-    burst.
+    burst.  ``perm_for_round`` overrides the per-round permutation (the
+    degraded-participation schedules route over a virtual ring of active
+    peers; ``n`` is then the *virtual* ring size).
     """
     rows = []
     pending = []
     token = None
     for r in range(1, n):
         # node j sends to node (j + r) % n in round r
-        perm = [(j, (j + r) % n) for j in range(n)]
+        if perm_for_round is None:
+            perm = [(j, (j + r) % n) for j in range(n)]
+        else:
+            perm = perm_for_round(r)
         send = send_for_round(r)
         if token is not None:           # gate on the previous group's recvs
             send, token = compat.optimization_barrier((send, token))
@@ -112,48 +118,141 @@ def _grouped_rounds(axis: str, n: int, incast: int, send_for_round):
     return rows
 
 
+# ----------------------------------------------- degraded participation
+def peer_lookup(active: tuple[int, ...], n: int):
+    """Static lookup arrays for a degraded-participation set.
+
+    Returns ``(vpos, is_active)``: ``vpos[p]`` is peer p's position on the
+    virtual ring of active peers (0 for ejected peers — only ever read
+    behind an ``is_active`` guard) and ``is_active[p]`` is 1.0/0.0.
+    """
+    vpos = [0] * n
+    ind = [0.0] * n
+    for k, p in enumerate(active):
+        vpos[p] = k
+        ind[p] = 1.0
+    return jnp.asarray(vpos, jnp.int32), jnp.asarray(ind, jnp.float32)
+
+
+def _ring_perms(active: tuple[int, ...], n: int):
+    """perm_for_round over the active virtual ring: active peer at position
+    j sends to position (j+r) % A; ejected peers self-loop (their sends
+    never enter the schedule)."""
+    a = len(active)
+    ejected = [p for p in range(n) if p not in set(active)]
+
+    def perm_for_round(r: int):
+        return ([(active[j], active[(j + r) % a]) for j in range(a)]
+                + [(e, e) for e in ejected])
+    return perm_for_round
+
+
+def graft_inactive(full: jnp.ndarray, axis: str,
+                   active: tuple[int, ...]) -> jnp.ndarray:
+    """Deliver the assembled result to ejected peers.
+
+    A degraded schedule assembles the full reduced bucket only on active
+    peers; ejected peers must still *receive* it (they keep training — that
+    is what makes probationary readmission a policy flip instead of a
+    checkpoint restore).  ``ceil(E/A)`` extra graft rounds pair each ejected
+    peer with an active sender (a ppermute destination not named receives
+    zeros, so summing the rounds routes each peer exactly its copy), and a
+    final select keeps active peers' locally-assembled bytes.
+    """
+    n = axis_size(axis)
+    ejected = [p for p in range(n) if p not in set(active)]
+    if not ejected:
+        return full
+    a = len(active)
+    _, is_active = peer_lookup(active, n)
+    got = jnp.zeros_like(full)
+    for t in range(0, len(ejected), a):
+        pairs = [(active[j], e) for j, e in enumerate(ejected[t:t + a])]
+        got = got + jax.lax.ppermute(full, axis, pairs)
+    keep = jnp.take(is_active, jax.lax.axis_index(axis))
+    return jnp.where(keep > 0.5, full, got)
+
+
 def _sender_order(i: jnp.ndarray, n: int) -> jnp.ndarray:
     # row r of a by-distance stack came from (i - r) % n
     return (i - jnp.arange(n)) % n
 
 
-def tar_exchange_rounds(shards: jnp.ndarray, axis: str, *,
-                        incast: int = 1) -> jnp.ndarray:
+def tar_exchange_rounds(shards: jnp.ndarray, axis: str, *, incast: int = 1,
+                        active: tuple[int, ...] | None = None) -> jnp.ndarray:
     """Stage-1 shard exchange on the explicit round schedule (Fig 5b).
 
     shards: (N, S), row j = this node's contribution to peer j's shard.
     Returns the (N, S) received matrix in *sender* order (row p = peer p's
     shard for me) — the same layout the tiled all_to_all form produces.
+
+    With a degraded-participation set ``active`` (a proper subset of the
+    axis), the schedule is generated over the *virtual ring of active
+    peers*: shards has A = len(active) rows (virtual position k's shard),
+    rounds run r = 1..A-1, ejected peers self-loop (they neither contribute
+    nor are waited on), and the returned (A, S) matrix is in virtual-sender
+    order.  Ejected peers execute the same program on garbage rows; their
+    result is replaced by :func:`graft_inactive` after stage 2.
     """
     n = axis_size(axis)
-    i = jax.lax.axis_index(axis)
     incast = max(1, int(incast))
-    own_rows = [jnp.take(shards, i, axis=0)]           # my own contribution
-    own_rows += _grouped_rounds(axis, n, incast,
-                                lambda r: jnp.take(shards, (i + r) % n,
-                                                   axis=0))
-    # rows arrive ordered by sender distance r; reorder to sender index
-    received_by_dist = jnp.stack(own_rows)             # row r = from (i-r)%n
-    senders = _sender_order(i, n)
+    if active is None:
+        i = jax.lax.axis_index(axis)
+        own_rows = [jnp.take(shards, i, axis=0)]       # my own contribution
+        own_rows += _grouped_rounds(axis, n, incast,
+                                    lambda r: jnp.take(shards, (i + r) % n,
+                                                       axis=0))
+        # rows arrive ordered by sender distance r; reorder to sender index
+        received_by_dist = jnp.stack(own_rows)         # row r = from (i-r)%n
+        senders = _sender_order(i, n)
+        return jnp.zeros_like(received_by_dist).at[senders] \
+                  .set(received_by_dist)
+    a = len(active)
+    vpos, _ = peer_lookup(active, n)
+    k = jnp.take(vpos, jax.lax.axis_index(axis))       # my virtual position
+    own_rows = [jnp.take(shards, k, axis=0)]
+    if a > 1:
+        own_rows += _grouped_rounds(
+            axis, a, incast,
+            lambda r: jnp.take(shards, (k + r) % a, axis=0),
+            perm_for_round=_ring_perms(active, n))
+    received_by_dist = jnp.stack(own_rows)             # row r = virt (k-r)%A
+    senders = (k - jnp.arange(a)) % a
     return jnp.zeros_like(received_by_dist).at[senders].set(received_by_dist)
 
 
-def tar_broadcast_rounds(own: jnp.ndarray, axis: str, *,
-                         incast: int = 1) -> jnp.ndarray:
+def tar_broadcast_rounds(own: jnp.ndarray, axis: str, *, incast: int = 1,
+                         active: tuple[int, ...] | None = None) -> jnp.ndarray:
     """Stage-2 broadcast of the aggregated shard, mirrored round schedule.
 
     own: (S,) this node's aggregated shard. Returns the reassembled flat
     (N*S,) bucket — the same layout the tiled all_gather form produces.
+    With ``active`` set, the mirror of the degraded exchange: A-1 rounds on
+    the virtual ring assembling the flat (A*S,) bucket on active peers
+    (virtual-position order); route it to ejected peers afterwards with
+    :func:`graft_inactive`.
     """
     n = axis_size(axis)
-    i = jax.lax.axis_index(axis)
     incast = max(1, int(incast))
+    if active is None:
+        i = jax.lax.axis_index(axis)
+        out_rows = [own]
+        out_rows += _grouped_rounds(axis, n, incast, lambda r: own)
+        got_by_dist = jnp.stack(out_rows)              # row r = shard of (i-r)%n
+        senders = _sender_order(i, n)
+        out = jnp.zeros_like(got_by_dist).at[senders].set(got_by_dist)
+        return out.reshape(n * own.shape[0])
+    a = len(active)
+    vpos, _ = peer_lookup(active, n)
+    k = jnp.take(vpos, jax.lax.axis_index(axis))
     out_rows = [own]
-    out_rows += _grouped_rounds(axis, n, incast, lambda r: own)
-    got_by_dist = jnp.stack(out_rows)                  # row r = shard of (i-r)%n
-    senders = _sender_order(i, n)
+    if a > 1:
+        out_rows += _grouped_rounds(axis, a, incast, lambda r: own,
+                                    perm_for_round=_ring_perms(active, n))
+    got_by_dist = jnp.stack(out_rows)                  # row r = virt (k-r)%A
+    senders = (k - jnp.arange(a)) % a
     out = jnp.zeros_like(got_by_dist).at[senders].set(got_by_dist)
-    return out.reshape(n * own.shape[0])
+    return out.reshape(a * own.shape[0])
 
 
 def tar_allreduce_rounds(x: jnp.ndarray, axis: str, *, incast: int = 1,

@@ -23,7 +23,6 @@ import numpy as np
 
 from repro.configs import SHAPES, get_config, get_smoke
 from repro.core.allreduce import OptiReduceConfig, strategies
-from repro.core.pipeline import AdaptiveTransport
 from repro.core.safeguards import LossMonitor
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_host_mesh, make_production_mesh
@@ -52,8 +51,12 @@ def main(argv=None) -> int:
     ap.add_argument("--incast", type=int, default=1,
                     help="round-schedule incast I (rounds topologies)")
     ap.add_argument("--adaptive", action="store_true",
-                    help="drive next-step Hadamard/incast from the UBT "
-                         "controllers (paper §3.2) fed by observed loss")
+                    help="drive next-step Hadamard/incast/participation "
+                         "from the runtime ControlPlane (paper §3.2 + the "
+                         "straggler detector) fed by observed telemetry")
+    ap.add_argument("--policy-cache", type=int, default=4,
+                    help="compiled train steps kept per SyncPolicy (LRU), "
+                         "so an eject -> readmit cycle never recompiles")
     ap.add_argument("--dp-mode", default="replicated")
     ap.add_argument("--sync-mode", default="pipelined",
                     choices=("pipelined", "scan", "vmap"),
@@ -119,25 +122,42 @@ def main(argv=None) -> int:
             pass
 
     monitor = LossMonitor(skip_threshold=tc.sync.skip_threshold)
-    # §3.2 control plane: the AdaptiveTransport feeds observed loss into
-    # AdaptiveTimeout/DynamicIncast; when its recommendation (Hadamard
-    # on/off, advertised incast) moves, the step is rebuilt with the new
-    # sync spec (host-side — the XLA fabric itself cannot drop packets).
-    adaptive = (AdaptiveTransport.create(n_nodes=mesh.shape.get("data", 1))
-                if args.adaptive else None)
-    if adaptive is not None:
-        from repro.core.pipeline import TarTopology, resolve_spec
+    # §3.2 control plane (DESIGN §5): telemetry (observed loss + step wall
+    # clock) feeds the runtime ControlPlane; when its SyncPolicy (Hadamard
+    # on/off, advertised incast, active-peer set) moves, the step switches
+    # to the policy's compiled step — from the bounded LRU cache when the
+    # policy was seen before (eject -> readmit never recompiles), rebuilt
+    # and cached otherwise (host-side — XLA itself cannot drop packets).
+    control = None
+    if args.adaptive:
+        from repro.core.pipeline import (RingTopology, TarTopology,
+                                         resolve_spec)
+        from repro.runtime import (ControlPlane, PolicyStepCache, StepTelemetry,
+                                   SyncPolicy)
+        control = ControlPlane.create(n_nodes=mesh.shape.get("data", 1))
         # start from the configured codec so step 0 never rebuilds, and
         # learn which knobs this spec can even observe: incast only lowers
         # rounds schedules; use_hadamard only matters if toggling it
-        # resolves to a different spec (cfg-dependent factories)
-        adaptive.use_hadamard = tc.sync.use_hadamard
+        # resolves to a different spec (cfg-dependent factories); degraded
+        # participation needs a mask-capable or reschedulable topology
+        control.use_hadamard = tc.sync.use_hadamard
         topo = resolve_spec(tc.sync).topology
         incast_matters = (isinstance(topo, TarTopology)
                           and topo.schedule == "rounds")
         ht_matters = (resolve_spec(dataclasses.replace(
             tc.sync, use_hadamard=True)) is not resolve_spec(
                 dataclasses.replace(tc.sync, use_hadamard=False)))
+        participation_matters = (isinstance(topo, TarTopology) or
+                                 (isinstance(topo, RingTopology)
+                                  and topo.kind == "ring"))
+
+        def policy_of(sync: OptiReduceConfig) -> SyncPolicy:
+            return SyncPolicy(use_hadamard=sync.use_hadamard,
+                              incast=sync.incast,
+                              active_peers=sync.active_peers)
+
+        step_cache = PolicyStepCache(maxsize=max(1, args.policy_cache))
+        step_cache.put(policy_of(tc.sync), (jf, shardings))
         stable_rec, stable_for = None, 0
     t0 = time.time()
     for step in range(start_step, args.steps):
@@ -154,29 +174,44 @@ def main(argv=None) -> int:
                   f"gnorm {m['grad_norm']:.3f} loss_frac {m['loss_frac']:.5f}"
                   f" skipped {int(m['skipped'])} ({rate:.2f} it/s)",
                   flush=True)
-        if adaptive is not None:
-            adaptive.observe(loss_frac, stage_time=time.time() - t_step)
-            new_sync = adaptive.apply(tc.sync)
+        if control is not None:
+            control.observe(StepTelemetry(
+                step=step, loss_frac=loss_frac,
+                step_time=time.time() - t_step))
+            new_sync = control.apply(tc.sync)
             if not incast_matters:       # incast only lowers rounds forms
                 new_sync = dataclasses.replace(new_sync,
                                                incast=tc.sync.incast)
             if not ht_matters:
                 new_sync = dataclasses.replace(
                     new_sync, use_hadamard=tc.sync.use_hadamard)
+            if not participation_matters:
+                new_sync = dataclasses.replace(
+                    new_sync, active_peers=tc.sync.active_peers)
             # debounce: a growing incast ramps one step at a time, and each
             # rebuild recompiles the whole step — wait for the controller to
-            # settle. A Hadamard toggle is an accuracy decision: immediate.
+            # settle. A Hadamard toggle is an accuracy decision and an
+            # ejection stops the straggler wait: both immediate.
             stable_for = stable_for + 1 if new_sync == stable_rec else 1
             stable_rec = new_sync
-            urgent = new_sync.use_hadamard != tc.sync.use_hadamard
+            urgent = (new_sync.use_hadamard != tc.sync.use_hadamard or
+                      new_sync.active_peers != tc.sync.active_peers)
             if new_sync != tc.sync and (urgent or stable_for >= 3):
                 tc = dataclasses.replace(tc, sync=new_sync)
-                make_step, opt, _ = build_train_step(cfg, tc, mesh)
-                step_fn, shardings = make_step(
-                    jax.eval_shape(opt.init, params), batch0)
-                jf = jax.jit(step_fn, donate_argnums=(0, 1))
+                cached = step_cache.get(policy_of(new_sync))
+                if cached is not None:
+                    jf, shardings = cached
+                    how = "cached step reused"
+                else:
+                    make_step, opt, _ = build_train_step(cfg, tc, mesh)
+                    step_fn, shardings = make_step(
+                        jax.eval_shape(opt.init, params), batch0)
+                    jf = jax.jit(step_fn, donate_argnums=(0, 1))
+                    step_cache.put(policy_of(new_sync), (jf, shardings))
+                    how = "step rebuilt"
                 print(f"adaptive: use_hadamard={new_sync.use_hadamard} "
-                      f"incast={new_sync.incast} (step rebuilt)", flush=True)
+                      f"incast={new_sync.incast} "
+                      f"active={new_sync.active_peers} ({how})", flush=True)
         monitor.observe(step, loss_frac, bool(metrics["skipped"] > 0))
         if monitor.halted:
             print("HALT: excessive gradient loss (§3.4); rolling back")

@@ -1,0 +1,169 @@
+"""The closed loop: telemetry in, a hashable SyncPolicy out.
+
+The :class:`ControlPlane` owns every adaptive controller of the sync layer —
+the §3.2 :class:`~repro.core.ubt.UbtState` bundle (adaptive timeout, dynamic
+incast, Timely rate control) plus the :class:`StragglerDetector` — and
+exposes exactly one output, a :class:`SyncPolicy`:
+
+* ``use_hadamard`` — the §3.2.1 codec recommendation, with a hysteresis
+  band [threshold/2, threshold) so loss hovering at the 2% activation
+  threshold cannot flap the codec (each flip retraces the step);
+* ``incast``       — the advertised round-schedule fan-in I, clamped to the
+  active-set size;
+* ``active_peers`` — the degraded-participation set (None = everyone), fed
+  straight into ``OptiReduceConfig.active_peers``;
+* ``timeout_x``    — the x%-wait knob the simulator's deadline rule uses
+  (host-only: it never changes the compiled program, so it is excluded
+  from policy equality/hash and the compile key).
+
+Equality (and hash) of two policies therefore answers "would these compile
+to the same step?", which is what :class:`PolicyStepCache` keys on — an
+eject -> readmit cycle returns to a previously-compiled step instead of
+recompiling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Hashable
+
+from repro.core.ubt import UbtState
+
+from .straggler import StragglerDetector
+from .telemetry import StepTelemetry
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncPolicy:
+    """The control plane's recommendation for the next step (hashable;
+    ``timeout_x`` is carried but excluded from equality/hash — it is
+    continuous host-side state that never changes the compiled program)."""
+    use_hadamard: bool = False
+    incast: int = 1
+    active_peers: tuple[int, ...] | None = None     # None = full set
+    timeout_x: float = dataclasses.field(default=0.10, compare=False)
+
+    @property
+    def compile_key(self) -> Hashable:
+        """What a compiled train step depends on."""
+        return (self.use_hadamard, self.incast, self.active_peers)
+
+    def apply(self, cfg):
+        """Fold this policy into a sync config (any dataclass carrying
+        ``use_hadamard`` / ``incast`` / ``active_peers`` fields)."""
+        return dataclasses.replace(cfg, use_hadamard=self.use_hadamard,
+                                   incast=self.incast,
+                                   active_peers=self.active_peers)
+
+
+class ControlPlane:
+    """Telemetry-driven owner of the UBT controllers + straggler detector."""
+
+    def __init__(self, state: UbtState, detector: StragglerDetector, *,
+                 use_hadamard: bool = False):
+        self.state = state
+        self.detector = detector
+        self.use_hadamard = use_hadamard
+        self.steps = 0                      # observed (post-warmup) steps
+
+    @classmethod
+    def create(cls, n_nodes: int, *, use_hadamard: bool = False,
+               detector: StragglerDetector | None = None,
+               detect_stragglers: bool = True,
+               detector_kw: dict | None = None, **kw) -> "ControlPlane":
+        """Build the full controller bundle for an ``n_nodes`` job.  ``kw``
+        forwards to :meth:`UbtState.create` (``timeout=``/``incast=``/
+        ``rate=`` sub-dicts); ``detector_kw`` to :class:`StragglerDetector`.
+        """
+        if detector is None:
+            detector = StragglerDetector(n_nodes,
+                                         enabled=detect_stragglers,
+                                         **(detector_kw or {}))
+        return cls(state=UbtState.create(n_nodes=n_nodes, **kw),
+                   detector=detector, use_hadamard=use_hadamard)
+
+    # ------------------------------------------------------------ the loop
+    def observe(self, t: StepTelemetry) -> bool:
+        """Feed one step's telemetry; True if the policy moved (the caller
+        should re-resolve its sync config / compiled step)."""
+        before = self.policy()
+        at = self.state.timeout
+        sample = t.step_time
+        if sample is None and t.peer_stage_times is not None:
+            observed = [x for x in t.peer_stage_times
+                        if x is not None and x == x]
+            sample = max(observed) if observed else None
+        if sample is not None and not at.ready:
+            at.observe_warmup(float(sample))
+        if at.ready and at.t_c is not None and t.round_times:
+            at.update(stage_times=list(t.round_times),
+                      timed_out=list(t.round_timed_out or
+                                     (False,) * len(t.round_times)),
+                      frac_received=list(t.round_frac_received or
+                                         (1.0,) * len(t.round_times)),
+                      loss_frac=t.loss_frac)
+        self.state.incast.update(loss_frac=t.loss_frac, timed_out=t.timed_out)
+        if at.hadamard_active(t.loss_frac):
+            self.use_hadamard = True
+        elif t.loss_frac < at.ht_threshold / 2.0:
+            # hysteresis band [thr/2, thr): loss hovering at the threshold
+            # must not flap the codec (each flip retraces the step)
+            self.use_hadamard = False
+        if t.peer_stage_times is not None:
+            self.detector.observe(t.peer_stage_times)
+        self.steps += 1
+        return self.policy() != before
+
+    def policy(self) -> SyncPolicy:
+        active = self.detector.active_peers()
+        n = self.detector.n_peers
+        a = max(1, len(active))
+        return SyncPolicy(
+            use_hadamard=self.use_hadamard,
+            # senders use the min advertised I, and a degraded schedule has
+            # only a-1 distinct peers to fan in from
+            incast=max(1, min(self.state.incast.value, max(1, a - 1))),
+            active_peers=None if len(active) == n else active,
+            timeout_x=self.state.timeout.x)
+
+    def apply(self, cfg):
+        """Fold the current policy into a sync config."""
+        return self.policy().apply(cfg)
+
+
+class PolicyStepCache:
+    """Bounded LRU of compiled artifacts keyed by ``SyncPolicy.compile_key``
+    — an eject -> probation -> readmit cycle revisits previous policies, and
+    each train-step compile is seconds, so the launcher keeps the last few
+    compiled steps around instead of rebuilding."""
+
+    def __init__(self, maxsize: int = 4):
+        if maxsize < 1:
+            raise ValueError("maxsize must be >= 1")
+        self.maxsize = int(maxsize)
+        self._entries: OrderedDict[Hashable, Any] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, policy: SyncPolicy) -> bool:
+        return policy.compile_key in self._entries
+
+    def get(self, policy: SyncPolicy):
+        """Cached artifact for this policy, or None (marks it most-recent)."""
+        key = policy.compile_key
+        if key not in self._entries:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._entries.move_to_end(key)
+        return self._entries[key]
+
+    def put(self, policy: SyncPolicy, value) -> None:
+        key = policy.compile_key
+        self._entries[key] = value
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)

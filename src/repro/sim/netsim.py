@@ -28,6 +28,16 @@ Round structures per collective:
 ``library_factor`` models the Gloo-vs-NCCL implementation gap (the paper
 benchmarks both; NCCL's GPU-direct transport is faster at equal topology).
 All draws are deterministic in the seed.
+
+The OptiReduce paths consume the runtime :class:`ControlPlane` (DESIGN §5)
+— the same controller bundle the trainer uses — instead of private copies
+of the §3.2 state machines: the simulator produces :class:`StepTelemetry`
+(per-peer transfer times, per-round stage times/timeouts, loss fraction)
+and obeys the returned :class:`SyncPolicy` (incast, timeout x%, and the
+degraded-participation active-peer set).  ``NetworkModel.peer_factors``
+adds the persistent-straggler latency model: a per-peer multiplier on
+every transfer that peer sends, so ``bench_timeout``/``bench_tta`` can
+price ejection against wait-for-all.
 """
 from __future__ import annotations
 
@@ -36,7 +46,8 @@ import math
 
 import numpy as np
 
-from repro.core.ubt import AdaptiveTimeout, DynamicIncast
+from repro.core.ubt import TimelyRateControl
+from repro.runtime import ControlPlane, StepTelemetry
 
 
 @dataclasses.dataclass
@@ -48,12 +59,21 @@ class NetworkModel:
     rto_ms: float = 40.0             # datacenter min-RTO-ish stall length
     drop_frac_per_stall: float = 0.01  # UBT: bytes lost when a flow stalls
     seed: int = 0
+    # persistent-straggler model: multiplier on every transfer peer p sends
+    # (None = homogeneous). Mutable mid-run (a peer degrading / healing).
+    peer_factors: tuple[float, ...] | None = None
 
     def __post_init__(self):
         self.rng = np.random.default_rng(self.seed)
         # lognormal: P99/P50 = exp(2.3263 * sigma)
         self.sigma = math.log(max(self.p99_over_p50, 1.0 + 1e-9)) / 2.3263
         self.mu = math.log(self.median_ms)
+
+    def _per_peer(self, n: int):
+        """Per-peer latency multipliers when the draw is one-per-peer."""
+        if self.peer_factors is not None and len(self.peer_factors) == n:
+            return np.asarray(self.peer_factors, dtype=np.float64)
+        return 1.0
 
     @classmethod
     def environment(cls, name: str, seed: int = 0) -> "NetworkModel":
@@ -74,7 +94,8 @@ class NetworkModel:
         lat = self.rng.lognormal(self.mu, self.sigma, size=n)
         # congestion: effective bandwidth shares the same tail distribution
         bw_factor = self.rng.lognormal(0.0, self.sigma, size=n)
-        return lat + nbytes / (self.bandwidth_GBps * 1e9) * 1e3 * bw_factor
+        t = lat + nbytes / (self.bandwidth_GBps * 1e9) * 1e3 * bw_factor
+        return t * self._per_peer(n)
 
     def tcp_ms(self, nbytes: float, n: int = 1,
                factor: float = 1.0) -> np.ndarray:
@@ -103,13 +124,45 @@ class GAResult:
 
 
 class GASimulator:
-    """Per-step gradient-aggregation time for each collective topology."""
+    """Per-step gradient-aggregation time for each collective topology.
+
+    ``pace=True`` puts the §3.2.3 Timely rate controller into the UBT flow
+    path: each round's flows are paced at the controller's rate against a
+    shared bottleneck of ``capacity_GBps`` (default the link rate), the
+    resulting queueing delay feeds the controller's RTT signal, and the
+    delay rides on the round's transfer times — sustained congestion drives
+    the rate to the bottleneck's fair share instead of collapsing the tail.
+    """
 
     def __init__(self, net: NetworkModel, n_nodes: int,
-                 library_factor: float = 1.0):
+                 library_factor: float = 1.0, *, pace: bool = False,
+                 capacity_GBps: float | None = None):
         self.net = net
         self.n = n_nodes
         self.f = library_factor
+        self.pace = pace
+        self.capacity_GBps = capacity_GBps
+        self.pacer = TimelyRateControl(rate=net.bandwidth_GBps * 8e9,
+                                       max_rate=net.bandwidth_GBps * 8e9)
+        self.base_rtt_s = 20e-6          # propagation floor (below T_low)
+        self._queue_s = 0.0              # bottleneck backlog (seconds)
+
+    def paced_round_delay_s(self, nbytes_flow: float, flows: int) -> float:
+        """One Timely-paced round: update the bottleneck queue from the
+        offered load (``flows`` concurrent senders at the pacer's rate vs
+        the shared capacity), feed the controller the observed RTT, and
+        return the queueing delay this round's transfers see (seconds)."""
+        cap = (self.capacity_GBps or self.net.bandwidth_GBps) * 8e9
+        rate = self.pacer.rate
+        # this flow's serialization at its paced rate (the round duration)
+        dur = nbytes_flow * 8.0 / max(min(rate, cap), 1.0)
+        # backlog grows when the aggregate offered load exceeds capacity,
+        # drains at the spare capacity otherwise
+        self._queue_s = max(0.0,
+                            self._queue_s + (flows * rate - cap) / cap * dur)
+        delay = self._queue_s
+        self.pacer.update(self.base_rtt_s + delay)
+        return delay
 
     # ------------------------------------------------------------ baselines
     def ring(self, nbytes: float) -> GAResult:
@@ -163,21 +216,32 @@ class GASimulator:
         return GAResult(t, 0.0, rounds)
 
     # ----------------------------------------------------------- optireduce
-    def warmup(self, nbytes: float, *, iters: int = 20) -> AdaptiveTimeout:
-        """§3.2.1: profile TAR+TCP stage times; t_B = their P95."""
-        at = AdaptiveTimeout(warmup_iters=iters)
+    def warmup(self, nbytes: float, *, iters: int = 20,
+               control: ControlPlane | None = None,
+               detect_stragglers: bool = True, **kw) -> ControlPlane:
+        """§3.2.1 profiling: TAR+TCP stage times feed t_B = their P95.
+
+        Returns the job's :class:`ControlPlane` (built here unless passed
+        in) — the single owner of the timeout/incast/detector state the
+        subsequent :meth:`optireduce` steps consume and update.
+        """
+        if control is None:
+            control = ControlPlane.create(
+                n_nodes=self.n, detect_stragglers=detect_stragglers,
+                timeout={"warmup_iters": iters}, **kw)
         chunk = nbytes / self.n
         for _ in range(iters):
-            at.observe_warmup(float(np.max(self.net.tcp_ms(chunk, self.n,
-                                                           self.f))))
-        return at
+            control.state.timeout.observe_warmup(
+                float(np.max(self.net.tcp_ms(chunk, self.n, self.f))))
+        return control
 
-    def optireduce_2d(self, nbytes: float, timeout: AdaptiveTimeout,
+    def optireduce_2d(self, nbytes: float, control: ControlPlane,
                       groups: int) -> GAResult:
         """Hierarchical 2D TAR (paper §3.1.2 / App. A): groups of N/G nodes.
         Rounds: (N/G - 1) intra-group exchange + (G - 1) inter-group
         same-rank aggregation + (N/G - 1) intra-group broadcast =
         2(N/G - 1) + (G - 1), vs flat TAR's 2(N - 1)."""
+        timeout = control.state.timeout
         n = self.n
         nl = max(1, n // max(groups, 1))
         total_t, lost_bytes, total_bytes = 0.0, 0.0, 0.0
@@ -203,43 +267,67 @@ class GASimulator:
         rounds(max(groups - 1, 0), nbytes / n, groups)  # inter-group
         rounds(nl - 1, nbytes / nl, nl)              # intra-group broadcast
         drop_frac = lost_bytes / max(total_bytes, 1.0)
-        timeout.update(stage_times=stage_times, timed_out=to_flags,
-                       frac_received=frac_recv, loss_frac=drop_frac)
+        control.observe(StepTelemetry(
+            step=control.steps, loss_frac=drop_frac,
+            timed_out=any(to_flags), round_times=tuple(stage_times),
+            round_timed_out=tuple(to_flags),
+            round_frac_received=tuple(frac_recv)))
         return GAResult(total_t, drop_frac, len(stage_times))
 
-    def optireduce(self, nbytes: float, timeout: AdaptiveTimeout,
-                   incast: DynamicIncast | None = None) -> GAResult:
+    def optireduce(self, nbytes: float, control: ControlPlane, *,
+                   fixed_incast: int | None = None) -> GAResult:
+        """One UBT gradient aggregation under the control plane's policy:
+        the round schedule runs over the policy's *active-peer set* (an
+        ejected straggler is neither sent to nor waited on — its share of
+        the gradient is excluded, not late), the deadline rule uses the
+        policy's x%, and the step's telemetry (per-peer times for the
+        detector, per-round stage times for the timeout) feeds back in."""
         n = self.n
-        chunk = nbytes / n
-        i = incast.value if incast is not None else 1
-        rounds = 2 * math.ceil((n - 1) / max(i, 1))
+        policy = control.policy()
+        timeout = control.state.timeout
+        active = list(policy.active_peers) if policy.active_peers is not None \
+            else list(range(n))
+        a = len(active)
+        i = fixed_incast if fixed_incast is not None else policy.incast
+        chunk = nbytes / max(a, 1)
+        rounds = 2 * math.ceil(max(a - 1, 1) / max(i, 1))
         total_t = 0.0
         lost_bytes = 0.0
+        peer_times = np.zeros(n)
         stage_times, to_flags, frac_recv = [], [], []
         for _ in range(rounds):
             times, lost = self.net.ubt_ms(chunk * max(i, 1), n, self.f)
+            if self.pace:
+                times = times + self.paced_round_delay_s(
+                    chunk * max(i, 1), a) * 1e3
+            # every peer's (hypothetical) completion is still observed —
+            # the detector needs the straggler's pace to keep scoring it
+            peer_times += times
+            act_times = times[active]
+            act_lost = lost[active]
             # early timeout (Fig 8): once every sender's last-percentile
             # markers are in (~99% of each stream delivered), wait x%*t_C
             # and expire — shaving stall-recovery waits, not live streams;
             # the hard bound t_B caps pathological rounds. Drops stay at
             # the 0.01-0.1% the controller targets.
-            t99_all = float(np.max(times)) * 0.99
+            t99_all = float(np.max(act_times)) * 0.99
             deadline = min(timeout.round_deadline(last_pctile_seen=False),
                            t99_all + timeout.x * (timeout.t_c or t99_all))
-            arrived_frac = np.where(times <= deadline, 1.0 - lost,
-                                    np.minimum(1.0 - lost,
-                                               deadline / times))
-            t_round = float(min(np.max(times), deadline))
+            arrived_frac = np.where(act_times <= deadline, 1.0 - act_lost,
+                                    np.minimum(1.0 - act_lost,
+                                               deadline / act_times))
+            t_round = float(min(np.max(act_times), deadline))
             total_t += t_round
             lost_bytes += float(np.sum(1.0 - arrived_frac)) * chunk
             stage_times.append(t_round)
-            to_flags.append(bool(np.any(times > deadline)))
+            to_flags.append(bool(np.any(act_times > deadline)))
             frac_recv.append(float(np.mean(arrived_frac)))
-        drop_frac = lost_bytes / (rounds * n * chunk)
-        timeout.update(stage_times=stage_times, timed_out=to_flags,
-                       frac_received=frac_recv, loss_frac=drop_frac)
-        if incast is not None:
-            incast.update(loss_frac=drop_frac, timed_out=any(to_flags))
+        drop_frac = lost_bytes / (rounds * a * chunk)
+        control.observe(StepTelemetry(
+            step=control.steps, loss_frac=drop_frac, timed_out=any(to_flags),
+            peer_stage_times=tuple(peer_times),
+            round_times=tuple(stage_times), round_timed_out=tuple(to_flags),
+            round_frac_received=tuple(frac_recv)))
         return GAResult(total_t, drop_frac, rounds)
 
     def step(self, strategy: str, nbytes: float, **kw) -> GAResult:
@@ -297,22 +385,31 @@ LIBRARY_FACTOR = {
 def simulate_job(strategy: str, *, n_nodes: int, bucket_bytes: float,
                  n_steps: int, env: NetworkModel,
                  compute_ms: float = 50.0, overlap: float = 0.5,
-                 incast_dynamic: bool = False, incast: int = 1) -> dict:
+                 incast_dynamic: bool = False, incast: int = 1,
+                 eject_stragglers: bool = False, pace: bool = False,
+                 control: ControlPlane | None = None) -> dict:
     """Wall-clock of a training job: per step, compute plus the exposed
-    (non-overlapped) fraction of GA time (Fig 1 communication hiding)."""
+    (non-overlapped) fraction of GA time (Fig 1 communication hiding).
+
+    ``eject_stragglers`` arms the control plane's straggler detector (the
+    degraded-participation loop); ``pace`` puts the Timely controller into
+    the UBT flow path.  Pass ``control`` to share/inspect the controller
+    state (e.g. the detector's ejection history) after the run.
+    """
     strategy = timing_family(strategy)
-    sim = GASimulator(env, n_nodes, LIBRARY_FACTOR.get(strategy, 1.0))
-    timeout = None
-    dyn_incast = None
+    sim = GASimulator(env, n_nodes, LIBRARY_FACTOR.get(strategy, 1.0),
+                      pace=pace)
     if strategy == "optireduce":
-        timeout = sim.warmup(bucket_bytes)
-        dyn_incast = (DynamicIncast(n_nodes=n_nodes, i_init=incast)
-                      if incast_dynamic else None)
+        control = sim.warmup(bucket_bytes, control=control,
+                             detect_stragglers=eject_stragglers,
+                             incast={"i_init": incast})
     total = 0.0
     drops, ga_times = [], []
     for _ in range(n_steps):
         if strategy == "optireduce":
-            r = sim.optireduce(bucket_bytes, timeout, dyn_incast)
+            r = sim.optireduce(bucket_bytes, control,
+                               fixed_incast=None if incast_dynamic
+                               else incast)
         elif strategy == "tar_tcp":
             r = sim.step(strategy, bucket_bytes, incast=incast)
         else:
@@ -320,7 +417,13 @@ def simulate_job(strategy: str, *, n_nodes: int, bucket_bytes: float,
         total += compute_ms + max(0.0, r.time_ms * (1 - overlap))
         drops.append(r.drop_frac)
         ga_times.append(r.time_ms)
-    return {"total_ms": total, "mean_ga_ms": float(np.mean(ga_times)),
-            "p50_ga_ms": float(np.percentile(ga_times, 50)),
-            "p99_ga_ms": float(np.percentile(ga_times, 99)),
-            "mean_drop": float(np.mean(drops)), "drops": drops}
+    out = {"total_ms": total, "mean_ga_ms": float(np.mean(ga_times)),
+           "p50_ga_ms": float(np.percentile(ga_times, 50)),
+           "p99_ga_ms": float(np.percentile(ga_times, 99)),
+           "mean_drop": float(np.mean(drops)), "drops": drops}
+    if strategy == "optireduce" and control is not None:
+        active = control.policy().active_peers
+        out["active_peers"] = list(active if active is not None
+                                   else range(n_nodes))
+        out["ejected_peers"] = list(control.detector.ejected_peers())
+    return out

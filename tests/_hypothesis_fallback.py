@@ -20,6 +20,13 @@ class _Strategy:
     def __init__(self, examples):
         self.examples = list(examples)
 
+    def filter(self, predicate):
+        kept = [e for e in self.examples if predicate(e)]
+        if not kept:
+            raise ValueError("fallback filter() left no examples — widen "
+                             "the strategy's range")
+        return _Strategy(kept)
+
 
 class strategies:  # noqa: N801 — mirrors the ``hypothesis.strategies`` module
     @staticmethod

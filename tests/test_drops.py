@@ -50,3 +50,58 @@ def test_zero_rate_is_ones():
 def test_loss_fraction():
     m = jnp.concatenate([jnp.ones((2, 50)), jnp.zeros((2, 50))], axis=1)
     assert float(loss_fraction(m)) == pytest.approx(0.5)
+
+
+# ------------------------------------------------ properties (satellite):
+# determinism in (key, receiver) and the n_elems % packet_elems != 0 tail
+@given(st.integers(0, 2**31 - 1), st.integers(0, 7),
+       st.sampled_from(["bernoulli", "tail", "straggler"]))
+def test_mask_deterministic_in_key_and_receiver(seed, receiver, pattern):
+    """The whole step is jit-compatible because masks are pure functions of
+    (key, receiver): the pipeline folds the receiver id into the key, so
+    the same (key, receiver) must give identical bytes on every call and a
+    different receiver a different stream (for patterns that draw one)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), receiver)
+    a = make_mask(pattern, key, 8, 1000, rate=0.2, packet_elems=64,
+                  self_index=jnp.asarray(receiver))
+    b = make_mask(pattern, key, 8, 1000, rate=0.2, packet_elems=64,
+                  self_index=jnp.asarray(receiver))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    other = jax.random.fold_in(jax.random.PRNGKey(seed), receiver + 1)
+    c = make_mask(pattern, other, 8, 1000, rate=0.2, packet_elems=64)
+    assert c.shape == a.shape
+
+
+@given(st.integers(0, 2**31 - 1),
+       st.integers(1, 4 * 64).filter(lambda n: n % 64 != 0),
+       st.sampled_from(["bernoulli", "tail", "straggler"]))
+def test_mask_tail_edge_shape_and_values(seed, n_elems, pattern):
+    """n_elems % packet_elems != 0: the packet-granular mask is generated
+    for ceil(n/packet) packets and truncated — the shape must match exactly
+    and every entry stay 0/1 (the expansion must not wrap or pad)."""
+    m = np.asarray(make_mask(pattern, jax.random.PRNGKey(seed), 6, n_elems,
+                             rate=0.25, packet_elems=64))
+    assert m.shape == (6, n_elems)
+    assert set(np.unique(m)) <= {0.0, 1.0}
+
+
+@given(st.integers(0, 2**31 - 1),
+       st.integers(65, 8 * 64).filter(lambda n: n % 64 != 0))
+def test_tail_mask_suffix_property_at_tail_edge(seed, n_elems):
+    """The tail pattern's defining invariant — once dropped, stays dropped
+    (a timeout cuts a contiguous suffix) — must hold when the last packet
+    is partial."""
+    m = np.asarray(tail_mask(jax.random.PRNGKey(seed), 8, n_elems, rate=0.2,
+                             packet_elems=64))
+    for row in m:
+        drops = np.where(row == 0)[0]
+        if len(drops):
+            assert row[drops[0]:].max() == 0
+
+
+@given(st.integers(0, 2**31 - 1),
+       st.integers(1, 4 * 64).filter(lambda n: n % 64 != 0))
+def test_self_row_preserved_at_tail_edge(seed, n_elems):
+    m = make_mask("bernoulli", jax.random.PRNGKey(seed), 8, n_elems,
+                  rate=0.9, packet_elems=64, self_index=jnp.asarray(5))
+    assert float(jnp.min(m[5])) == 1.0

@@ -105,6 +105,84 @@ for strat, dr, uk in (("optireduce", 0.1, True),
                                        atol=1e-6)
     print("PIPELINE_EDGE %%s OK" %% strat)
 
+# ---- policy-driven dispatch: a full active set is a bitwise no-op --------
+# (the acceptance pin for the runtime control plane: with no stragglers
+# detected the SyncPolicy names every peer, active_subset normalizes that
+# to None, and every strategy stays on the exact full-participation trace)
+import dataclasses
+from repro.runtime import SyncPolicy
+for item in %(strategies)r:
+    strat, dr, uk = item
+    cfg = OptiReduceConfig(strategy=strat, drop_rate=dr, hadamard_block=256,
+                           use_kernels=uk, quant_bits=8, incast=3)
+    policy = SyncPolicy(use_hadamard=cfg.use_hadamard, incast=cfg.incast,
+                        active_peers=tuple(range(8)))
+    ref, ref_frac = run(sync_pytree, cfg)
+    out, out_frac = run(sync_pytree, policy.apply(cfg))
+    for k in tree:
+        assert np.array_equal(np.asarray(ref[k]), np.asarray(out[k])), \
+            ("policy", strat, k)
+    np.testing.assert_allclose(float(ref_frac), float(out_frac), atol=1e-6)
+    print("POLICY_FULLSET %%s OK" %% strat)
+
+# ---- degraded participation: ejected peers excluded, replicas bitwise ----
+# per-node distinct gradients (scaled by 1 + peer id) so exclusion is
+# visible; with drop_rate=0 the synced value must equal the mean over the
+# ACTIVE peers' contributions exactly (up to codec noise for quantizers)
+ACTIVE = (0, 1, 2, 4, 5, 7)
+xflat = jax.random.normal(key, (4096,))
+def run_scaled(cfg):
+    def body(xx):
+        i = jax.lax.axis_index("data")
+        local = {"w": xx * (1.0 + i.astype(jnp.float32))}
+        ctx = SyncContext(cfg=cfg, key=jax.random.PRNGKey(5))
+        out = sync_pytree(local, ctx, bucket_elems=1024)
+        return out["w"][None], ctx.loss_fraction()[None]
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=(P(),),
+                          out_specs=(P("data"), P("data")), check_vma=False))
+    return f(xflat)
+
+expected = np.asarray(xflat) * np.mean([1.0 + p for p in ACTIVE])
+for strat, uk, tol in (("optireduce", True, 1e-4),      # a2a: mask exclusion
+                       ("optireduce_rounds", False, 1e-4),  # subset schedule
+                       ("ring_ht", False, 1e-4),        # virtual ring
+                       ("optireduce_q", True, 5e-2)):   # quantized subset
+    cfg = OptiReduceConfig(strategy=strat, drop_rate=0.0, hadamard_block=256,
+                           use_kernels=uk, quant_bits=8, incast=3,
+                           active_peers=ACTIVE)
+    out, _ = run_scaled(cfg)
+    out = np.asarray(out)
+    assert np.array_equal(out, np.broadcast_to(out[0:1], out.shape)), \
+        ("participation replica divergence", strat)
+    err = np.max(np.abs(out[0] - expected)) / np.max(np.abs(expected))
+    assert err < tol, (strat, err)
+    # with transport drops on top, replicas must still agree bitwise
+    if strat != "ring_ht":                       # ring rejects Lossy
+        cfgd = dataclasses.replace(cfg, drop_rate=0.1)
+        outd, _ = run_scaled(cfgd)
+        outd = np.asarray(outd)
+        assert np.array_equal(outd, np.broadcast_to(outd[0:1], outd.shape)), \
+            ("participation+drops divergence", strat)
+    print("PARTICIPATION %%s OK err=%%.2e" %% (strat, err))
+
+# the subset round schedule must genuinely shrink: 2(A-1) rounds + 1 graft
+# vs 2(N-1) collective-permute sites in the lowered HLO
+def _n_perms(cfg):
+    def body(xx):
+        ctx = SyncContext(cfg=cfg, key=jax.random.PRNGKey(5))
+        return sync_pytree({"w": xx}, ctx, bucket_elems=4096)["w"]
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=(P(),),
+                          out_specs=P(), check_vma=False))
+    return f.lower(xflat).as_text().count("stablehlo.collective_permute")
+full_perms = _n_perms(OptiReduceConfig(strategy="optireduce_rounds",
+                                       incast=1, hadamard_block=256))
+sub_perms = _n_perms(OptiReduceConfig(strategy="optireduce_rounds",
+                                      incast=1, hadamard_block=256,
+                                      active_peers=ACTIVE))
+assert full_perms == 14, full_perms              # 2*(8-1)
+assert sub_perms == 11, sub_perms                # 2*(6-1) + 1 graft
+print("PARTICIPATION_SCHEDULE OK %%d -> %%d" %% (full_perms, sub_perms))
+
 # ---- 2D (pod, data) reduce-scatter: cross-pod replica consistency --------
 mesh2 = make_mesh((2, 4), ("pod", "data"))
 g = jax.random.normal(key, (4, 64, 48))        # same gradient on every node
@@ -185,6 +263,41 @@ def test_pipelined_skew_deeper_than_bucket_count(parity_output, strategy):
     the whole schedule unrolls into prologue/epilogue — still bitwise vs the
     oracle and scan mode."""
     assert f"PIPELINE_EDGE {strategy} OK" in parity_output, parity_output
+
+
+@pytest.mark.parity
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy,drop_rate,use_kernels", STRATEGIES)
+def test_policy_full_set_is_bitwise_noop(parity_output, strategy, drop_rate,
+                                         use_kernels):
+    """Acceptance: policy-driven dispatch with a full active-peer set (no
+    stragglers detected) keeps every registered strategy bitwise-identical
+    to its current output — SyncPolicy.apply naming all 8 peers normalizes
+    to the exact full-participation trace."""
+    assert f"POLICY_FULLSET {strategy} OK" in parity_output, parity_output
+
+
+@pytest.mark.parity
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", ["optireduce", "optireduce_rounds",
+                                      "ring_ht", "optireduce_q"])
+def test_degraded_participation_semantics(parity_output, strategy):
+    """Degraded participation on 8 devices: ejected peers' contributions
+    are excluded (the synced bucket equals the mean over ACTIVE peers'
+    distinct gradients), replicas stay bitwise-identical — including the
+    ejected peers, which still receive the result — and transport drops
+    compose with the exclusion."""
+    assert f"PARTICIPATION {strategy} OK" in parity_output, parity_output
+
+
+@pytest.mark.parity
+@pytest.mark.slow
+def test_degraded_round_schedule_shrinks(parity_output):
+    """The rounds schedule is regenerated over the active set: 2(A-1)
+    collective-permute sites plus one graft round in the lowered HLO,
+    against 2(N-1) at full participation."""
+    assert "PARTICIPATION_SCHEDULE OK 14 -> 11" in parity_output, \
+        parity_output
 
 
 @pytest.mark.parity

@@ -1,0 +1,265 @@
+"""Runtime control plane: detector state machine, SyncPolicy semantics,
+ControlPlane closed loop, the policy step cache, and the netsim integration
+(persistent-straggler ejection vs wait-for-all, Timely pacing convergence).
+"""
+import numpy as np
+import pytest
+
+from repro.runtime import (ACTIVE, EJECTED, PROBATION, ControlPlane,
+                           PolicyStepCache, StepTelemetry, StragglerDetector,
+                           SyncPolicy)
+from repro.sim.netsim import GASimulator, NetworkModel, simulate_job
+
+
+def feed(det, times, steps):
+    changed = []
+    for _ in range(steps):
+        changed.append(det.observe(times))
+    return changed
+
+
+class TestStragglerDetector:
+    def test_homogeneous_peers_never_ejected(self):
+        det = StragglerDetector(8)
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            det.observe(tuple(rng.lognormal(0.0, 0.15, 8)))
+        assert det.active_peers() == tuple(range(8))
+
+    def test_persistent_straggler_ejected_after_patience(self):
+        det = StragglerDetector(8, alpha=0.5, patience=3)
+        times = (1.0,) * 7 + (6.0,)
+        changed = feed(det, times, 10)
+        assert det.status(7) == EJECTED
+        assert det.active_peers() == tuple(range(7))
+        assert any(changed)
+        # the EWMA needs a couple of steps to cross, then patience strikes
+        assert changed.index(True) >= 2
+
+    def test_probation_then_readmission_when_healed(self):
+        det = StragglerDetector(8, alpha=0.5, patience=2, cooldown=3,
+                                probation=2)
+        feed(det, (1.0,) * 7 + (8.0,), 8)
+        assert det.status(7) == EJECTED
+        # peer heals: after the cooldown it re-enters on probation, and
+        # `probation` clean steps promote it back to ACTIVE
+        healed = (1.0,) * 8
+        seen = set()
+        for _ in range(12):
+            det.observe(healed)
+            seen.add(det.status(7))
+            if det.status(7) == ACTIVE:
+                break
+        assert PROBATION in seen
+        assert det.status(7) == ACTIVE
+        assert det.active_peers() == tuple(range(8))
+
+    def test_reejection_from_probation_backs_off(self):
+        det = StragglerDetector(8, alpha=0.5, patience=2, cooldown=2,
+                                probation=2)
+        slow = (1.0,) * 7 + (8.0,)
+        feed(det, slow, 40)
+        p = det.peers[7]
+        assert p.status == EJECTED
+        assert p.ejections >= 2
+        # exponential backoff: the second cooldown is longer than the first
+        assert p.countdown > det.cooldown or p.ejections > 2
+
+    def test_min_active_floor(self):
+        det = StragglerDetector(3, alpha=1.0, patience=1, min_active=2,
+                                cooldown=100)
+        feed(det, (1.0, 1.0, 9.0), 5)
+        assert det.status(2) == EJECTED
+        # a second peer degrades, but ejecting it would drop below the
+        # floor — it stays active however slow it scores
+        feed(det, (1.0, 9.0, 9.0), 10)
+        assert len(det.active_peers()) == 2
+        assert det.status(1) == ACTIVE
+        assert det.peers[1].score > det.eject_score
+
+    def test_disabled_never_ejects(self):
+        det = StragglerDetector(8, enabled=False, alpha=1.0, patience=1)
+        feed(det, (1.0,) * 7 + (50.0,), 20)
+        assert det.active_peers() == tuple(range(8))
+        assert det.peers[7].score > 10     # still scored, just not acted on
+
+    def test_probation_counts_as_participating(self):
+        det = StragglerDetector(4, alpha=1.0, patience=1, cooldown=2)
+        det.observe((1.0, 1.0, 1.0, 9.0))
+        assert det.status(3) == EJECTED
+        det.observe((1.0, 1.0, 1.0, 1.0))      # countdown 2 -> 1
+        assert det.status(3) == EJECTED
+        det.observe((1.0, 1.0, 1.0, 1.0))      # countdown -> 0: probation
+        assert det.status(3) == PROBATION
+        assert 3 in det.active_peers()
+
+
+class TestSyncPolicy:
+    def test_hashable_and_timeout_x_excluded(self):
+        a = SyncPolicy(use_hadamard=True, incast=2, active_peers=(0, 1, 2),
+                       timeout_x=0.10)
+        b = SyncPolicy(use_hadamard=True, incast=2, active_peers=(0, 1, 2),
+                       timeout_x=0.37)
+        assert a == b and hash(a) == hash(b)
+        assert a.compile_key == b.compile_key
+        assert a != SyncPolicy(use_hadamard=True, incast=2,
+                               active_peers=None)
+
+    def test_apply_folds_into_cfg(self):
+        from repro.core import OptiReduceConfig
+        cfg = OptiReduceConfig(strategy="optireduce_rounds")
+        p = SyncPolicy(use_hadamard=True, incast=3, active_peers=(0, 1, 3))
+        out = p.apply(cfg)
+        assert out.use_hadamard and out.incast == 3
+        assert out.active_peers == (0, 1, 3)
+        assert out.strategy == cfg.strategy
+
+
+class TestControlPlane:
+    def test_policy_closed_loop_with_ejection(self):
+        cp = ControlPlane.create(n_nodes=8,
+                                 detector_kw=dict(alpha=0.5, patience=2))
+        for s in range(30):
+            cp.observe(StepTelemetry(
+                step=s, loss_frac=0.0,
+                peer_stage_times=(1.0,) * 7 + (7.0,)))
+        pol = cp.policy()
+        assert pol.active_peers == tuple(range(7))
+        # incast is clamped to the active-set fan-in
+        assert pol.incast <= len(pol.active_peers) - 1
+
+    def test_hadamard_hysteresis(self):
+        cp = ControlPlane.create(n_nodes=8)
+        cp.observe(StepTelemetry(loss_frac=0.05))      # above 2%: on
+        assert cp.policy().use_hadamard
+        cp.observe(StepTelemetry(loss_frac=0.015))     # in the band: hold
+        assert cp.policy().use_hadamard
+        cp.observe(StepTelemetry(loss_frac=0.001))     # below thr/2: off
+        assert not cp.policy().use_hadamard
+
+    def test_warmup_feeds_timeout(self):
+        cp = ControlPlane.create(n_nodes=4, timeout={"warmup_iters": 3})
+        for t in (1.0, 2.0, 3.0):
+            cp.observe(StepTelemetry(step_time=t))
+        assert cp.state.timeout.ready
+
+    def test_observe_reports_policy_movement(self):
+        cp = ControlPlane.create(n_nodes=8)
+        assert cp.observe(StepTelemetry(loss_frac=0.05))   # HT flips on
+        # same telemetry again: I ramps are gone (halved already at floor)?
+        # incast halves 1 -> 1 (floor) and HT stays: no movement
+        assert not cp.observe(StepTelemetry(loss_frac=0.05))
+
+
+class TestPolicyStepCache:
+    def test_lru_hit_and_eviction(self):
+        cache = PolicyStepCache(maxsize=2)
+        p1 = SyncPolicy(incast=1)
+        p2 = SyncPolicy(incast=2)
+        p3 = SyncPolicy(incast=3)
+        cache.put(p1, "a")
+        cache.put(p2, "b")
+        assert cache.get(p1) == "a"                    # p1 now most-recent
+        cache.put(p3, "c")                             # evicts p2
+        assert cache.get(p2) is None
+        assert cache.get(p1) == "a" and cache.get(p3) == "c"
+        assert len(cache) == 2
+
+    def test_eject_readmit_cycle_never_recompiles(self):
+        cache = PolicyStepCache(maxsize=4)
+        full = SyncPolicy(active_peers=None)
+        degraded = SyncPolicy(active_peers=tuple(range(7)))
+        cache.put(full, "full-step")
+        cache.put(degraded, "degraded-step")
+        # eject -> readmit -> eject again: every switch is a cache hit
+        for pol in (degraded, full, degraded, full):
+            assert cache.get(pol) is not None
+        assert cache.misses == 0 and cache.hits == 4
+
+    def test_timeout_x_drift_is_not_a_miss(self):
+        cache = PolicyStepCache()
+        cache.put(SyncPolicy(incast=2, timeout_x=0.10), "step")
+        assert cache.get(SyncPolicy(incast=2, timeout_x=0.50)) == "step"
+
+
+# --------------------------------------------------------------- netsim loop
+def _straggler_run(eject: bool, steps: int = 120, factor: float = 8.0,
+                   seed: int = 5):
+    env = NetworkModel.environment("local_1.5", seed=seed)
+    env.peer_factors = (1.0,) * 7 + (factor,)
+    control = ControlPlane.create(n_nodes=8, detect_stragglers=eject)
+    r = simulate_job("optireduce", n_nodes=8, bucket_bytes=25 * 2 ** 20,
+                     n_steps=steps, env=env, compute_ms=0.0, overlap=0.0,
+                     eject_stragglers=eject, control=control)
+    return r, control
+
+
+def test_ejection_beats_wait_for_all_bounded_drops():
+    """Acceptance: a simulated persistent-straggler run shows ejection
+    beating wait-for-all on median step time while the effective transport
+    drop fraction stays bounded (the straggler's share is *excluded*, not
+    lost — the masked mean renormalizes over active peers)."""
+    wait, _ = _straggler_run(eject=False)
+    ej, control = _straggler_run(eject=True)
+    assert ej["p50_ga_ms"] < 0.5 * wait["p50_ga_ms"], (ej["p50_ga_ms"],
+                                                       wait["p50_ga_ms"])
+    assert 0.0 <= ej["mean_drop"] < 0.01
+    # exactly the slow peer was ejected, nobody else
+    assert control.detector.peers[7].ejections >= 1
+    assert all(p.ejections == 0 for p in control.detector.peers[:7])
+    assert set(ej["active_peers"]) <= set(range(8))
+
+
+def test_no_straggler_no_ejection():
+    """Homogeneous peers: arming the detector must not change membership."""
+    env = NetworkModel.environment("local_1.5", seed=9)
+    control = ControlPlane.create(n_nodes=8, detect_stragglers=True)
+    r = simulate_job("optireduce", n_nodes=8, bucket_bytes=25 * 2 ** 20,
+                     n_steps=80, env=env, compute_ms=0.0, overlap=0.0,
+                     eject_stragglers=True, control=control)
+    assert r["active_peers"] == list(range(8))
+    assert r["ejected_peers"] == []
+
+
+def test_timely_pacing_converges_under_sustained_congestion():
+    """Satellite: the §3.2.3 Timely controller, wired into the simulator's
+    flow pacing, converges to the bottleneck's fair share under sustained
+    congestion (8 flows into a 8 Gbps bottleneck -> ~1 Gbps each) and
+    drains the queue it built while overloaded."""
+    env = NetworkModel.environment("local_1.5", seed=3)
+    sim = GASimulator(env, 8, pace=True, capacity_GBps=1.0)
+    rates, delays = [], []
+    for _ in range(400):
+        delays.append(sim.paced_round_delay_s(3.3e6, 8))
+        rates.append(sim.pacer.rate)
+    share = 1.0 * 8e9 / 8
+    tail = np.asarray(rates[-100:])
+    assert rates[0] > 2 * share                 # started well above share
+    assert 0.5 * share < tail.mean() < 1.5 * share
+    assert float(np.mean(delays[-100:])) < 0.1 * max(delays)  # queue drained
+
+
+def test_paced_optireduce_still_progresses():
+    """Pacing in the UBT datapath: optireduce steps complete with finite
+    times and bounded drops when pace=True."""
+    env = NetworkModel.environment("local_3.0", seed=4)
+    r = simulate_job("optireduce", n_nodes=8, bucket_bytes=25 * 2 ** 20,
+                     n_steps=40, env=env, compute_ms=0.0, overlap=0.0,
+                     pace=True)
+    assert np.isfinite(r["mean_ga_ms"]) and r["mean_ga_ms"] > 0
+    assert 0.0 <= r["mean_drop"] < 0.02
+
+
+def test_adaptive_transport_is_thin_adapter():
+    """AdaptiveTransport delegates to the ControlPlane: per-peer stage
+    times flow through to the detector and apply() carries the policy's
+    active set into the config."""
+    from repro.core import OptiReduceConfig
+    from repro.core.pipeline import AdaptiveTransport
+    at = AdaptiveTransport.create(n_nodes=8,
+                                  detector_kw=dict(alpha=0.5, patience=2))
+    for _ in range(20):
+        at.observe(0.0, peer_stage_times=(1.0,) * 7 + (9.0,))
+    assert at.control.detector.status(7) == EJECTED
+    cfg = at.apply(OptiReduceConfig(strategy="optireduce_rounds"))
+    assert cfg.active_peers == tuple(range(7))
