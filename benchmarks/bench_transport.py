@@ -1,0 +1,147 @@
+"""Host wire transport benchmarks (DESIGN §7): BENCH_transport.json.
+
+Three questions, all answered on the *host* datapath (repro/net):
+
+  round latency   — wall time of one full over-the-wire TAR allreduce
+                    (encode -> packetized stage-1 exchange -> compensated
+                    reduce -> stage-2 broadcast -> decode) on the inproc
+                    loopback and, where the sandbox allows socket binding,
+                    on real localhost UDP; medians over >= 15 reps with
+                    ``*_iqr_ms`` dispersion siblings (run.py schema).
+  loss fidelity   — scripted per-packet loss rate swept against the
+                    *observed* ``loss_fraction`` of the reassembled masks
+                    (the wire's drop bookkeeping must report what the
+                    schedule injected; the mask is what training consumes).
+  codec overhead  — packetize + reassemble round-trip per bucket size (the
+                    pure wire-format tax, no sockets, no jax).
+
+UDP rows are always emitted so the BENCH key set never shrinks between
+runs (run.py's shape gate); in a sandbox that forbids sockets they carry
+value 0 and derived ``udp-unavailable``.
+
+Run via ``python -m benchmarks.run --only bench_transport``;
+``REPRO_BENCH_DIR`` redirects the JSON (the CI smoke test uses a tmpdir).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import jax
+import numpy as np
+
+from repro.core.allreduce import OptiReduceConfig
+from repro.net import (HostRing, Reassembly, bernoulli_drops, packetize,
+                       udp_available)
+from repro.net.wire import KIND_DATA1, PacketHeader
+
+from .common import Rows
+
+
+def _iqr(xs) -> float:
+    return float(np.percentile(xs, 75) - np.percentile(xs, 25))
+
+
+def _cfg(packet_elems: int = 256) -> OptiReduceConfig:
+    return OptiReduceConfig(strategy="optireduce", drop_rate=0.0,
+                            hadamard_block=256, packet_elems=packet_elems)
+
+
+def _ring_latency(backend: str, n: int, elems: int, reps: int,
+                  key) -> tuple[float, float]:
+    ring = HostRing(n, _cfg(), backend=backend,
+                    default_deadline=1.0 if backend == "inproc" else 0.5)
+    buckets = np.random.default_rng(0).standard_normal(
+        (n, elems)).astype(np.float32)
+    try:
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            ring.allreduce(buckets, key)
+            times.append((time.perf_counter() - t0) * 1e3)
+        # early reps pay per-peer jit tracing; steady is what the wire costs
+        steady = times[5:] if len(times) > 8 else times
+        return statistics.median(steady), _iqr(steady)
+    finally:
+        ring.close()
+
+
+def _loss_sweep(rows: Rows, n: int, elems: int, rates, key,
+                steps: int = 8) -> None:
+    buckets = np.random.default_rng(1).standard_normal(
+        (n, elems)).astype(np.float32)
+    for rate in rates:
+        ring = HostRing(n, _cfg(), backend="inproc",
+                        drop_fn=bernoulli_drops(rate, seed=3))
+        dropped = total = 0.0
+        try:
+            # drop draws are keyed on the packet header, so distinct step
+            # ids give independent loss realizations to average over
+            for s in range(steps):
+                _, tel = ring.allreduce(buckets, key, step=s)
+                dropped += tel.dropped
+                total += tel.total
+        finally:
+            ring.close()
+        rows.add(f"transport/loss_sweep_rate_{rate:g}_observed",
+                 dropped / max(total, 1.0),
+                 f"observed stage-1 loss_fraction at scripted per-packet "
+                 f"rate {rate:g} ({n} peers x {steps} steps)")
+
+
+def _reassembly_overhead(elems: int, packet_elems: int,
+                         reps: int) -> tuple[float, float]:
+    payload = np.random.default_rng(2).standard_normal(elems).astype(
+        np.float32)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        pkts = packetize(payload, kind=KIND_DATA1, sender=0, step=0, bucket=0,
+                         round=1, packet_elems=packet_elems)
+        reas = Reassembly(elems, np.float32, packet_elems)
+        for p in pkts:
+            hdr, frag = PacketHeader.decode(p)
+            reas.add(hdr, frag)
+        assert reas.complete
+        times.append((time.perf_counter() - t0) * 1e3)
+    return statistics.median(times), _iqr(times)
+
+
+def run(quick: bool = True) -> Rows:
+    rows = Rows()
+    key = jax.random.PRNGKey(0)
+    n = 4
+    reps = 15 if quick else 30
+    sizes = [(16_384, "64KB")] if quick else [(16_384, "64KB"),
+                                              (262_144, "1MB")]
+
+    for elems, label in sizes:
+        med, iqr = _ring_latency("inproc", n, elems, reps, key)
+        rows.add(f"transport/inproc_{label}_roundtrip_median_ms", med,
+                 f"full over-the-wire TAR allreduce, {n} peers, "
+                 f"{elems} fp32/peer, median of {reps} reps")
+        rows.add(f"transport/inproc_{label}_roundtrip_iqr_ms", iqr,
+                 "dispersion sibling")
+        if udp_available():
+            umed, uiqr = _ring_latency("udp", n, elems, reps, key)
+            u_note = f"localhost UDP sockets, same schedule ({reps} reps)"
+        else:
+            umed, uiqr, u_note = 0.0, 0.0, "udp-unavailable"
+        rows.add(f"transport/udp_{label}_roundtrip_median_ms", umed, u_note)
+        rows.add(f"transport/udp_{label}_roundtrip_iqr_ms", uiqr,
+                 "dispersion sibling" if u_note != "udp-unavailable"
+                 else u_note)
+
+    _loss_sweep(rows, n, 16_384, (0.0, 0.01, 0.05), key)
+
+    for elems, label in sizes:
+        med, iqr = _reassembly_overhead(elems, 256, reps)
+        rows.add(f"transport/reassembly_{label}_median_ms", med,
+                 f"packetize + reassemble {elems} fp32 at 256 elems/packet")
+        rows.add(f"transport/reassembly_{label}_iqr_ms", iqr,
+                 "dispersion sibling")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -35,12 +35,14 @@ MODULES = [
     "bench_compression",      # Fig 16
     "bench_kernels",          # §4 kernel layer parity/perf
     "bench_pipeline",         # fused BucketPlan sync engine vs seed loop
+    "bench_transport",        # host wire transport (DESIGN §7)
 ]
 
 # rows from these modules are serialized to BENCH_<name>.json at the repo
 # root so the perf trajectory is machine-readable across PRs (see PERF.md)
 JSON_MODULES = {"bench_pipeline": "BENCH_pipeline.json",
-                "bench_timeout": "BENCH_timeout.json"}
+                "bench_timeout": "BENCH_timeout.json",
+                "bench_transport": "BENCH_transport.json"}
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

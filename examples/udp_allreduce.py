@@ -1,0 +1,107 @@
+"""4-peer gradient allreduce over real localhost UDP sockets (DESIGN §7).
+
+Every byte crosses the wire: each peer HTQuant/Hadamard-encodes its bucket,
+packetizes the stage-1 shards into sequenced datagrams, the receivers
+reassemble whatever arrives before the adaptive per-round deadline, and the
+compensated mean absorbs what didn't.  The demo prints, per step:
+
+  * per-peer stage completion times (the straggler detector's signal —
+    peer 2 is scripted 5x slow, watch its column),
+  * the adaptive receive deadline converging as AdaptiveTimeout profiles
+    real wire stage times (warmup -> t_B -> early-timeout band),
+  * the compensated mean's relative error under ~2% injected packet loss.
+
+Falls back to the deterministic in-memory loopback when the sandbox forbids
+UDP socket binding (same code path, virtual clock).
+
+    PYTHONPATH=src python examples/udp_allreduce.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core.allreduce import OptiReduceConfig
+from repro.net import (HostRing, InprocBackend, UdpBackend, bernoulli_drops,
+                       peer_factor_delays, udp_available)
+from repro.runtime import ControlPlane
+
+
+def main():
+    n = 4
+    steps = int(os.environ.get("UDP_DEMO_STEPS", 30))
+    elems = 16_384
+    drop_rate = float(os.environ.get("UDP_DEMO_DROP", 0.02))
+    slow_peer, slow_factor = 2, 5.0
+
+    cfg = OptiReduceConfig(strategy="optireduce", drop_rate=0.0,
+                           hadamard_block=256, packet_elems=256)
+    control = ControlPlane.create(
+        n_nodes=n, timeout={"warmup_iters": 8}, detect_stragglers=True,
+        # real-socket timing on a loaded host is noisy; only a sustained
+        # multiple of the median should read as a straggler
+        detector_kw=dict(eject_score=4.0, readmit_score=2.0))
+    drops = bernoulli_drops(drop_rate, seed=1)
+    if udp_available():
+        backend_name = "udp"
+        backend = UdpBackend(n, drop_fn=drops)
+        default_deadline = 0.5
+    else:
+        backend_name = "inproc (UDP binding forbidden here)"
+        backend = InprocBackend(
+            n, drop_fn=drops,
+            delay_fn=peer_factor_delays(
+                1e-4, tuple(slow_factor if p == slow_peer else 1.0
+                            for p in range(n))))
+        default_deadline = 1.0
+    print(f"backend={backend_name} peers={n} elems={elems} "
+          f"injected_loss={drop_rate:.0%} (peer {slow_peer} scripted "
+          f"{slow_factor:g}x slow on inproc)")
+
+    ring = HostRing(n, cfg, backend=backend,
+                    timeout=control.state.timeout,
+                    default_deadline=default_deadline)
+    rng = np.random.default_rng(0)
+    buckets = rng.standard_normal((n, elems)).astype(np.float32)
+    true = buckets.mean(axis=0)
+    key = jax.random.PRNGKey(0)
+    errs, losses = [], []
+
+    print(f"{'step':>4} {'deadline':>9} "
+          + " ".join(f"peer{p}_t" for p in range(n))
+          + f" {'loss':>7} {'rel_err':>8}")
+    try:
+        for step in range(steps):
+            deadline = ring.peers[0].round_deadline()
+            out, tel = ring.allreduce(buckets, jax.random.fold_in(key, step),
+                                      step=step)
+            control.observe(tel)
+            err = (np.linalg.norm(out[0] - true)
+                   / max(np.linalg.norm(true), 1e-9))
+            errs.append(err)
+            losses.append(tel.loss_frac)
+            times = " ".join(f"{t:7.4f}" for t in tel.peer_stage_times)
+            print(f"{step:4d} {deadline:9.4f} {times} "
+                  f"{tel.loss_frac:7.4f} {err:8.4f}")
+        at = control.state.timeout
+        print(f"\nAdaptiveTimeout profiled from the wire: "
+              f"t_B={at.t_b:.4f} t_C={at.t_c:.4f} x={at.x:.2f} "
+              f"-> deadline {at.round_deadline(False):.4f} "
+              f"(started at {default_deadline})")
+        policy = control.policy()
+        print(f"StragglerDetector active set: "
+              f"{policy.active_peers or tuple(range(n))} "
+              f"(ejected: {control.detector.ejected_peers() or 'none'})")
+        print(f"Missing packets became mask entries, never blocks: at mean "
+              f"loss {np.mean(losses):.2%} the compensated mean's relative "
+              f"error stayed bounded (mean {np.mean(errs):.3f}, "
+              f"max {np.max(errs):.3f}) and 0 when nothing dropped.")
+    finally:
+        ring.close()
+
+
+if __name__ == "__main__":
+    main()

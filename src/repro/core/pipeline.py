@@ -278,35 +278,53 @@ class HTQuant(Codec):
                                             nblk, 0)
         return lo, step
 
-    def encode(self, x, ctx, axis):
+    def local_amax(self, x, ctx):
+        """Pre-``pmax`` half of :meth:`encode`: this peer's per-block amax.
+
+        Returns ``(x1, amax)`` where ``x1`` is whatever the second half
+        needs (the rotated bucket on the jnp path; the un-rotated bucket on
+        the kernel path, which re-rotates in VMEM).  The host wire datapath
+        calls this, max-shares ``amax`` over the wire (an elementwise max
+        is order-free, so the shared grids are bitwise identical to the
+        fabric ``pmax``), then :meth:`encode_given_amax`.
+        """
+        cfg = ctx.cfg
+        block = cfg.hadamard_block
+        if cfg.use_kernels:
+            amax = ht_encode_amax(x, ctx.key, block=block, use_kernel=True)
+            return x, amax                # rotated bucket never materialized
+        x = ht_encode(x, ctx.key, block=block, use_kernel=False)
+        return x, jnp.max(jnp.abs(x.reshape(-1, block)), axis=1)
+
+    def encode_given_amax(self, x1, amax, ctx) -> Encoded:
+        """Post-``pmax`` half of :meth:`encode`: quantize onto the grids
+        derived from the group-shared ``amax``."""
         cfg = ctx.cfg
         block = cfg.hadamard_block
         bits = self._bits(cfg)
         levels = (1 << bits) - 1
-        if cfg.use_kernels:
-            amax = ht_encode_amax(x, ctx.key, block=block, use_kernel=True)
-            xb = None                     # rotated bucket never materialized
-        else:
-            x = ht_encode(x, ctx.key, block=block, use_kernel=False)
-            xb = x.reshape(-1, block)
-            amax = jnp.max(jnp.abs(xb), axis=1)
-        amax = jax.lax.pmax(amax, axis)
-        for extra in ctx.data_axes():     # grids shared by the full DP group
-            if extra != axis:
-                amax = jax.lax.pmax(amax, extra)
         amax = jnp.maximum(amax, 1e-12)
         step = 2.0 * amax / levels                      # (nblocks,)
         lo = -amax
         noise = jax.random.uniform(
             jax.random.fold_in(ctx.key, self.noise_salt),
-            (x.shape[0] // block, block))
+            (x1.shape[0] // block, block))
         if cfg.use_kernels:
-            codes = ht_encode_quant(x, ctx.key, noise, lo, step, block=block,
+            codes = ht_encode_quant(x1, ctx.key, noise, lo, step, block=block,
                                     bits=bits, use_kernel=True).reshape(-1)
         else:
+            xb = x1.reshape(-1, block)
             q = jnp.floor((xb - lo[:, None]) / step[:, None] + noise)
             codes = jnp.clip(q, 0, levels).astype(jnp.uint8).reshape(-1)
         return Encoded(codes, lo=lo, step=step)
+
+    def encode(self, x, ctx, axis):
+        x1, amax = self.local_amax(x, ctx)
+        amax = jax.lax.pmax(amax, axis)
+        for extra in ctx.data_axes():     # grids shared by the full DP group
+            if extra != axis:
+                amax = jax.lax.pmax(amax, extra)
+        return self.encode_given_amax(x1, amax, ctx)
 
     def reduce(self, received, mask, shard_index, enc, ctx):
         cfg = ctx.cfg
@@ -348,10 +366,17 @@ class HTQuant(Codec):
 
 # --------------------------------------------------------------- transports
 class Reliable:
-    """Everything arrives (TCP-class transports): no mask, no loss stats."""
+    """Everything arrives (TCP-class transports): no mask, no loss stats.
+
+    ``payload``, when the topology can offer it, is the stage-1 wire state
+    (the (n_shards, S) shard matrix about to be exchanged) — the synthetic
+    transports ignore it; :class:`WireTransport` really sends those bytes
+    over a host wire backend and masks by what arrived.
+    """
 
     def arrival_mask(self, ctx: SyncContext, n: int, s: int, axis: str,
-                     self_index: jnp.ndarray | None = None
+                     self_index: jnp.ndarray | None = None,
+                     payload: jnp.ndarray | None = None
                      ) -> jnp.ndarray | None:
         return None
 
@@ -363,7 +388,7 @@ class Lossy(Reliable):
     """UBT best-effort delivery: the drop-mask model (core/drops.py) decides
     per-receiver arrivals and the loss stats feed ``ctx.loss_fraction``."""
 
-    def arrival_mask(self, ctx, n, s, axis, self_index=None):
+    def arrival_mask(self, ctx, n, s, axis, self_index=None, payload=None):
         mask = _mask_for(ctx, n, s, axis, self_index=self_index)
         if mask is not None:
             ctx.stats["dropped"] = ctx.stats.get("dropped", 0.0) + \
@@ -438,6 +463,78 @@ class AdaptiveTransport(Lossy):
     def apply(self, cfg: OptiReduceConfig) -> OptiReduceConfig:
         """Fold the current recommendation into a sync config."""
         return self.control.apply(cfg)
+
+
+class WireTransport(Lossy):
+    """Arrival masks observed from a *real* host wire exchange (DESIGN §7).
+
+    The in-JAX datapath keeps its XLA collectives (a TPU fabric cannot drop
+    packets), but the stage-1 shard matrix is also really packetized and
+    exchanged between host peers over a :mod:`repro.net` backend (in-memory
+    loopback or localhost UDP).  The bridge is an ``io_callback``: each
+    device hands its ``(n_shards, S)`` wire state plus its rank out to the
+    host ring as a rendezvous-free *deposit*; the ring's worker thread
+    runs each exchange off the XLA pool and the callback returns the
+    observed arrival mask of the **previous** exchange (all-ones on the
+    priming call; bitwise that bucket's own mask when the loss schedule
+    ignores the exchange counter, an equal-distribution sample otherwise)
+    — the same next-round-from-last-round structure as the
+    §3.2 controllers, and deadlock-free under any XLA thunk scheduling
+    (see ``HostRing.bridge_exchange`` for why both a callback barrier and
+    an in-callback operand read can deadlock an oversubscribed host).
+    The bytes cross the wire under the adaptive per-round deadline, and
+    the mask — missing, late, duplicated, out-of-order packets already
+    resolved — is bit-compatible with a ``core/drops.py`` mask; per
+    peer/round stage times, timeout flags, and received fractions
+    accumulate on the ring for the launcher to drain into
+    :class:`StepTelemetry`.
+
+    Caveats (see DESIGN §7): only stage-1 exchanges on full-participation
+    TAR schedules offer the payload hook (degraded round schedules exchange
+    over a virtual ring the host bridge does not model), and the callback
+    must stay un-vmapped (``sync_packed`` modes scan/pipelined are fine —
+    one exchange per bucket per step; ``mode="vmap"`` would batch the
+    callback).  ``bridge`` is ``HostRing.bridge_exchange`` or any
+    ``(rank, shards) -> mask`` callable.
+    """
+
+    def __init__(self, bridge):
+        self._bridge = bridge
+
+    def _host_mask(self, me, payload):
+        # NOTE: the payload is deliberately NOT materialized here — this
+        # runs on an XLA worker thread, and reading the operand can wait on
+        # a ready-event whose producer is queued on that same (possibly
+        # saturated) pool.  The ring's worker thread materializes it.
+        import numpy as np
+        return np.asarray(self._bridge(int(me), payload), np.float32)
+
+    def arrival_mask(self, ctx, n, s, axis, self_index=None, payload=None):
+        if payload is None or self_index is not None:
+            raise NotImplementedError(
+                "WireTransport needs the stage-1 payload hook of a "
+                "full-participation TAR schedule (degraded virtual-ring "
+                "rounds are not bridged to the host wire)")
+        from jax.experimental import io_callback
+        me = jax.lax.axis_index(axis)
+        # The ring pairs deposits by a per-rank call counter, so each
+        # rank's callbacks must execute in program order.  ordered=False is
+        # sound here because the sync engine emits exactly ONE exchange
+        # stage (one callback) per lax.scan iteration in both the scan and
+        # pipelined schedules, and iterations are serialized by the loop
+        # carry — there is never a second same-rank callback in flight to
+        # reorder against.  (ordered=True would express this directly but
+        # its token parameter breaks shard_map sharding propagation on this
+        # XLA.)  Running several wire-bridged sync calls concurrently in
+        # one program WOULD break the pairing; the launcher's fsdp/vmap/tp
+        # guards rule those out.
+        mask = io_callback(self._host_mask,
+                           jax.ShapeDtypeStruct((n, s), jnp.float32),
+                           me, payload, ordered=False)
+        ctx.stats["dropped"] = ctx.stats.get("dropped", 0.0) + \
+            jnp.sum(1.0 - mask)
+        ctx.stats["total"] = ctx.stats.get("total", 0.0) + mask.size
+        return mask
 
 
 # --------------------------------------------------------------- topologies
@@ -668,7 +765,7 @@ class TarTopology(Topology):
                                           self_index=shard_index)
         else:
             shard_index = i
-            mask = transport.arrival_mask(ctx, n, s, axis)
+            mask = transport.arrival_mask(ctx, n, s, axis, payload=shards)
             if active is not None:
                 # a2a: exclude ejected senders' rows at EVERY receiver (the
                 # ejected peer's own row included, so replicas agree) — the
@@ -719,7 +816,8 @@ class TarTopology(Topology):
         shards = enc.data.reshape(n, -1)
         received = jax.lax.all_to_all(shards, axis, split_axis=0,
                                       concat_axis=0, tiled=True)
-        mask = transport.arrival_mask(ctx, n, received.shape[1], axis)
+        mask = transport.arrival_mask(ctx, n, received.shape[1], axis,
+                                      payload=shards)
         active = active_subset(cfg, n)
         if active is not None:           # FSDP reduction: same a2a exclusion
             _, is_active = tar_lib.peer_lookup(active, n)

@@ -62,6 +62,15 @@ class AdaptiveTimeout:
             return min(self.t_b, (1.0 + self.x) * self.t_c)
         return self.t_b
 
+    def round_deadline_or(self, default: float,
+                          last_pctile_seen: bool = False) -> float:
+        """:meth:`round_deadline` once profiled; ``default`` during warmup
+        (a wire receive loop needs a budget from step 0, before t_B
+        exists)."""
+        if self.t_b is None:
+            return default
+        return self.round_deadline(last_pctile_seen)
+
     def update(self, *, stage_times: Sequence[float], timed_out: Sequence[bool],
                frac_received: Sequence[float], loss_frac: float) -> None:
         """End-of-round update of t_C and x% (paper §3.2.1).

@@ -48,6 +48,17 @@ def main(argv=None) -> int:
                          "register_strategy'd composition")
     ap.add_argument("--drop-rate", type=float, default=0.0)
     ap.add_argument("--drop-pattern", default="tail")
+    ap.add_argument("--transport", default="lossy",
+                    choices=("lossy", "inproc", "udp"),
+                    help="stage-1 arrival masks: 'lossy' = the synthetic "
+                         "drop model (core/drops.py); 'inproc'/'udp' really "
+                         "exchange the shard bytes between host peers over "
+                         "the wire backend (repro/net) and mask by what "
+                         "arrived — per-peer stage times, timeout flags and "
+                         "received fractions feed the ControlPlane")
+    ap.add_argument("--wire-deadline", type=float, default=None,
+                    help="receive deadline before the AdaptiveTimeout is "
+                         "profiled (backend clock units)")
     ap.add_argument("--incast", type=int, default=1,
                     help="round-schedule incast I (rounds topologies)")
     ap.add_argument("--adaptive", action="store_true",
@@ -81,17 +92,56 @@ def main(argv=None) -> int:
         mesh = make_host_mesh(dp=dp, tp=args.tp)
     tp = mesh.shape.get("model", 1)
     print(f"arch={cfg.name} mesh={dict(mesh.shape)} strategy={args.strategy} "
-          f"drop_rate={args.drop_rate}")
+          f"drop_rate={args.drop_rate} transport={args.transport}")
+
+    # host wire transport (DESIGN §7): a HostRing of per-rank peers really
+    # exchanges the stage-1 shard bytes (in-memory loopback or localhost
+    # UDP); --drop-rate becomes injected *wire* loss instead of the
+    # synthetic mask model, and the ring's telemetry finally feeds the
+    # ControlPlane per-peer stage times (not just step wall-clock).
+    control = ring = None
+    need_control = args.adaptive or args.transport != "lossy"
+    if need_control:
+        from repro.runtime import ControlPlane, StepTelemetry
+        control = ControlPlane.create(n_nodes=mesh.shape.get("data", 1))
+    if args.transport != "lossy":
+        if args.dp_mode != "replicated":
+            ap.error("--transport needs --dp-mode=replicated (fsdp grads "
+                     "reduce through rs_spec, which has no wire bridge)")
+        if args.sync_mode == "vmap":
+            ap.error("--transport bridges per-bucket io_callbacks; vmap "
+                     "would batch them (use --sync-mode pipelined or scan)")
+        if mesh.shape.get("model", 1) != 1:
+            ap.error("--transport needs --tp=1: with model parallelism "
+                     "every tp sibling of a data rank would run the "
+                     "io_callback, advancing the ring's per-rank exchange "
+                     "counter tp times per bucket and pairing deposits "
+                     "from different buckets into one wire exchange")
+        from repro.core.pipeline import WireTransport
+        from repro.net import HostRing, bernoulli_drops
+        n_wire = mesh.shape.get("data", 1)
+        ring = HostRing(
+            n_wire,
+            OptiReduceConfig(strategy=args.strategy, incast=args.incast,
+                             hadamard_block=1024),
+            backend=args.transport,
+            timeout=control.state.timeout,
+            default_deadline=args.wire_deadline,
+            drop_fn=(bernoulli_drops(args.drop_rate, seed=args.seed)
+                     if args.drop_rate > 0 else None))
 
     tc = TrainConfig(
         sync=OptiReduceConfig(strategy=args.strategy,
-                              drop_rate=args.drop_rate,
+                              # wire mode: drops are observed, not synthetic
+                              drop_rate=0.0 if ring else args.drop_rate,
                               drop_pattern=args.drop_pattern,
                               incast=args.incast,
                               hadamard_block=1024),
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr),
         dp_mode=args.dp_mode, microbatch=args.microbatch,
         sync_mode=args.sync_mode,
+        transport_override=(WireTransport(ring.bridge_exchange)
+                            if ring else None),
         seq_chunk=min(512, args.seq_len))
 
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
@@ -128,13 +178,10 @@ def main(argv=None) -> int:
     # to the policy's compiled step — from the bounded LRU cache when the
     # policy was seen before (eject -> readmit never recompiles), rebuilt
     # and cached otherwise (host-side — XLA itself cannot drop packets).
-    control = None
     if args.adaptive:
         from repro.core.pipeline import (RingTopology, TarTopology,
                                          resolve_spec)
-        from repro.runtime import (ControlPlane, PolicyStepCache, StepTelemetry,
-                                   SyncPolicy)
-        control = ControlPlane.create(n_nodes=mesh.shape.get("data", 1))
+        from repro.runtime import PolicyStepCache, SyncPolicy
         # start from the configured codec so step 0 never rebuilds, and
         # learn which knobs this spec can even observe: incast only lowers
         # rounds schedules; use_hadamard only matters if toggling it
@@ -150,6 +197,12 @@ def main(argv=None) -> int:
         participation_matters = (isinstance(topo, TarTopology) or
                                  (isinstance(topo, RingTopology)
                                   and topo.kind == "ring"))
+        if ring is not None and isinstance(topo, TarTopology) \
+                and topo.schedule == "rounds":
+            # degraded rounds schedules exchange over a virtual ring the
+            # wire bridge does not model (WireTransport raises); keep the
+            # detector observing but hold full participation
+            participation_matters = False
 
         def policy_of(sync: OptiReduceConfig) -> SyncPolicy:
             return SyncPolicy(use_hadamard=sync.use_hadamard,
@@ -160,69 +213,110 @@ def main(argv=None) -> int:
         step_cache.put(policy_of(tc.sync), (jf, shardings))
         stable_rec, stable_for = None, 0
     t0 = time.time()
-    for step in range(start_step, args.steps):
-        batch = data.host_batch(step, 0, 1)
-        batch = jax.device_put(batch, shardings["batch"])
-        t_step = time.time()
-        params, opt_state, metrics = jf(
-            params, opt_state, batch, jnp.asarray(step, jnp.int32), key)
-        loss_frac = float(metrics["loss_frac"])
-        if step % args.log_every == 0 or step == args.steps - 1:
-            m = jax.tree.map(float, metrics)
-            rate = (step - start_step + 1) / (time.time() - t0)
-            print(f"step {step:5d} loss {m['loss']:.4f} "
-                  f"gnorm {m['grad_norm']:.3f} loss_frac {m['loss_frac']:.5f}"
-                  f" skipped {int(m['skipped'])} ({rate:.2f} it/s)",
-                  flush=True)
-        if control is not None:
-            control.observe(StepTelemetry(
-                step=step, loss_frac=loss_frac,
-                step_time=time.time() - t_step))
-            new_sync = control.apply(tc.sync)
-            if not incast_matters:       # incast only lowers rounds forms
-                new_sync = dataclasses.replace(new_sync,
-                                               incast=tc.sync.incast)
-            if not ht_matters:
-                new_sync = dataclasses.replace(
-                    new_sync, use_hadamard=tc.sync.use_hadamard)
-            if not participation_matters:
-                new_sync = dataclasses.replace(
-                    new_sync, active_peers=tc.sync.active_peers)
-            # debounce: a growing incast ramps one step at a time, and each
-            # rebuild recompiles the whole step — wait for the controller to
-            # settle. A Hadamard toggle is an accuracy decision and an
-            # ejection stops the straggler wait: both immediate.
-            stable_for = stable_for + 1 if new_sync == stable_rec else 1
-            stable_rec = new_sync
-            urgent = (new_sync.use_hadamard != tc.sync.use_hadamard or
-                      new_sync.active_peers != tc.sync.active_peers)
-            if new_sync != tc.sync and (urgent or stable_for >= 3):
-                tc = dataclasses.replace(tc, sync=new_sync)
-                cached = step_cache.get(policy_of(new_sync))
-                if cached is not None:
-                    jf, shardings = cached
-                    how = "cached step reused"
-                else:
-                    make_step, opt, _ = build_train_step(cfg, tc, mesh)
-                    step_fn, shardings = make_step(
-                        jax.eval_shape(opt.init, params), batch0)
-                    jf = jax.jit(step_fn, donate_argnums=(0, 1))
-                    step_cache.put(policy_of(new_sync), (jf, shardings))
-                    how = "step rebuilt"
-                print(f"adaptive: use_hadamard={new_sync.use_hadamard} "
-                      f"incast={new_sync.incast} "
-                      f"active={new_sync.active_peers} ({how})", flush=True)
-        monitor.observe(step, loss_frac, bool(metrics["skipped"] > 0))
-        if monitor.halted:
-            print("HALT: excessive gradient loss (§3.4); rolling back")
-            rb = monitor.rollback()
-            if rb is not None:
-                _, params = rb
-        if ckpt and step > 0 and step % args.ckpt_every == 0:
-            ckpt.save(step, (params, opt_state))
-    if ckpt:
-        ckpt.save(args.steps, (params, opt_state))
-        ckpt.wait()
+    try:
+        for step in range(start_step, args.steps):
+            batch = data.host_batch(step, 0, 1)
+            batch = jax.device_put(batch, shardings["batch"])
+            t_step = time.time()
+            params, opt_state, metrics = jf(
+                params, opt_state, batch, jnp.asarray(step, jnp.int32), key)
+            loss_frac = float(metrics["loss_frac"])
+            if step % args.log_every == 0 or step == args.steps - 1:
+                m = jax.tree.map(float, metrics)
+                rate = (step - start_step + 1) / (time.time() - t0)
+                print(f"step {step:5d} loss {m['loss']:.4f} "
+                      f"gnorm {m['grad_norm']:.3f} loss_frac {m['loss_frac']:.5f}"
+                      f" skipped {int(m['skipped'])} ({rate:.2f} it/s)",
+                      flush=True)
+            if control is not None:
+                wire_t = None
+                if ring is not None:
+                    # let in-flight exchanges land; a wedged or dead wire layer
+                    # must be loud, not silently degrade to all-ones masks
+                    if not ring.flush():
+                        print(f"wire[{args.transport}] WARNING: exchanges still "
+                              f"in flight at step {step} (flush timed out)",
+                              flush=True)
+                    if ring.bridge_error is not None:
+                        print(f"wire[{args.transport}] ERROR: bridge worker "
+                              f"died: {ring.bridge_error!r} — masks degrade to "
+                              "all-ones and telemetry stops", flush=True)
+                        ring.bridge_error = None
+                    wire_t = ring.drain_telemetry(step)
+                if wire_t is not None:
+                    # the real thing the ROADMAP asked for: per-peer stage
+                    # times, per-round deadlines/timeouts/received fractions —
+                    # observed on the wire, consumed by detector + controllers
+                    control.observe(wire_t)
+                    if step % args.log_every == 0 or step == args.steps - 1:
+                        pst = ", ".join(f"{t:.3g}" for t
+                                        in wire_t.peer_stage_times)
+                        print(f"wire[{args.transport}] peers="
+                              f"{len(wire_t.peer_stage_times)} "
+                              f"stage_times=[{pst}] "
+                              f"loss_frac={wire_t.loss_frac:.5f} "
+                              f"deadline="
+                              f"{ring.peers[0].round_deadline():.4g}"
+                              + (f" misses={ring.bridge_misses}"
+                                 if ring.bridge_misses else ""),
+                              flush=True)
+                elif ring is None:
+                    # wall-clock only makes sense for the synthetic transport:
+                    # a wire-fed AdaptiveTimeout is profiled in the backend's
+                    # clock units, and one wall-clock sample during warmup
+                    # would inflate t_B/t_C by orders of magnitude
+                    control.observe(StepTelemetry(
+                        step=step, loss_frac=loss_frac,
+                        step_time=time.time() - t_step))
+            if args.adaptive:
+                new_sync = control.apply(tc.sync)
+                if not incast_matters:       # incast only lowers rounds forms
+                    new_sync = dataclasses.replace(new_sync,
+                                                   incast=tc.sync.incast)
+                if not ht_matters:
+                    new_sync = dataclasses.replace(
+                        new_sync, use_hadamard=tc.sync.use_hadamard)
+                if not participation_matters:
+                    new_sync = dataclasses.replace(
+                        new_sync, active_peers=tc.sync.active_peers)
+                # debounce: a growing incast ramps one step at a time, and each
+                # rebuild recompiles the whole step — wait for the controller to
+                # settle. A Hadamard toggle is an accuracy decision and an
+                # ejection stops the straggler wait: both immediate.
+                stable_for = stable_for + 1 if new_sync == stable_rec else 1
+                stable_rec = new_sync
+                urgent = (new_sync.use_hadamard != tc.sync.use_hadamard or
+                          new_sync.active_peers != tc.sync.active_peers)
+                if new_sync != tc.sync and (urgent or stable_for >= 3):
+                    tc = dataclasses.replace(tc, sync=new_sync)
+                    cached = step_cache.get(policy_of(new_sync))
+                    if cached is not None:
+                        jf, shardings = cached
+                        how = "cached step reused"
+                    else:
+                        make_step, opt, _ = build_train_step(cfg, tc, mesh)
+                        step_fn, shardings = make_step(
+                            jax.eval_shape(opt.init, params), batch0)
+                        jf = jax.jit(step_fn, donate_argnums=(0, 1))
+                        step_cache.put(policy_of(new_sync), (jf, shardings))
+                        how = "step rebuilt"
+                    print(f"adaptive: use_hadamard={new_sync.use_hadamard} "
+                          f"incast={new_sync.incast} "
+                          f"active={new_sync.active_peers} ({how})", flush=True)
+            monitor.observe(step, loss_frac, bool(metrics["skipped"] > 0))
+            if monitor.halted:
+                print("HALT: excessive gradient loss (§3.4); rolling back")
+                rb = monitor.rollback()
+                if rb is not None:
+                    _, params = rb
+            if ckpt and step > 0 and step % args.ckpt_every == 0:
+                ckpt.save(step, (params, opt_state))
+        if ckpt:
+            ckpt.save(args.steps, (params, opt_state))
+            ckpt.wait()
+    finally:
+        if ring is not None:
+            ring.close()          # UDP sockets + the bridge worker
     print("done")
     return 0
 

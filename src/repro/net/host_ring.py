@@ -1,0 +1,313 @@
+"""HostRing: N host peers over one wire backend, plus the io_callback
+bridge that feeds wire-observed masks into the in-JAX datapath (DESIGN §7).
+
+Two modes of operation:
+
+* **Standalone host datapath** — :meth:`HostRing.allreduce` runs one full
+  TAR allreduce where every byte really crosses the backend: encode →
+  packetized stage-1 exchange under adaptive deadlines → compensated
+  reduce → packetized stage-2 broadcast → decode, one thread per peer with
+  phase fences.  With the inproc backend and scripted drops this is
+  bitwise-identical to the in-JAX ``Lossy`` pipeline given the same
+  arrival masks (the subsystem's pinned parity result).
+
+* **Bridge for the in-JAX pipeline** — :meth:`bridge_exchange` is the
+  ``WireTransport`` io_callback target: each device *deposits* its stage-1
+  shard matrix and gets back the previous exchange's observed arrival mask
+  while a ring worker thread really exchanges the bytes (rendezvous-free —
+  see the comment block at the bridge section for why anything blocking
+  inside the callback can deadlock an oversubscribed host); the XLA
+  collectives keep moving the authoritative data.  Per-peer/per-round
+  telemetry accumulates on the ring and :meth:`drain_telemetry` folds it
+  into a fully-populated :class:`~repro.runtime.StepTelemetry` for the
+  ControlPlane — closing the ROADMAP item that the launcher only ever fed
+  step wall-clock.
+
+All telemetry times are in the backend's clock units (scripted virtual
+seconds for inproc, monotonic seconds for UDP); the controllers only ever
+compare them against each other.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+from repro.core.pipeline import (CollectiveSpec, OptiReduceConfig,
+                                 WireTransport, resolve_spec)
+from repro.core.ubt import AdaptiveTimeout
+from repro.runtime import StepTelemetry
+
+from .backend import Backend
+from .inproc import InprocBackend
+from .peer import HostPeer, PeerReport
+from .udp import UdpBackend
+
+
+def make_backend(kind: str | Backend, n_peers: int, *, drop_fn=None,
+                 delay_fn=None) -> Backend:
+    """Build a backend by name (``inproc`` | ``udp``) or pass one through."""
+    if isinstance(kind, Backend):
+        return kind
+    if kind == "inproc":
+        return InprocBackend(n_peers, drop_fn=drop_fn, delay_fn=delay_fn)
+    if kind == "udp":
+        return UdpBackend(n_peers, drop_fn=drop_fn)
+    raise ValueError(f"unknown backend {kind!r} (inproc | udp)")
+
+
+class HostRing:
+    """N host peers on one fabric (see module docstring)."""
+
+    def __init__(self, n_peers: int, cfg: OptiReduceConfig, *,
+                 backend: str | Backend = "inproc",
+                 timeout: AdaptiveTimeout | None = None,
+                 default_deadline: float | None = None,
+                 drop_fn=None, delay_fn=None):
+        self.n = int(n_peers)
+        self.cfg = cfg
+        self.backend = make_backend(backend, self.n, drop_fn=drop_fn,
+                                    delay_fn=delay_fn)
+        self.timeout = timeout
+        self.peers = [HostPeer(p, self.backend, cfg, timeout=timeout,
+                               default_deadline=default_deadline)
+                      for p in range(self.n)]
+        self._cv = threading.Condition()
+        self._lock = self._cv                 # one lock guards all ring state
+        self._bridge_calls = [0] * self.n
+        self._deposits: dict[int, dict[int, object]] = {}
+        self._results: dict[int, dict[int, tuple[np.ndarray, PeerReport]]] \
+            = {}
+        self._pending: list[list[PeerReport]] = [[] for _ in range(self.n)]
+        self._jobs: list = []                 # completed deposit sets, FIFO
+        self._worker: threading.Thread | None = None
+        self._working = False                 # worker mid-exchange
+        self._closing = False
+        self.bridge_timeout = 10.0            # bounded wait; never a deadlock
+        self.bridge_misses = 0
+        self.bridge_error: Exception | None = None
+
+    def close(self) -> None:
+        with self._cv:
+            self._closing = True
+            self._cv.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout=5.0)
+        self.backend.close()
+
+    # ------------------------------------------------- standalone datapath
+    def allreduce(self, buckets, key, *, step: int = 0, bucket: int = 0
+                  ) -> tuple[np.ndarray, StepTelemetry]:
+        """One full over-the-wire TAR allreduce of per-peer buckets.
+
+        ``buckets``: (n, L) array (or list of n flat arrays) — peer p
+        contributes row p.  ``key`` is the replicated per-step PRNG key
+        (same at every peer, exactly like ``SyncContext.key``).  Returns
+        the (n, L) per-peer synced results and the step's telemetry.
+        """
+        buckets = np.asarray(buckets)
+        if buckets.ndim != 2 or buckets.shape[0] != self.n:
+            raise ValueError(f"buckets must be ({self.n}, L), "
+                             f"got {buckets.shape}")
+        results: list = [None] * self.n
+        reports: list = [None] * self.n
+        errors: list = []
+
+        def run(p: int) -> None:
+            try:
+                peer = self.peers[p]
+                peer.phase1_encode(buckets[p], key, step, bucket)
+                self.backend.barrier(timeout=60.0)
+                peer.phase2_send_stage1(step, bucket)
+                self.backend.barrier(timeout=60.0)
+                rep = peer.phase3_reduce_send_stage2(step, bucket)
+                self.backend.barrier(timeout=60.0)
+                out, rep2 = peer.phase4_decode(step, bucket)
+                rep.merge(rep2)
+                results[p], reports[p] = out, rep
+            except Exception as e:           # surface, never hang the join
+                errors.append((p, e))
+
+        threads = [threading.Thread(target=run, args=(p,), daemon=True)
+                   for p in range(self.n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120.0)
+        if errors:
+            raise RuntimeError(f"host peers failed: {errors}") from \
+                errors[0][1]
+        out = np.stack([np.asarray(r) for r in results])
+        return out, self._aggregate([r for r in reports if r is not None],
+                                    step)
+
+    # ------------------------------------------------------- bridge mode
+    # Every device calls bridge_exchange once per bucket in the same
+    # program order, so call #k on each rank is the same logical exchange.
+    #
+    # The design is asynchronous on purpose, for two reasons learned the
+    # hard way on an oversubscribed CPU host:
+    #
+    # * a blocking rendezvous inside an io_callback can interleave with
+    #   XLA's own collective rendezvous (device A parked in the callback,
+    #   device B parked in an independent all_gather that needs A) and
+    #   deadlock the step;
+    # * even *reading* the operand inside the callback can deadlock — the
+    #   callback runs on an XLA worker thread, and materializing the
+    #   payload waits on a ready-event whose producer task is queued on
+    #   that same saturated pool.
+    #
+    # So the callback does neither: it deposits the still-unmaterialized
+    # payload and immediately returns the observed mask of the *previous*
+    # exchange (call k consumes exchange k-1's mask; call 0 primes with
+    # all-ones).  A dedicated worker thread materializes the payloads and
+    # really runs each exchange in deposit order.  The one-exchange lag is
+    # the same next-round-from-last-round structure as the §3.2
+    # controllers.  When the loss schedule ignores the exchange counter
+    # (``mask_scripted_drops`` — the parity mechanism), exchange k-1's
+    # mask equals exchange k's *bitwise*, which the bridge parity test
+    # pins after one priming call; schedules keyed on the counter
+    # (``bernoulli_drops`` in wire training) make the lagged mask an
+    # equal-distribution sample of the loss process, not that exact
+    # bucket's realization.  A mask not ready within ``bridge_timeout``
+    # (or whose geometry changed between buckets) degrades to all-ones and
+    # counts in ``bridge_misses`` — never a hang.
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._jobs and not self._closing:
+                    self._cv.wait(0.5)
+                if self._closing and not self._jobs:
+                    return
+                xid, dep = self._jobs.pop(0)
+                self._working = True
+            results = None
+            try:
+                step = xid & 0xFFFFFFFF
+                # materializing here (off the XLA pool) is allowed to wait
+                dep = {me: np.asarray(v) for me, v in dep.items()}
+                for me in range(self.n):
+                    self.peers[me].bridge_send(dep[me], step, 0)
+                results = {me: self.peers[me].bridge_receive(dep[me], step, 0)
+                           for me in range(self.n)}
+            except Exception as e:      # a dead worker must not wedge flush
+                self.bridge_error = e
+            with self._cv:
+                if results is not None:
+                    self._results[xid] = results
+                    for r in range(self.n):
+                        self._pending[r].append(results[r][1])
+                    for old in [k for k in self._results if k < xid - 3]:
+                        del self._results[old]    # bound stale results
+                self._working = False
+                self._cv.notify_all()
+
+    def bridge_exchange(self, me: int, shards) -> np.ndarray:
+        """``WireTransport`` io_callback target: deposit this call's
+        payload, return the previous exchange's observed (n, s) mask."""
+        shape = tuple(shards.shape)
+        with self._cv:
+            xid = self._bridge_calls[me]
+            self._bridge_calls[me] += 1
+            dep = self._deposits.setdefault(xid, {})
+            dep[me] = shards
+            if len(dep) == self.n:
+                del self._deposits[xid]
+                self._jobs.append((xid, dep))
+                if self._worker is None:
+                    self._worker = threading.Thread(
+                        target=self._worker_loop, daemon=True,
+                        name="wire-bridge")
+                    self._worker.start()
+                self._cv.notify_all()
+            if xid == 0:
+                return np.ones(shape, np.float32)     # priming call
+            deadline = time.monotonic() + self.bridge_timeout
+            while xid - 1 not in self._results:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._cv.wait(remaining)
+            res = self._results.get(xid - 1)
+        if res is None or res[me][0].shape != shape:
+            with self._cv:
+                self.bridge_misses += 1
+            return np.ones(shape, np.float32)
+        return res[me][0]
+
+    def flush(self, timeout: float = 30.0) -> bool:
+        """Wait (bounded) until every fully-deposited exchange has run —
+        the launcher calls this at step end so drained telemetry covers
+        the step's own exchanges."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while self._jobs or self._working:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._cv.wait(remaining)
+        return True
+
+    def drain_telemetry(self, step: int = 0) -> StepTelemetry | None:
+        """Fold every bridge exchange since the last drain into one
+        :class:`StepTelemetry` (None when nothing was exchanged)."""
+        with self._lock:
+            pending, self._pending = self._pending, \
+                [[] for _ in range(self.n)]
+        merged = []
+        for reports in pending:
+            if not reports:
+                continue
+            acc = PeerReport(sender_last_t=np.full(self.n, np.nan))
+            for r in reports:
+                acc.merge(r)
+            merged.append(acc)
+        if not merged:
+            return None
+        return self._aggregate(merged, step)
+
+    # -------------------------------------------------------- aggregation
+    def _aggregate(self, reports: list[PeerReport],
+                   step: int) -> StepTelemetry:
+        """Cross-receiver fold: a round completes when its slowest receiver
+        does; a peer's stage time is the worst any receiver waited on it."""
+        n_rounds = max(len(r.rounds) for r in reports)
+        round_times, round_to, round_frac = [], [], []
+        for i in range(n_rounds):
+            rs = [r.rounds[i] for r in reports if i < len(r.rounds)]
+            round_times.append(max(x.time for x in rs))
+            round_to.append(any(x.timed_out for x in rs))
+            round_frac.append(float(np.mean([x.frac_received for x in rs])))
+        last = np.stack([r.sender_last_t for r in reports])     # (R, n)
+        with np.errstate(all="ignore"):
+            peer_times = np.nanmax(last, axis=0)                # (n,)
+        dropped = sum(r.dropped for r in reports)
+        total = sum(r.total for r in reports)
+        return StepTelemetry.from_wire(
+            step=step,
+            round_times=tuple(round_times),
+            round_timed_out=tuple(round_to),
+            round_frac_received=tuple(round_frac),
+            peer_stage_times=tuple(float(t) for t in peer_times),
+            dropped=float(dropped), total=float(total),
+            # the §3.2.1 warmup profiles *stage* (round) times — feed the
+            # slowest COMPLETED round: an expired round only reports the
+            # deadline itself (the receiver stopped waiting), and sampling
+            # that would make t_B converge to whatever budget it started
+            # with instead of the network's real pace.  A step where every
+            # round was lossy contributes no sample (the ControlPlane falls
+            # back to the per-peer arrival times).
+            step_time=max((t for t, to in zip(round_times, round_to)
+                           if not to), default=None))
+
+
+def wire_spec(cfg: OptiReduceConfig, ring: HostRing) -> CollectiveSpec:
+    """Resolve ``cfg.strategy`` and swap its transport for a
+    :class:`WireTransport` bridged to ``ring`` — what ``launch/train.py
+    --transport={inproc,udp}`` feeds the trainer."""
+    spec = resolve_spec(cfg)
+    return dataclasses.replace(spec, transport=WireTransport(
+        ring.bridge_exchange))

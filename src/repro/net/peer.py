@@ -1,0 +1,397 @@
+"""HostPeer: one rank of the host wire datapath (DESIGN §7).
+
+A peer executes the existing TAR round schedule *over the wire*: it encodes
+its bucket with the strategy's codec, packetizes each stage-1 shard into
+sequenced datagrams, exchanges them through a :class:`~repro.net.backend.
+Backend`, reassembles whatever arrived before the adaptive per-round
+deadline into a received matrix plus an observed arrival mask, and runs the
+same drop-compensated reduce / stage-2 broadcast / decode the in-JAX
+pipeline runs.
+
+Bitwise parity with the in-JAX ``Lossy`` path (the subsystem's load-bearing
+correctness result) comes from structure, not luck: the peer's compute is
+organized into jitted stage functions that mirror the device program's
+XLA fusion regions — encode (pre-collective), reduce+re-encode (between
+all_to_all and all_gather), decode (post-collective) — calling the *same*
+codec objects; the only cross-peer math, the HTQuant grid ``pmax``, is an
+elementwise max and therefore order-free, so max-sharing the amax vectors
+over the wire reproduces the fabric ``pmax`` exactly.
+
+Telemetry is the other product: per-round stage completion times, t_B
+expiry flags, and received fractions (exactly ``AdaptiveTimeout.update``'s
+inputs), plus per-sender last-arrival times (the straggler detector's
+signal), accumulate in a :class:`PeerReport` per exchange.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tar as tar_lib
+from repro.core.pipeline import (Encoded, HTQuant, OptiReduceConfig,
+                                 SyncContext, TarTopology, resolve_spec)
+from repro.core.ubt import AdaptiveTimeout
+
+from .backend import Backend
+from .wire import (KIND_CTRL, KIND_DATA1, KIND_DATA2, PacketHeader,
+                   Reassembly, n_packets, packetize)
+
+
+@dataclasses.dataclass
+class RoundReport:
+    """One receive round as this peer observed it."""
+    time: float                 # completion (or expiry) time, stage-relative
+    timed_out: bool             # missing packets at the deadline
+    frac_received: float        # fraction of expected packets that arrived
+
+
+@dataclasses.dataclass
+class PeerReport:
+    """One exchange's observations at this receiver."""
+    rounds: list[RoundReport] = dataclasses.field(default_factory=list)
+    # last-arrival time per sender (NaN = nothing observed; a fully-dropped
+    # sender is charged the deadline — waiting on it cost exactly that)
+    sender_last_t: np.ndarray | None = None
+    dropped: float = 0.0        # stage-1 mask entries lost
+    total: float = 0.0          # stage-1 mask entries expected
+    stage2_dropped: float = 0.0
+    stage2_total: float = 0.0
+    stage_time: float = 0.0     # sum of round completion times
+
+    def merge(self, other: "PeerReport") -> None:
+        self.rounds.extend(other.rounds)
+        if other.sender_last_t is not None:
+            if self.sender_last_t is None:
+                self.sender_last_t = other.sender_last_t.copy()
+            else:
+                self.sender_last_t = np.fmax(self.sender_last_t,
+                                             other.sender_last_t)
+        self.dropped += other.dropped
+        self.total += other.total
+        self.stage2_dropped += other.stage2_dropped
+        self.stage2_total += other.stage2_total
+        self.stage_time += other.stage_time
+
+
+class _PacketStore:
+    """Per-peer buffer of drained datagrams keyed by reassembly stream."""
+
+    def __init__(self):
+        self._streams: dict[tuple, list[tuple[PacketHeader, bytes, float]]] \
+            = {}
+
+    def ingest(self, datagrams: list[tuple[bytes, float]], step: int) -> None:
+        for dgram, t in datagrams:
+            try:
+                hdr, frag = PacketHeader.decode(dgram)
+            except Exception:
+                continue                      # garbage datagram: drop it
+            if hdr.step != step:
+                continue                      # stale step: discard
+            self._streams.setdefault(hdr.stream(), []).append((hdr, frag, t))
+
+    def take(self, stream: tuple) -> list[tuple[PacketHeader, bytes, float]]:
+        return self._streams.pop(stream, [])
+
+    def clear(self) -> None:
+        self._streams.clear()
+
+
+class HostPeer:
+    """One rank's engine over a wire backend (see module docstring)."""
+
+    def __init__(self, rank: int, backend: Backend, cfg: OptiReduceConfig, *,
+                 timeout: AdaptiveTimeout | None = None,
+                 default_deadline: float | None = None):
+        self.rank = int(rank)
+        self.n = backend.n_peers
+        self.backend = backend
+        self.cfg = cfg
+        spec = resolve_spec(cfg)
+        if not isinstance(spec.topology, TarTopology):
+            raise ValueError(
+                f"strategy {cfg.strategy!r} resolves to "
+                f"{type(spec.topology).__name__}; the host wire datapath "
+                "executes TAR schedules (ring/tree reduce in flight — "
+                "there is no receive stage to mask)")
+        if cfg.pod_axis is not None or cfg.active_peers is not None:
+            raise ValueError("host wire datapath: single data axis, "
+                             "full participation only")
+        self.codec = spec.codec
+        self.timeout = timeout
+        self.default_deadline = (default_deadline if default_deadline
+                                 is not None else
+                                 (1.0 if backend.virtual_time else 0.25))
+        self.packet_elems = cfg.packet_elems
+        self._store = _PacketStore()
+        self._build_stage_fns()
+        # in-flight state between phases of one exchange
+        self._held: dict = {}
+
+    # ---------------------------------------------------- jitted stage fns
+    def _ctx(self, key) -> SyncContext:
+        return SyncContext(cfg=self.cfg, key=key)
+
+    def _build_stage_fns(self) -> None:
+        codec, cfg, n = self.codec, self.cfg, self.n
+
+        if isinstance(codec, HTQuant):
+            def enc_local(x, key):
+                x, _ = tar_lib.pad_for_tar(x, n, codec.block(cfg))
+                return codec.local_amax(x, self._ctx(key))
+
+            def enc_finish(x1, amax, key):
+                e = codec.encode_given_amax(x1, amax, self._ctx(key))
+                return e.data, e.lo, e.step
+            self._enc_local = jax.jit(enc_local)
+            self._enc_finish = jax.jit(enc_finish)
+        else:
+            def enc(x, key):
+                x, _ = tar_lib.pad_for_tar(x, n, codec.block(cfg))
+                return codec.encode(x, self._ctx(key), cfg.data_axis).data
+            self._enc = jax.jit(enc)
+
+        def red(received, mask, me, lo, step, key):
+            ctx = self._ctx(key)
+            enc = Encoded(None, lo=lo, step=step)
+            own = codec.reduce(received, mask, me, enc, ctx)
+            return codec.encode_shard(own, me, enc, ctx)
+        self._red = jax.jit(red)
+
+        def dec(gathered, lo, step, key):
+            return codec.decode_gathered(
+                gathered, Encoded(None, lo=lo, step=step), self._ctx(key))
+        self._dec = jax.jit(dec)
+
+    # ------------------------------------------------------- receive loop
+    def round_deadline(self) -> float:
+        if self.timeout is not None:
+            return self.timeout.round_deadline_or(self.default_deadline)
+        return self.default_deadline
+
+    #: fraction of a stream's packets counting as "last percentile seen"
+    last_pctile = 0.99
+
+    def _early_deadline(self, arrivals: dict, n_seq: int,
+                        hard: float) -> float:
+        """§3.2.1 early timeout: once the last-percentile markers of the
+        stream are in, wait only x% of t_C more — bounded by the hard t_B
+        budget (inactive until the AdaptiveTimeout is fully profiled)."""
+        at = self.timeout
+        if at is None or at.t_b is None or at.t_c is None:
+            return hard
+        need = min(n_seq, max(1, int(self.last_pctile * n_seq)))
+        if len(arrivals) < need:
+            return hard
+        t_seen = sorted(rel for rel, _, _ in arrivals.values())[need - 1]
+        return min(hard, t_seen + at.x * at.t_c)
+
+    def _recv_stream(self, kind: int, step: int, bucket: int, rnd: int,
+                     sender: int, n_elems: int, dtype, deadline: float,
+                     packet_elems: int | None = None
+                     ) -> tuple[Reassembly, float, float]:
+        """Receive one (round, sender) stream until complete or expired.
+
+        The budget is two-phase: the hard bound ``deadline`` (t_B), then —
+        once the last-percentile of expected packets has arrived — the
+        early deadline x%*t_C past that point.  Returns the reassembly,
+        the last *accepted* arrival time relative to the round start (0.0
+        when nothing arrived in time), and the effective deadline charged
+        (what the receiver actually budgeted for this stream).
+        """
+        be, me = self.backend, self.rank
+        t0 = be.now(me)
+        pe = packet_elems or self.packet_elems
+        n_seq = n_packets(n_elems, pe)
+        stream = (kind, bucket, rnd, sender)
+        # first arrival per seq; duplicates and beyond-hard-late packets
+        # drop here, the rest replays through Reassembly after the
+        # effective deadline is known (deterministic for virtual time too)
+        arrivals: dict[int, tuple[float, PacketHeader, bytes]] = {}
+        eff = deadline
+        while True:
+            self._store.ingest(be.poll(me), step)
+            for hdr, frag, t in self._store.take(stream):
+                rel = max(0.0, t - t0)
+                if rel <= deadline and 0 <= hdr.seq < n_seq \
+                        and hdr.seq not in arrivals:
+                    arrivals[hdr.seq] = (rel, hdr, frag)
+            eff = self._early_deadline(arrivals, n_seq, deadline)
+            if len(arrivals) >= n_seq:
+                break
+            if be.now(me) - t0 >= eff or not be.wait(me, 1e-3):
+                break
+        reas = Reassembly(n_elems, dtype, pe)
+        last_t = 0.0
+        for rel, hdr, frag in sorted(arrivals.values(), key=lambda a: a[0]):
+            if rel <= eff and reas.add(hdr, frag):
+                last_t = max(last_t, rel)
+        return reas, last_t, eff
+
+    def _recv_rounds(self, kind: int, step: int, bucket: int, n_elems: int,
+                     dtype) -> tuple[dict[int, Reassembly], PeerReport]:
+        """Run the N-1 receive rounds; round r expects sender (me-r)%n."""
+        me, n = self.rank, self.n
+        report = PeerReport(sender_last_t=np.full(n, np.nan))
+        report.sender_last_t[me] = 0.0
+        streams: dict[int, Reassembly] = {}
+        for r in range(1, n):
+            sender = (me - r) % n
+            deadline = self.round_deadline()
+            reas, last_t, eff = self._recv_stream(kind, step, bucket, r,
+                                                  sender, n_elems, dtype,
+                                                  deadline)
+            streams[sender] = reas
+            # an incomplete round costs the receiver the effective deadline
+            # (it kept waiting on the gap until expiry); the *sender* is
+            # charged that only when nothing of its stream made it — a peer
+            # with a few lost packets must not score as a straggler
+            round_t = last_t if reas.complete else eff
+            sender_t = last_t if reas.received_packets > 0 else eff
+            report.rounds.append(RoundReport(
+                time=min(round_t, eff), timed_out=not reas.complete,
+                frac_received=reas.frac_received()))
+            report.sender_last_t[sender] = min(sender_t, eff)
+            report.stage_time += min(round_t, eff)
+        return streams, report
+
+    def _assemble(self, streams: dict[int, Reassembly], own: np.ndarray,
+                  s: int, dtype) -> tuple[np.ndarray, np.ndarray]:
+        """(n, s) received matrix + arrival mask in sender order."""
+        n, me = self.n, self.rank
+        received = np.zeros((n, s), dtype)
+        mask = np.zeros((n, s), np.float32)
+        received[me] = own
+        mask[me] = 1.0
+        for sender, reas in streams.items():
+            received[sender] = reas.payload()
+            mask[sender] = reas.mask()
+        return received, mask
+
+    # ------------------------------------------------------------- phases
+    # One allreduce = four phases with a backend barrier between them (the
+    # drivers in host_ring.py run them across peers threaded or in lockstep)
+
+    def _send_shards(self, shards: np.ndarray, kind: int, step: int,
+                     bucket: int) -> None:
+        me, n = self.rank, self.n
+        for r in range(1, n):
+            dst = (me + r) % n
+            row = shards[dst] if shards.ndim == 2 else shards
+            for dgram in packetize(np.ascontiguousarray(row), kind=kind,
+                                   sender=me, step=step, bucket=bucket,
+                                   round=r, packet_elems=self.packet_elems):
+                self.backend.send(me, dst, dgram)
+
+    def phase1_encode(self, x: np.ndarray, key, step: int,
+                      bucket: int) -> None:
+        """Encode the bucket; for quantizing codecs, advertise the local
+        per-block amax on the control channel."""
+        self._store.clear()
+        xj = jnp.asarray(x)
+        if isinstance(self.codec, HTQuant):
+            x1, amax = self._enc_local(xj, key)
+            amax_np = np.asarray(amax, np.float32)
+            for dgram in packetize(amax_np, kind=KIND_CTRL, sender=self.rank,
+                                   step=step, bucket=bucket, round=0,
+                                   packet_elems=max(1, amax_np.shape[0])):
+                for dst in range(self.n):
+                    if dst != self.rank:
+                        self.backend.send(self.rank, dst, dgram)
+            self._held = {"x1": x1, "amax": amax_np, "key": key,
+                          "length": x.shape[-1]}
+        else:
+            data = np.asarray(self._enc(xj, key))
+            self._held = {"wire1": data, "lo": None, "step": None, "key": key,
+                          "length": x.shape[-1]}
+
+    def phase2_send_stage1(self, step: int, bucket: int) -> None:
+        """Finish the encode (grid max-share for quantizing codecs) and put
+        every stage-1 shard on the wire."""
+        h = self._held
+        if isinstance(self.codec, HTQuant):
+            shared = h["amax"].copy()
+            nblk = shared.shape[0]
+            deadline = self.round_deadline()
+            for p in range(self.n):
+                if p == self.rank:
+                    continue
+                reas, _, _ = self._recv_stream(KIND_CTRL, step, bucket, 0, p,
+                                               nblk, np.float32, deadline,
+                                               packet_elems=max(1, nblk))
+                if reas.complete:     # a lost grid degrades, never blocks
+                    shared = np.maximum(shared, reas.payload())
+            data, lo, stp = self._enc_finish(h["x1"], jnp.asarray(shared),
+                                             h["key"])
+            h["wire1"], h["lo"], h["step"] = np.asarray(data), lo, stp
+            del h["x1"], h["amax"]
+        s = h["wire1"].shape[0] // self.n
+        h["shards"] = h["wire1"].reshape(self.n, s)
+        self._send_shards(h["shards"], KIND_DATA1, step, bucket)
+
+    def phase3_reduce_send_stage2(self, step: int, bucket: int) -> PeerReport:
+        """Receive stage 1 under the per-round deadlines, run the codec's
+        compensated reduce, and broadcast the re-encoded shard."""
+        h = self._held
+        s = h["shards"].shape[1]
+        streams, report = self._recv_rounds(KIND_DATA1, step, bucket, s,
+                                            h["wire1"].dtype)
+        received, mask = self._assemble(streams, h["shards"][self.rank], s,
+                                        h["wire1"].dtype)
+        report.dropped = float(np.sum(1.0 - mask))
+        report.total = float(mask.size)
+        wire2 = np.asarray(self._red(
+            jnp.asarray(received), jnp.asarray(mask),
+            jnp.asarray(self.rank, jnp.int32), h["lo"], h["step"], h["key"]))
+        h["wire2"], h["mask1"] = wire2, mask
+        self._send_shards(wire2, KIND_DATA2, step, bucket)
+        return report
+
+    def phase4_decode(self, step: int, bucket: int
+                      ) -> tuple[np.ndarray, PeerReport]:
+        """Receive the stage-2 broadcast, reassemble the flat bucket, and
+        decode.  A missing stage-2 span stays zero — a real gap the codec
+        decodes through (drops are modeled on stage 1; see DESIGN §2) —
+        and is charged to ``stage2_dropped``."""
+        h = self._held
+        s2 = h["wire2"].shape[0]
+        streams, report = self._recv_rounds(KIND_DATA2, step, bucket, s2,
+                                            h["wire2"].dtype)
+        gathered, mask2 = self._assemble(streams, h["wire2"], s2,
+                                         h["wire2"].dtype)
+        report.stage2_dropped = float(np.sum(1.0 - mask2))
+        report.stage2_total = float(mask2.size)
+        out = np.asarray(self._dec(jnp.asarray(gathered.reshape(-1)),
+                                   h["lo"], h["step"], h["key"]))
+        out = out[:h["length"]]
+        self._held = {}
+        return out, report
+
+    # ------------------------------------------------------- bridge mode
+    def bridge_receive(self, shards: np.ndarray, step: int, bucket: int
+                       ) -> tuple[np.ndarray, PeerReport]:
+        """One receiver's half of a bridge exchange whose sends are already
+        posted (the HostRing completer drives every peer's sends first,
+        then each receive, in one thread — no cross-thread rendezvous
+        anywhere): receive stage 1 under the adaptive deadlines and return
+        the observed (n, s) arrival mask (the in-JAX all_to_all moves the
+        authoritative bytes)."""
+        n, me = self.n, self.rank
+        if shards.shape[0] != n:
+            raise ValueError(f"bridge expects (n={n}, s) shards, "
+                             f"got {shards.shape}")
+        s = shards.shape[1]
+        streams, report = self._recv_rounds(KIND_DATA1, step, bucket, s,
+                                            shards.dtype)
+        _, mask = self._assemble(streams, shards[me], s, shards.dtype)
+        report.dropped = float(np.sum(1.0 - mask))
+        report.total = float(mask.size)
+        return mask, report
+
+    def bridge_send(self, shards: np.ndarray, step: int, bucket: int) -> None:
+        """Post this peer's stage-1 sends for a bridge exchange."""
+        self._store.clear()
+        self._send_shards(shards, KIND_DATA1, step, bucket)

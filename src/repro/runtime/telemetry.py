@@ -60,3 +60,25 @@ class StepTelemetry:
                    peer_stage_times=(None if peer_stage_times is None
                                      else tuple(float(t)
                                                 for t in peer_stage_times)))
+
+    @classmethod
+    def from_wire(cls, step: int, *, round_times: Sequence[float],
+                  round_timed_out: Sequence[bool],
+                  round_frac_received: Sequence[float],
+                  peer_stage_times: Sequence[float],
+                  dropped: float, total: float,
+                  step_time: float | None = None) -> "StepTelemetry":
+        """Build from a host wire transport's observations (repro/net/):
+        every field the simulator used to be the only producer of —
+        per-round stage times / t_B-expiry flags / received fractions and
+        per-peer last-arrival times — now measured on a real exchange.
+        NaN entries in ``peer_stage_times`` mean "peer unobserved"."""
+        loss = dropped / total if total > 0 else 0.0
+        return cls(step=step, loss_frac=loss, dropped=float(dropped),
+                   total=float(total), step_time=step_time,
+                   timed_out=any(bool(b) for b in round_timed_out),
+                   peer_stage_times=tuple(float(t) for t in peer_stage_times),
+                   round_times=tuple(float(t) for t in round_times),
+                   round_timed_out=tuple(bool(b) for b in round_timed_out),
+                   round_frac_received=tuple(float(f)
+                                             for f in round_frac_received))

@@ -76,6 +76,32 @@ class NetworkModel:
         return 1.0
 
     @classmethod
+    def from_drop_trace(cls, trace, *, seed: int = 0, **kw) -> "NetworkModel":
+        """Calibrate the UBT loss process from a *wire-observed* per-round
+        loss-fraction trace (``1 - round_frac_received`` from the host
+        transport's :class:`~repro.runtime.StepTelemetry`).
+
+        The simulator's loss process is two-parameter — a round is lossy
+        with ``stall_prob`` and a lossy flow sheds ``drop_frac_per_stall``
+        of its bytes in expectation (``ubt_ms`` draws uniform(0.2, 1.8) ×
+        that) — so the moment match is direct: ``stall_prob`` = the
+        fraction of observed rounds with any loss, ``drop_frac_per_stall``
+        = the mean loss among those rounds.  The calibration test in
+        tests/test_sim.py pins that a model built this way predicts the
+        observed ``loss_frac``.
+        """
+        t = np.asarray(list(trace), dtype=np.float64)
+        if t.size == 0:
+            raise ValueError("empty drop trace")
+        if not np.all((t >= 0) & (t <= 1)):    # NaN fails both comparisons
+            raise ValueError("trace entries must be loss fractions in [0,1]")
+        lossy = t > 0.0
+        stall_prob = float(np.mean(lossy))
+        per_stall = float(np.mean(t[lossy])) if lossy.any() else 0.0
+        return cls(stall_prob=stall_prob, drop_frac_per_stall=per_stall,
+                   seed=seed, **kw)
+
+    @classmethod
     def environment(cls, name: str, seed: int = 0) -> "NetworkModel":
         """The paper's three environments (§5.1/§5.2). The tail-to-median
         calibration applies to the whole transfer (the paper's background

@@ -81,6 +81,11 @@ class TrainConfig:
     # along seq between blocks; shrinks the per-layer saved residual by
     # 1/tp (§Perf H3 memory lever). Requires seq_len % tp == 0.
     seq_parallel: bool = False
+    # host wire transport (DESIGN §7): a transport instance (typically
+    # net.WireTransport bridged to a HostRing) that replaces the resolved
+    # spec's transport, so stage-1 arrival masks come from a real packet
+    # exchange instead of the synthetic drop model. Replicated DP only.
+    transport_override: Any = None
 
 
 def mesh_axis_names(mesh) -> tuple[str, ...]:
@@ -226,6 +231,13 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
         tc.sync, data_axis=data_axis or "data",
         pod_axis=pod_axis)
     sync_spec = resolve_spec(sync_cfg)   # fail fast on unknown strategies
+    if tc.transport_override is not None:
+        if fsdp:
+            raise ValueError("transport_override drives the bucketed sync "
+                             "path; fsdp grads reduce through rs_spec "
+                             "(wire transports are replicated-DP only)")
+        sync_spec = dataclasses.replace(sync_spec,
+                                        transport=tc.transport_override)
     opt = make_optimizer(tc.optimizer)
     gather = make_fsdp_gather(sync_cfg, dp_axes) if fsdp else None
     pctx = ParallelCtx(tp_axis=tp_axis, dp_axis=data_axis, pod_axis=pod_axis,

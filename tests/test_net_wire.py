@@ -1,0 +1,136 @@
+"""Property tests for the wire packet codec (repro/net/wire.py).
+
+The load-bearing invariants: header encode/decode is a lossless roundtrip,
+reassembly is invariant under arbitrary arrival permutation + duplication,
+a missing seq produces exactly the mask ``core/drops.py`` would expand for
+that packet span (including the short tail fragment when
+``payload % packet_elems != 0``), and the observed ``loss_fraction`` agrees
+with the drops-module accounting on the same mask.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, strategies as st
+
+from repro.core import drops as drops_lib
+from repro.net import (HEADER_BYTES, KIND_CTRL, KIND_DATA1, KIND_DATA2,
+                       PacketHeader, Reassembly, WireError, n_packets,
+                       packetize)
+
+pytestmark = pytest.mark.net
+
+
+@given(st.sampled_from([KIND_DATA1, KIND_DATA2, KIND_CTRL]),
+       st.integers(0, 65535), st.integers(0, 2**32 - 1),
+       st.integers(0, 65535), st.integers(0, 65534))
+def test_header_roundtrip(kind, sender, step, rnd, seq):
+    hdr = PacketHeader(kind=kind, sender=sender, step=step, bucket=7,
+                       round=rnd, seq=seq, n_seq=max(seq + 1, 1))
+    blob = hdr.encode() + b"payload"
+    back, payload = PacketHeader.decode(blob)
+    assert back == hdr
+    assert bytes(payload) == b"payload"
+    assert len(hdr.encode()) == HEADER_BYTES
+
+
+def test_header_rejects_garbage():
+    with pytest.raises(WireError):
+        PacketHeader.decode(b"short")
+    hdr = PacketHeader(kind=KIND_DATA1, sender=0, step=0, bucket=0,
+                       round=1, seq=0, n_seq=1)
+    bad_version = bytes([99]) + hdr.encode()[1:]
+    with pytest.raises(WireError):
+        PacketHeader.decode(bad_version)
+    bad_kind = hdr.encode()[:1] + bytes([77]) + hdr.encode()[2:]
+    with pytest.raises(WireError):
+        PacketHeader.decode(bad_kind)
+
+
+def _stream(n_elems, packet_elems, dtype=np.float32, seed=0):
+    payload = np.random.default_rng(seed).standard_normal(n_elems)
+    payload = payload.astype(dtype) if dtype != np.uint8 else \
+        (np.abs(payload) * 50).astype(np.uint8)
+    pkts = packetize(payload, kind=KIND_DATA1, sender=3, step=1, bucket=2,
+                     round=1, packet_elems=packet_elems)
+    return payload, pkts
+
+
+@given(st.integers(1, 700), st.sampled_from([1, 3, 64, 256]),
+       st.integers(0, 6))
+def test_reassembly_permutation_and_duplication(n_elems, packet_elems, seed):
+    """Any arrival order, with duplicates, rebuilds the exact payload with
+    an all-ones mask — including the tail-fragment edge."""
+    payload, pkts = _stream(n_elems, packet_elems, seed=seed)
+    order = np.random.default_rng(seed).permutation(len(pkts))
+    arrivals = [pkts[i] for i in order] + [pkts[i] for i in order[:2]]
+    reas = Reassembly(n_elems, payload.dtype, packet_elems)
+    for dgram in arrivals:
+        hdr, frag = PacketHeader.decode(dgram)
+        reas.add(hdr, frag)
+    assert reas.complete
+    assert reas.duplicates == min(2, len(pkts))
+    np.testing.assert_array_equal(reas.payload(), payload)
+    np.testing.assert_array_equal(reas.mask(), np.ones(n_elems, np.float32))
+
+
+@given(st.integers(2, 9), st.sampled_from([1, 2, 5]), st.integers(0, 5))
+def test_missing_seq_mask_matches_drops_expansion(n_pkts_target, pe, seed):
+    """Dropping seq set S yields exactly the mask drops._expand would give
+    the corresponding packet mask, and loss_fraction agrees."""
+    import jax.numpy as jnp
+    n_elems = n_pkts_target * pe - (seed % pe)       # exercise tail fragments
+    n_elems = max(n_elems, 1)
+    payload, pkts = _stream(n_elems, pe, seed=seed)
+    total = n_packets(n_elems, pe)
+    rng = np.random.default_rng(seed + 100)
+    keep = rng.random(total) > 0.4
+    if keep.all():
+        keep[rng.integers(total)] = False
+    reas = Reassembly(n_elems, payload.dtype, pe)
+    for i, dgram in enumerate(pkts):
+        if keep[i]:
+            hdr, frag = PacketHeader.decode(dgram)
+            reas.add(hdr, frag)
+    assert not reas.complete
+    # the reference expansion drops.py applies to packet-granular masks
+    expect = np.repeat(keep.astype(np.float32), pe)[:n_elems]
+    np.testing.assert_array_equal(reas.mask(), expect)
+    # arrived spans carry exact bytes; missing spans read zero
+    np.testing.assert_array_equal(reas.payload()[expect == 1.0],
+                                  payload[expect == 1.0])
+    assert not np.any(reas.payload()[expect == 0.0])
+    # and the loss accounting agrees with core/drops.loss_fraction
+    got = float(drops_lib.loss_fraction(jnp.asarray(reas.mask()[None, :])))
+    want = 1.0 - expect.mean()
+    assert got == pytest.approx(want, abs=1e-6)
+
+
+def test_reassembly_rejects_wrong_geometry_and_sizes():
+    payload, pkts = _stream(100, 30)                  # 4 packets, tail of 10
+    reas = Reassembly(100, np.float32, 30)
+    hdr, frag = PacketHeader.decode(pkts[0])
+    # wrong n_seq (different geometry) is not this stream's packet
+    bad = PacketHeader(kind=hdr.kind, sender=hdr.sender, step=hdr.step,
+                       bucket=hdr.bucket, round=hdr.round, seq=0, n_seq=9)
+    assert not reas.add(bad, frag)
+    # truncated fragment is garbage
+    assert not reas.add(hdr, frag[:-4])
+    # tail fragment must be short (10 elems), not padded
+    tail_hdr, tail_frag = PacketHeader.decode(pkts[-1])
+    assert len(tail_frag) == 10 * 4
+    assert reas.add(tail_hdr, tail_frag)
+    assert reas.frac_received() == pytest.approx(0.25)
+
+
+def test_packetize_roundtrip_uint8_codes():
+    """The quantized wire path: uint8 codes, odd length, order-free."""
+    payload, pkts = _stream(1003, 256, dtype=np.uint8, seed=4)
+    reas = Reassembly(1003, np.uint8, 256)
+    for dgram in reversed(pkts):
+        hdr, frag = PacketHeader.decode(dgram)
+        assert reas.add(hdr, frag)
+    assert reas.complete
+    np.testing.assert_array_equal(reas.payload(), payload)

@@ -57,3 +57,56 @@ def test_tar_incast_reduces_rounds():
     r1 = sim.tar_tcp(1e7, incast=1)
     r2 = sim.tar_tcp(1e7, incast=4)
     assert r2.rounds < r1.rounds
+
+
+# ------------------------------------------------- wire-trace calibration
+def test_network_model_calibrates_from_wire_drop_trace():
+    """DESIGN §7 cross-validation: feed a *wire-observed* per-round loss
+    trace (host transport, scripted bernoulli loss) into NetworkModel and
+    the simulator's predicted loss_frac tracks the observed one."""
+    import jax
+
+    from repro.core.allreduce import OptiReduceConfig
+    from repro.net import HostRing, bernoulli_drops
+
+    n = 4
+    ring = HostRing(n, OptiReduceConfig(strategy="optireduce", drop_rate=0.0,
+                                        hadamard_block=256, packet_elems=64),
+                    backend="inproc", drop_fn=bernoulli_drops(0.03, seed=5))
+    buckets = np.random.default_rng(0).standard_normal(
+        (n, 4096)).astype(np.float32)
+    trace = []
+    for step in range(10):
+        _, tel = ring.allreduce(buckets, jax.random.PRNGKey(0), step=step)
+        trace.extend(1.0 - f for f in tel.round_frac_received)
+    observed = float(np.mean(trace))
+    assert observed > 0.0
+
+    env = NetworkModel.from_drop_trace(trace, seed=9)
+    # the calibrated loss process: P(round lossy) and loss-per-stall both
+    # moment-matched from the trace
+    assert env.stall_prob == pytest.approx(
+        np.mean(np.asarray(trace) > 0), abs=1e-9)
+    # predicted per-flow loss over many simulated UBT transfers tracks the
+    # observed mean (ubt_ms draws uniform(0.2, 1.8) x drop_frac_per_stall)
+    _, lost = env.ubt_ms(1e6, n=20000)
+    predicted = float(np.mean(lost))
+    assert predicted == pytest.approx(observed, rel=0.25)
+
+    # and an end-to-end simulated job reports drops of the same magnitude
+    r = simulate_job("optireduce", n_nodes=n, bucket_bytes=1e6, n_steps=40,
+                     compute_ms=0.0, overlap=0.0, env=env)
+    assert 0.2 * observed < r["mean_drop"] < 3.0 * observed
+
+
+def test_drop_trace_calibration_validates_input():
+    with pytest.raises(ValueError):
+        NetworkModel.from_drop_trace([])
+    with pytest.raises(ValueError):
+        NetworkModel.from_drop_trace([0.1, 1.5])
+    with pytest.raises(ValueError):
+        NetworkModel.from_drop_trace([0.1, float("nan")])
+    lossless = NetworkModel.from_drop_trace([0.0, 0.0])
+    assert lossless.stall_prob == 0.0
+    _, lost = lossless.ubt_ms(1e6, n=100)
+    assert float(np.max(lost)) == 0.0
