@@ -1,0 +1,127 @@
+"""Loss-recovery ablation (DESIGN §8): BENCH_recovery.json.
+
+One question: how much of the dropped gradient mass does each recovery
+mechanism actually get back?  Measured as the MSE between the *cumulative*
+applied update and the cumulative true mean over T emulated steps — the
+quantity the optimizer integrates, so a mechanism that merely delays mass
+(error feedback) scores near-lossless while one that discards it (zero
+fill) accumulates a random walk of error.
+
+Emulation (value-space, mirrors core/recovery.py exactly):
+
+  zero   — the seed's compensated masked mean: renormalize over the
+           senders that arrived, zero where nobody did.
+  stale  — cross-step prediction: every lost (sender, span) entry is
+           filled with the previous step's decoded mean, plain mean
+           over all N.
+  ef     — stale + error feedback: each sender carries the gap between
+           its contribution and the stale fill applied in its stead,
+           ``(1-m) * (contrib - stale)``, into the next step.
+
+Per-peer gradients follow an AR(1) common signal plus peer noise — the
+temporal correlation that makes last step's mean a useful prediction, at a
+realistic signal-to-noise ratio.  Masks come from ``core/drops.make_mask``
+(the same synthetic-Lossy draw the trainer consumes), swept over the
+bernoulli and burst (Gilbert–Elliott) patterns at rates down to 1%.
+
+Keys: ``recovery/{pattern}_r{pct}/{mech}_mse_median`` with the schema's
+``_mse_iqr`` dispersion sibling (run.py validates the pairing).
+
+Run via ``python -m benchmarks.run --only bench_recovery``;
+``REPRO_BENCH_DIR`` redirects the JSON (the CI smoke test uses a tmpdir).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import drops as drops_lib
+
+from .common import Rows
+
+MECHS = ("zero", "stale", "ef")
+PATTERNS = ("bernoulli", "burst")
+
+
+def _step_masks(pattern: str, rate: float, n: int, length: int,
+                steps: int) -> np.ndarray:
+    """(T, n, L) arrival masks — one independent draw per emulated step,
+    keyed like the sync engine (fold_in by step), receiver's own row (0)
+    forced present as in the trainer's ``_mask_for``."""
+    key = jax.random.PRNGKey(7)
+
+    def one(t):
+        return drops_lib.make_mask(pattern, jax.random.fold_in(key, t),
+                                   n, length, rate=rate, packet_elems=64,
+                                   self_index=0)
+    masks = jax.vmap(one)(np.arange(steps, dtype=np.uint32))
+    return np.asarray(masks, np.float32)
+
+
+def _cumulative_mse(mech: str, grads: np.ndarray,
+                    masks: np.ndarray) -> np.ndarray:
+    """Per-step MSE between cumulative applied update and cumulative true
+    mean. ``grads``/(T, n, L), ``masks``/(T, n, L) -> (T,)."""
+    steps, n, length = grads.shape
+    stale = np.zeros(length, np.float32)
+    ef = np.zeros((n, length), np.float32)
+    cum_applied = np.zeros(length, np.float64)
+    cum_true = np.zeros(length, np.float64)
+    mse = np.empty(steps, np.float64)
+    for t in range(steps):
+        g, m = grads[t], masks[t]
+        contrib = g + ef if mech == "ef" else g
+        if mech == "zero":
+            cnt = m.sum(0)
+            applied = np.where(cnt > 0, (m * contrib).sum(0)
+                               / np.maximum(cnt, 1.0), 0.0)
+        else:  # fill-then-plain-mean (StaleFill.reduce)
+            applied = np.mean(m * contrib + (1.0 - m) * stale[None], 0)
+            if mech == "ef":
+                # ef_residual, Identity codec: gap vs the pre-update stale
+                ef = (1.0 - m) * (contrib - stale[None])
+            stale = applied.astype(np.float32)
+        cum_applied += applied
+        cum_true += g.mean(0)
+        mse[t] = np.mean((cum_applied - cum_true) ** 2)
+    return mse
+
+
+def run(quick: bool = True) -> Rows:
+    rows = Rows()
+    n, length = 8, 4096
+    steps = 60 if quick else 200
+    rng = np.random.default_rng(11)
+
+    # AR(1) common signal + peer noise: per-peer gradients correlated in
+    # time (prediction has something to predict) and across peers (the
+    # mean is meaningful), at sigma ratios typical of mid-training
+    sig = np.zeros(length, np.float32)
+    grads = np.empty((steps, n, length), np.float32)
+    for t in range(steps):
+        sig = 0.9 * sig + 0.45 * rng.standard_normal(length).astype(
+            np.float32)
+        grads[t] = sig[None] + 0.3 * rng.standard_normal(
+            (n, length)).astype(np.float32)
+
+    for pattern in PATTERNS:
+        for rate in (0.01, 0.05):
+            masks = _step_masks(pattern, rate, n, length, steps)
+            lost = float(1.0 - masks.mean())
+            pct = int(round(rate * 100))
+            for mech in MECHS:
+                mse = _cumulative_mse(mech, grads, masks)
+                rows.add(f"recovery/{pattern}_r{pct}/{mech}_mse_median",
+                         float(np.median(mse)),
+                         f"cumulative-update MSE vs true mean, {n} peers x "
+                         f"{steps} steps, {pattern} loss {rate:g} "
+                         f"(realized {lost:.3f})")
+                rows.add(f"recovery/{pattern}_r{pct}/{mech}_mse_iqr",
+                         float(np.percentile(mse, 75)
+                               - np.percentile(mse, 25)),
+                         "dispersion sibling")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

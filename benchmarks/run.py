@@ -36,13 +36,15 @@ MODULES = [
     "bench_kernels",          # §4 kernel layer parity/perf
     "bench_pipeline",         # fused BucketPlan sync engine vs seed loop
     "bench_transport",        # host wire transport (DESIGN §7)
+    "bench_recovery",         # loss-recovery ablation (DESIGN §8)
 ]
 
 # rows from these modules are serialized to BENCH_<name>.json at the repo
 # root so the perf trajectory is machine-readable across PRs (see PERF.md)
 JSON_MODULES = {"bench_pipeline": "BENCH_pipeline.json",
                 "bench_timeout": "BENCH_timeout.json",
-                "bench_transport": "BENCH_transport.json"}
+                "bench_transport": "BENCH_transport.json",
+                "bench_recovery": "BENCH_recovery.json"}
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -73,8 +75,9 @@ def _validate_rows(name: str, rows) -> None:
     # timing summary rows must carry a dispersion sibling: a bare point
     # estimate is not diffable across PRs (single-shot noise once inverted
     # the bench_pipeline B1/B2 ordering). Every `X_steady_us` row needs the
-    # matching `X_steady_iqr_us`, and every `X_median_ms` row its
-    # `X_iqr_ms` (the netsim-driven ablations report medians over steps).
+    # matching `X_steady_iqr_us`, every `X_median_ms` row its `X_iqr_ms`
+    # (the netsim-driven ablations report medians over steps), and every
+    # `X_mse_median` row its `X_mse_iqr` (the recovery ablation).
     keys = {r[0] for r in rows.rows}
     for key in keys:
         sibling = None
@@ -82,6 +85,8 @@ def _validate_rows(name: str, rows) -> None:
             sibling = key[:-len("_steady_us")] + "_steady_iqr_us"
         elif key.endswith("_median_ms"):
             sibling = key[:-len("_median_ms")] + "_iqr_ms"
+        elif key.endswith("_mse_median"):
+            sibling = key[:-len("_mse_median")] + "_mse_iqr"
         if sibling is not None and sibling not in keys:
             raise BenchSchemaError(
                 f"{name}: summary row {key!r} lacks its dispersion "

@@ -2,10 +2,16 @@
 with and without the randomized Hadamard Transform.
 
     PYTHONPATH=src python examples/finetune_under_drops.py
+    PYTHONPATH=src python examples/finetune_under_drops.py --recovery
 
 Uses the real worker-replica emulation (sim/tta.py): N worker models, TAR
 two-stage aggregation with tail drops, per-receiver buckets.
+
+``--recovery`` runs the DESIGN §8 ablation instead: under bursty loss,
+compare zero-fill against the stale-value fill and error-feedback recovery
+mechanisms (final accuracy + replica divergence per mechanism).
 """
+import argparse
 import os
 import sys
 
@@ -14,8 +20,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.sim.tta import TrainRunConfig, run_training
 
 
-def main():
-    steps = int(os.environ.get("STEPS", 120))
+def sweep_hadamard(steps: int) -> None:
     print("condition,final_acc,mean_drop,replica_divergence")
     base = run_training(TrainRunConfig(steps=steps, eval_every=20))
     print(f"lossless,{base['acc'][-1]:.4f},0.0,0.0")
@@ -26,6 +31,34 @@ def main():
             tag = f"drop{int(rate*100)}_{'ht' if ht else 'noht'}"
             print(f"{tag},{h['acc'][-1]:.4f},{h['mean_drop']:.4f},"
                   f"{h['divergence'][-1]:.5f}", flush=True)
+
+
+def sweep_recovery(steps: int) -> None:
+    print("condition,final_acc,mean_drop,replica_divergence")
+    base = run_training(TrainRunConfig(steps=steps, eval_every=20))
+    print(f"lossless,{base['acc'][-1]:.4f},0.0,0.0")
+    for rate in (0.05, 0.10):
+        for mech in ("none", "stale", "ef"):
+            h = run_training(TrainRunConfig(
+                steps=steps, eval_every=20, drop_rate=rate,
+                drop_pattern="burst", recovery=mech))
+            tag = f"burst{int(rate*100)}_{mech}"
+            print(f"{tag},{h['acc'][-1]:.4f},{h['mean_drop']:.4f},"
+                  f"{h['divergence'][-1]:.5f}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--recovery", action="store_true",
+                    help="run the loss-recovery ablation (zero-fill vs "
+                         "stale vs error feedback under bursty drops)")
+    ap.add_argument("--steps", type=int,
+                    default=int(os.environ.get("STEPS", 120)))
+    args = ap.parse_args()
+    if args.recovery:
+        sweep_recovery(args.steps)
+    else:
+        sweep_hadamard(args.steps)
 
 
 if __name__ == "__main__":

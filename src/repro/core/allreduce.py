@@ -105,7 +105,8 @@ def sync_pytree(grads, ctx: SyncContext, *, bucket_elems: int = 6_553_600,
     return plan.unpack(sync_packed(batch, ctx, mode=mode, spec=spec))
 
 
-def _sync_pipelined(batch, keys, ctx: SyncContext, spec: CollectiveSpec):
+def _sync_pipelined(batch, keys, ctx: SyncContext, spec: CollectiveSpec,
+                    stale=None):
     """Stage-skewed software pipeline over the bucket axis (depth-2 skew).
 
     Iteration k *encodes* bucket k, *exchanges* bucket k-1, and *decodes*
@@ -128,8 +129,12 @@ def _sync_pipelined(batch, keys, ctx: SyncContext, spec: CollectiveSpec):
     length = batch.shape[-1]
     recorded = False
 
-    def enc(bucket, key):
-        sctx = SyncContext(cfg=cfg, key=key)
+    def enc(bucket, key, stale_b=None):
+        # the stale cache enters at encode time (re-encoded under the
+        # bucket's key) and then rides the stage state through the skew —
+        # the per-bucket pairing survives because encode/exchange/decode of
+        # one bucket share the carried tuple, not the loop index
+        sctx = SyncContext(cfg=cfg, key=key, stale=stale_b)
         return (key, spec.encode_stage(bucket, sctx))
 
     def exch(state):
@@ -147,6 +152,9 @@ def _sync_pipelined(batch, keys, ctx: SyncContext, spec: CollectiveSpec):
         sctx = SyncContext(cfg=cfg, key=key)
         return spec.decode_stage(inner, length, sctx)
 
+    def stale_at(it):
+        return None if stale is None else stale[it]
+
     dropped = total = jnp.zeros(())
     if nbuckets <= 3:
         # fully unrolled: prologue/epilogue swallow the steady-state window
@@ -155,7 +163,7 @@ def _sync_pipelined(batch, keys, ctx: SyncContext, spec: CollectiveSpec):
         outs = [None] * nbuckets
         for it in range(nbuckets + 2):
             if it < nbuckets:
-                enc_live[it] = enc(batch[it], keys[it])
+                enc_live[it] = enc(batch[it], keys[it], stale_at(it))
             if 0 <= it - 1 < nbuckets:
                 exch_live[it - 1], (d, t) = exch(enc_live.pop(it - 1))
                 dropped, total = dropped + d, total + t
@@ -164,22 +172,24 @@ def _sync_pipelined(batch, keys, ctx: SyncContext, spec: CollectiveSpec):
         return jnp.stack(outs), (dropped, total), recorded
 
     # prologue: fill the two pipeline registers
-    e_carry = enc(batch[0], keys[0])
-    e_next = enc(batch[1], keys[1])
+    e_carry = enc(batch[0], keys[0], stale_at(0))
+    e_next = enc(batch[1], keys[1], stale_at(1))
     x_carry, (d, t) = exch(e_carry)
     dropped, total = dropped + d, total + t
 
     def body(carry, inp):
         (cd, ct), e_prev, x_prev = carry
-        bucket, key = inp
-        e_k = enc(bucket, key)                 # encode bucket k
+        bucket, key = inp[0], inp[1]
+        e_k = enc(bucket, key,                 # encode bucket k
+                  inp[2] if stale is not None else None)
         x_k, (d, t) = exch(e_prev)             # exchange bucket k-1
         out = dec(x_prev)                      # decode bucket k-2
         return ((cd + d, ct + t), e_k, x_k), out
 
+    xs = (batch[2:], keys[2:]) if stale is None else \
+        (batch[2:], keys[2:], stale[2:])
     ((d2, t2), e_last, x_last), mid = jax.lax.scan(
-        body, ((jnp.zeros(()), jnp.zeros(())), e_next, x_carry),
-        (batch[2:], keys[2:]))
+        body, ((jnp.zeros(()), jnp.zeros(())), e_next, x_carry), xs)
     dropped, total = dropped + d2, total + t2
 
     # epilogue: drain the registers for the last two buckets
@@ -190,7 +200,8 @@ def _sync_pipelined(batch, keys, ctx: SyncContext, spec: CollectiveSpec):
 
 
 def sync_packed(batch: jnp.ndarray, ctx: SyncContext, *, mode: str = "scan",
-                spec: CollectiveSpec | None = None) -> jnp.ndarray:
+                spec: CollectiveSpec | None = None,
+                stale: jnp.ndarray | None = None) -> jnp.ndarray:
     """Sync an already-packed ``(B, bucket_elems)`` batch — the engine core
     behind :func:`sync_pytree`, exposed so the trainer's packed gradient
     arena can feed its accumulator straight in (no pack/unpack HBM passes
@@ -209,6 +220,12 @@ def sync_packed(batch: jnp.ndarray, ctx: SyncContext, *, mode: str = "scan",
     All modes are bitwise-identical per bucket (same stage composition).
     Per-bucket PRNG keys are ``fold_in(ctx.key, bucket_index)``, the seed
     loop's derivation.
+
+    ``stale`` (optional, same shape as ``batch``): the previous step's
+    decoded arena, threaded per-bucket into the stage pipeline as the
+    cross-step prediction cache for a StaleFill recovery codec (DESIGN §8).
+    ``None`` — the default, and the only value when recovery is off —
+    leaves every code path byte-identical to the seed engine.
     """
     if mode not in ("scan", "vmap", "pipelined"):
         raise ValueError(f"unknown sync mode {mode!r}")
@@ -218,11 +235,12 @@ def sync_packed(batch: jnp.ndarray, ctx: SyncContext, *, mode: str = "scan",
     keys = bucket_keys(ctx.key, nbuckets)
     recorded = False
 
-    def one_bucket(bucket, key):
+    def one_bucket(bucket, key, stale_b=None):
         nonlocal recorded
         stats: dict = {}
         out = sync_bucket(bucket, SyncContext(cfg=ctx.cfg, key=key,
-                                              stats=stats), spec=spec)
+                                              stats=stats, stale=stale_b),
+                          spec=spec)
         recorded = recorded or ("total" in stats)
         return out, (stats.get("dropped", jnp.zeros(())),
                      stats.get("total", jnp.zeros(())))
@@ -238,21 +256,27 @@ def sync_packed(batch: jnp.ndarray, ctx: SyncContext, *, mode: str = "scan",
                 "not implement them (override the three stages — "
                 "all_reduce alone only supports mode='scan'/'vmap')")
         synced, (dropped, total), recorded = _sync_pipelined(
-            batch, keys, ctx, spec)
+            batch, keys, ctx, spec, stale)
     elif nbuckets == 1:
-        synced, (dropped, total) = one_bucket(batch[0], keys[0])
+        synced, (dropped, total) = one_bucket(
+            batch[0], keys[0], None if stale is None else stale[0])
         synced = synced[None]
     elif mode == "vmap":
-        synced, (dropped, total) = jax.vmap(one_bucket)(batch, keys)
+        if stale is None:
+            synced, (dropped, total) = jax.vmap(one_bucket)(batch, keys)
+        else:
+            synced, (dropped, total) = jax.vmap(one_bucket)(batch, keys,
+                                                            stale)
         dropped, total = jnp.sum(dropped), jnp.sum(total)
     else:
         def body(carry, inp):
-            bucket, key = inp
-            out, (d, t) = one_bucket(bucket, key)
+            out, (d, t) = one_bucket(inp[0], inp[1],
+                                     inp[2] if stale is not None else None)
             return (carry[0] + d, carry[1] + t), out
 
+        xs = (batch, keys) if stale is None else (batch, keys, stale)
         (dropped, total), synced = jax.lax.scan(
-            body, (jnp.zeros(()), jnp.zeros(())), (batch, keys))
+            body, (jnp.zeros(()), jnp.zeros(())), xs)
     if recorded:
         ctx.stats["dropped"] = ctx.stats.get("dropped", 0.0) + dropped
         ctx.stats["total"] = ctx.stats.get("total", 0.0) + total

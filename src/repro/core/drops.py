@@ -11,6 +11,10 @@ Patterns:
     (what a timeout does to an in-flight stream; the pattern HT exists for).
   * ``straggler``  — whole peers miss the round with some probability
     (compute stragglers / failed nodes).
+  * ``burst``      — Gilbert–Elliott two-state Markov loss: packets drop in
+    correlated bursts (mean length ``BURST_MEAN_PKTS`` packets) at the same
+    stationary rate. Real fabrics lose packets this way — queue overflows
+    and link flaps kill runs of consecutive packets, not i.i.d. singletons.
 
 All generators are deterministic functions of (key, receiver), so the whole
 step stays jit-compatible and reproducible.
@@ -62,10 +66,59 @@ def straggler_mask(key: jax.Array, n_peers: int, n_elems: int, *,
     return jnp.broadcast_to(keep.astype(jnp.float32), (n_peers, n_elems))
 
 
+# Default mean burst length for the Gilbert–Elliott pattern, in packets.
+# Matches the multi-packet loss episodes reported for cloud fabrics (a queue
+# overflow or link flap takes out a run of MTUs, not one).
+BURST_MEAN_PKTS = 8.0
+
+
+def gilbert_elliott_params(rate: float, mean_burst: float = BURST_MEAN_PKTS
+                           ) -> tuple[float, float]:
+    """(p, r) transition probabilities for a two-state Gilbert–Elliott chain.
+
+    ``p`` = P(Good -> Bad), ``r`` = P(Bad -> Good). Chosen so the stationary
+    loss probability p/(p+r) equals ``rate`` and the mean bad-run length 1/r
+    equals ``mean_burst``. Shared by the synthetic masks here, the inproc
+    backend's header-pure drop functions, and sim/netsim's NetworkModel so
+    all three layers describe the same loss process.
+    """
+    rate = min(max(float(rate), 0.0), 0.999)
+    r = 1.0 / max(float(mean_burst), 1.0)
+    p = min(1.0, r * rate / max(1.0 - rate, 1e-6))
+    return p, r
+
+
+def burst_mask(key: jax.Array, n_peers: int, n_elems: int, *,
+               rate: float, packet_elems: int = 256,
+               mean_burst: float = BURST_MEAN_PKTS) -> jnp.ndarray:
+    """Gilbert–Elliott bursty loss, packet-granular, per peer stream.
+
+    Each peer row is an independent two-state Markov chain over packets:
+    Good keeps the packet, Bad drops it. The initial state is drawn from the
+    stationary distribution so every packet's marginal loss equals ``rate``
+    while consecutive losses cluster into mean-``mean_burst`` runs. Pure
+    ``lax.scan`` over the packet axis — jit/vmap compatible like the rest.
+    """
+    n_pkts = -(-n_elems // packet_elems)
+    p, r = gilbert_elliott_params(rate, mean_burst)
+    k0, k1 = jax.random.split(key)
+    bad0 = jax.random.uniform(k0, (n_peers,)) < min(rate, 0.999)
+    u = jax.random.uniform(k1, (n_pkts, n_peers))
+
+    def step(bad, u_t):
+        nxt = jnp.where(bad, u_t >= r, u_t < p)
+        return nxt, nxt
+
+    _, bad_seq = jax.lax.scan(step, bad0, u)          # (n_pkts, n_peers)
+    keep = 1.0 - bad_seq.T.astype(jnp.float32)
+    return _expand(keep, n_elems, packet_elems)
+
+
 _PATTERNS = {
     "bernoulli": bernoulli_mask,
     "tail": tail_mask,
     "straggler": straggler_mask,
+    "burst": burst_mask,
 }
 
 

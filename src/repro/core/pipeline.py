@@ -72,7 +72,7 @@ class OptiReduceConfig:
     pod_axis: str | None = None          # set for multi-pod meshes
     # UBT drop model (stand-in for timeouts/loss on a lossy fabric)
     drop_rate: float = 0.0
-    drop_pattern: str = "tail"           # bernoulli | tail | straggler
+    drop_pattern: str = "tail"           # bernoulli | tail | straggler | burst
     packet_elems: int = 256
     # Hadamard transform
     use_hadamard: bool = True
@@ -99,6 +99,12 @@ class OptiReduceConfig:
     # virtual ring.  Ejected peers still receive the reduced result (they
     # keep training, so probationary readmission is a pure policy flip).
     active_peers: tuple[int, ...] | None = None
+    # loss recovery beyond zero-fill (DESIGN §8, core/recovery.py):
+    # none | stale (cross-step stale-value fill) | ef (stale + error-feedback
+    # residual carry) | ef+budget (+ the phase-aware LossBudget controller).
+    # "none" resolves to the exact seed spec — zero extra ops, bitwise
+    # parity pinned by the parity suites.
+    recovery: str = "none"
 
 
 @dataclasses.dataclass
@@ -107,6 +113,9 @@ class SyncContext:
     cfg: OptiReduceConfig
     key: jax.Array                        # replicated per-step PRNG key
     stats: dict = dataclasses.field(default_factory=dict)
+    # previous step's decoded bucket (value space), set by the sync engine
+    # when cross-step stale-fill recovery is armed; None otherwise
+    stale: jnp.ndarray | None = None
 
     def data_axes(self) -> tuple[str, ...]:
         if self.cfg.pod_axis is not None:
@@ -169,10 +178,14 @@ class Encoded:
     ``data`` is what travels (fp values or uint8 codes, flat); ``lo`` /
     ``step`` are the per-Hadamard-block quantization grids (pmax-shared
     across the whole DP group) a quantizing codec needs on the receive side.
+    ``stale`` is the previous step's bucket re-encoded under this step's
+    key — the cross-step prediction a StaleFill recovery codec substitutes
+    for zero-arrival wire spans (None whenever recovery is off).
     """
     data: jnp.ndarray
     lo: jnp.ndarray | None = None
     step: jnp.ndarray | None = None
+    stale: jnp.ndarray | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -738,15 +751,18 @@ class TarTopology(Topology):
         _, n_shards = self._participation(cfg, n)
         x, _ = tar_lib.pad_for_tar(bucket, n_shards, codec.block(cfg))
         enc = codec.encode(x, ctx, cfg.data_axis)
-        return (enc.data, enc.lo, enc.step)
+        # 4th slot: the re-encoded stale bucket a recovery codec may attach
+        # (None otherwise — an empty pytree leaf, so the disabled path's
+        # scan carries and HLO are unchanged)
+        return (enc.data, enc.lo, enc.step, enc.stale)
 
     def exchange_stage(self, state, transport, codec, ctx):
-        data, lo, step = state
+        data, lo, step, stale = state
         cfg = ctx.cfg
         axis = cfg.data_axis
         n = compat.axis_size(axis)
         active, n_shards = self._participation(cfg, n)
-        enc = Encoded(data, lo=lo, step=step)
+        enc = Encoded(data, lo=lo, step=step, stale=stale)
         s = data.shape[0] // n_shards
         shards = data.reshape(n_shards, s)
         if self.schedule == "rounds":
@@ -785,10 +801,10 @@ class TarTopology(Topology):
                 gathered = tar_lib.graft_inactive(gathered, axis, active)
         else:
             gathered = jax.lax.all_gather(wire, axis, axis=0, tiled=True)
-        return (gathered, lo, step)
+        return (gathered, lo, step, None)        # stale consumed in reduce
 
     def decode_stage(self, state, length, transport, codec, ctx):
-        data, lo, step = state
+        data, lo, step, _ = state
         # only the quantization grids survive the exchange; data=None marks
         # the stage-1 encode output as unavailable at decode time
         out = codec.decode_gathered(data, Encoded(None, lo=lo, step=step),
@@ -902,6 +918,17 @@ def resolve_spec(cfg: OptiReduceConfig) -> CollectiveSpec:
     return factory(cfg)
 
 
+def _recovered(codec: Codec, cfg: OptiReduceConfig) -> Codec:
+    """Registry wiring for ``cfg.recovery`` (DESIGN §8): fold the loss-
+    recovery knob into a lossy strategy's codec. ``"none"`` returns the
+    codec untouched without even importing the recovery module — the
+    resolved spec, and the traced program, stay bitwise the seed ones."""
+    if cfg.recovery == "none":
+        return codec
+    from . import recovery as recovery_lib
+    return recovery_lib.wrap_codec(codec, cfg)
+
+
 # ------------------------------------------------- the named strategy table
 register_strategy("psum",
                   CollectiveSpec(PsumTopology(), Reliable(), Identity()))
@@ -922,20 +949,28 @@ register_strategy("tar_rounds",
 @register_strategy("optireduce")
 @register_strategy("optireduce_2d")   # pod_axis in cfg drives the 2D path
 def _optireduce_spec(cfg: OptiReduceConfig) -> CollectiveSpec:
-    return CollectiveSpec(TarTopology(), Lossy(),
-                          Hadamard() if cfg.use_hadamard else Identity())
+    codec = Hadamard() if cfg.use_hadamard else Identity()
+    return CollectiveSpec(TarTopology(), Lossy(), _recovered(codec, cfg))
 
 
-register_strategy("optireduce_q",     # quantized exchange (beyond-paper)
-                  CollectiveSpec(TarTopology(outer="pmean"), Lossy(),
-                                 HTQuant()))
+@register_strategy("optireduce_q")    # quantized exchange (beyond-paper)
+def _optireduce_q_spec(cfg: OptiReduceConfig) -> CollectiveSpec:
+    # _recovered rejects recovery over quantized codes (not linearly
+    # decodable) instead of silently ignoring the knob
+    return CollectiveSpec(TarTopology(outer="pmean"), Lossy(),
+                          _recovered(HTQuant(), cfg))
+
 
 # new cross-product compositions the layering opens (one-liners):
-register_strategy("optireduce_rounds",   # paper round schedule + drops + HT
-                  CollectiveSpec(TarTopology(schedule="rounds", outer="pmean"),
-                                 Lossy(), Hadamard()))
-register_strategy("tar_rounds_q",        # round schedule + THC quantization
-                  CollectiveSpec(TarTopology(schedule="rounds", outer="pmean"),
-                                 Lossy(), HTQuant()))
+@register_strategy("optireduce_rounds")  # paper round schedule + drops + HT
+def _optireduce_rounds_spec(cfg: OptiReduceConfig) -> CollectiveSpec:
+    return CollectiveSpec(TarTopology(schedule="rounds", outer="pmean"),
+                          Lossy(), _recovered(Hadamard(), cfg))
+
+
+@register_strategy("tar_rounds_q")       # round schedule + THC quantization
+def _tar_rounds_q_spec(cfg: OptiReduceConfig) -> CollectiveSpec:
+    return CollectiveSpec(TarTopology(schedule="rounds", outer="pmean"),
+                          Lossy(), _recovered(HTQuant(), cfg))
 register_strategy("ring_ht",             # Gloo ring over rotated buckets
                   CollectiveSpec(RingTopology("ring"), Reliable(), Hadamard()))

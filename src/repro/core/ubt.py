@@ -17,6 +17,10 @@ Components:
     senders use the min advertised I.
   * TimelyRateControl — §3.2.3: additive increase below T_low, multiplicative
     decrease above T_high (paper constants: 25us/250us/50Mbps/beta=0.5).
+  * LossBudget — phase-aware acceptable-drop-fraction controller (DESIGN
+    §8): the budget tightens geometrically as the LR schedule / loss curve
+    approaches convergence, and when the observed loss EMA overruns it the
+    round deadlines stretch (accept-or-extend) to recover late packets.
 """
 from __future__ import annotations
 
@@ -147,14 +151,101 @@ class TimelyRateControl:
 
 
 @dataclasses.dataclass
+class LossBudget:
+    """Phase-aware acceptable-drop-fraction controller (DESIGN §8).
+
+    Early in training large gradient losses are tolerable (SGD noise
+    dominates); near convergence the same loss stalls progress. The budget
+    interpolates geometrically from ``budget_init`` at phase 0 to
+    ``budget_final`` at phase 1, where *phase* is fed from the LR schedule
+    (``update_phase(progress=...)``) and/or a loss-curve plateau detector
+    (``update_phase(train_loss=...)``) and never decreases.
+
+    The transport consumes it as an accept-or-extend rule: while the
+    observed loss EMA overruns the current budget, :meth:`deadline_factor`
+    stretches the AdaptiveTimeout round deadline (up to ``max_stretch``×)
+    so late packets are waited for instead of charged as drops — tail
+    latency is spent exactly where convergence needs the data.
+    """
+    budget_init: float = 0.02     # acceptable drop fraction at phase 0
+    budget_final: float = 1e-4    # at phase 1 (converged)
+    ema_alpha: float = 0.3        # weight on the newest loss sample
+    gain: float = 0.5             # stretch = (loss/budget)**gain, capped
+    max_stretch: float = 4.0
+    plateau_patience: int = 20    # non-improving evals to reach phase 1
+
+    phase: float = 0.0
+    loss_ema: float = 0.0
+    _best_loss: float | None = None
+    _stalls: int = 0
+
+    def budget(self) -> float:
+        """Acceptable drop fraction at the current phase (monotone in it)."""
+        f = min(max(self.phase, 0.0), 1.0)
+        return float(self.budget_init ** (1.0 - f) * self.budget_final ** f)
+
+    def update_phase(self, *, progress: float | None = None,
+                     train_loss: float | None = None) -> float:
+        """Advance the training phase; returns the new value in [0, 1].
+
+        ``progress``: LR-schedule fraction elapsed (e.g. step/total_steps or
+        1 - lr/lr0). ``train_loss``: the loss curve — phase rises as the
+        relative improvement stalls (``plateau_patience`` flat evals ⇒ 1).
+        The phase is the max of all signals seen and never moves backward.
+        """
+        f = self.phase
+        if progress is not None:
+            f = max(f, min(max(float(progress), 0.0), 1.0))
+        if train_loss is not None:
+            t = float(train_loss)
+            if self._best_loss is None or t < self._best_loss * 0.99:
+                self._best_loss = t if self._best_loss is None \
+                    else min(self._best_loss, t)
+                self._stalls = 0
+            else:
+                self._stalls += 1
+            f = max(f, min(1.0, self._stalls / float(self.plateau_patience)))
+        self.phase = f
+        return f
+
+    def observe(self, loss_frac: float) -> None:
+        """Feed one round/step's observed drop fraction into the EMA."""
+        self.loss_ema = (self.ema_alpha * float(loss_frac)
+                         + (1.0 - self.ema_alpha) * self.loss_ema)
+
+    def over_budget(self) -> bool:
+        return self.loss_ema > self.budget()
+
+    def deadline_factor(self) -> float:
+        """Multiplicative round-deadline stretch in [1, max_stretch]."""
+        over = self.loss_ema / max(self.budget(), 1e-9)
+        if over <= 1.0:
+            return 1.0
+        return float(min(self.max_stretch, over ** self.gain))
+
+    def stretch(self, deadline: float, hard: float | None = None) -> float:
+        """Accept-or-extend: the deadline after the budget's say.
+
+        ``hard`` optionally caps the stretched deadline (a wire receive
+        loop's absolute bound); ``max_stretch`` always does.
+        """
+        d = deadline * self.deadline_factor()
+        return d if hard is None else min(hard, d)
+
+
+@dataclasses.dataclass
 class UbtState:
-    """Bundle of the three controllers for one training job."""
+    """Bundle of the UBT controllers for one training job. ``budget`` is
+    the optional phase-aware loss budget (recovery='ef+budget')."""
     timeout: AdaptiveTimeout
     incast: DynamicIncast
     rate: TimelyRateControl
+    budget: LossBudget | None = None
 
     @classmethod
     def create(cls, n_nodes: int, **kw) -> "UbtState":
+        budget = kw.get("budget", None)
         return cls(timeout=AdaptiveTimeout(**kw.get("timeout", {})),
                    incast=DynamicIncast(n_nodes=n_nodes, **kw.get("incast", {})),
-                   rate=TimelyRateControl(**kw.get("rate", {})))
+                   rate=TimelyRateControl(**kw.get("rate", {})),
+                   budget=None if budget is None else LossBudget(**budget))

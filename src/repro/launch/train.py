@@ -48,6 +48,15 @@ def main(argv=None) -> int:
                          "register_strategy'd composition")
     ap.add_argument("--drop-rate", type=float, default=0.0)
     ap.add_argument("--drop-pattern", default="tail")
+    ap.add_argument("--recovery", default="none",
+                    choices=("none", "stale", "ef", "ef+budget"),
+                    help="gradient-loss recovery beyond zero-fill (DESIGN "
+                         "§8): 'stale' fills zero-arrival wire spans from "
+                         "the previous step's decoded bucket; 'ef' adds "
+                         "per-rank error-feedback residuals; 'ef+budget' "
+                         "adds the phase-aware loss budget (deadlines "
+                         "stretch while observed loss overruns the "
+                         "convergence-tightening budget)")
     ap.add_argument("--transport", default="lossy",
                     choices=("lossy", "inproc", "udp"),
                     help="stage-1 arrival masks: 'lossy' = the synthetic "
@@ -100,10 +109,13 @@ def main(argv=None) -> int:
     # synthetic mask model, and the ring's telemetry finally feeds the
     # ControlPlane per-peer stage times (not just step wall-clock).
     control = ring = None
-    need_control = args.adaptive or args.transport != "lossy"
+    with_budget = args.recovery == "ef+budget"
+    need_control = args.adaptive or args.transport != "lossy" or with_budget
     if need_control:
         from repro.runtime import ControlPlane, StepTelemetry
-        control = ControlPlane.create(n_nodes=mesh.shape.get("data", 1))
+        control = ControlPlane.create(n_nodes=mesh.shape.get("data", 1),
+                                      **({"budget": {}} if with_budget
+                                         else {}))
     if args.transport != "lossy":
         if args.dp_mode != "replicated":
             ap.error("--transport needs --dp-mode=replicated (fsdp grads "
@@ -111,6 +123,10 @@ def main(argv=None) -> int:
         if args.sync_mode == "vmap":
             ap.error("--transport bridges per-bucket io_callbacks; vmap "
                      "would batch them (use --sync-mode pipelined or scan)")
+        if args.recovery in ("ef", "ef+budget"):
+            ap.error("--recovery=ef/ef+budget reconstructs sender-arrival "
+                     "masks from the synthetic drop model; with wire "
+                     "transports use --recovery=stale")
         if mesh.shape.get("model", 1) != 1:
             ap.error("--transport needs --tp=1: with model parallelism "
                      "every tp sibling of a data rank would run the "
@@ -127,6 +143,7 @@ def main(argv=None) -> int:
             backend=args.transport,
             timeout=control.state.timeout,
             default_deadline=args.wire_deadline,
+            budget=control.state.budget,
             drop_fn=(bernoulli_drops(args.drop_rate, seed=args.seed)
                      if args.drop_rate > 0 else None))
 
@@ -136,6 +153,7 @@ def main(argv=None) -> int:
                               drop_rate=0.0 if ring else args.drop_rate,
                               drop_pattern=args.drop_pattern,
                               incast=args.incast,
+                              recovery=args.recovery,
                               hadamard_block=1024),
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr),
         dp_mode=args.dp_mode, microbatch=args.microbatch,
@@ -157,14 +175,36 @@ def main(argv=None) -> int:
     step_fn, shardings = make_step(jax.eval_shape(opt.init, params), batch0)
     params = jax.device_put(params, shardings["params"])
     opt_state = jax.jit(opt.init, out_shardings=shardings["opt"])(params)
-    jf = jax.jit(step_fn, donate_argnums=(0, 1))
+    donate = (0, 1, 2) if args.recovery != "none" else (0, 1)
+    jf = jax.jit(step_fn, donate_argnums=donate)
+
+    rec_state = None
+    if args.recovery != "none":
+        from repro.core import recovery as recovery_lib
+        from repro.core.bucket_plan import BucketPlan
+        plan = BucketPlan.for_tree(params, tc.bucket_elems)
+        rec_state = recovery_lib.init_state(
+            recovery_lib.parse(args.recovery), plan.num_buckets,
+            plan.bucket_elems, n_dp=mesh.shape.get("data", 1))
+        rec_state = jax.device_put(rec_state, shardings["rec"])
 
     start_step = 0
     ckpt = ckpt_lib.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    # recovery state checkpoints alongside params/optimizer: a resume under
+    # ef continues from the carried residual instead of silently dropping
+    # the undelivered mass (the manifest's leaf-count guard catches a
+    # resume with a different --recovery setting)
+    ckpt_tree = ((params, opt_state) if rec_state is None
+                 else (params, opt_state, rec_state))
     if args.resume and args.ckpt_dir:
         try:
-            start_step, (params, opt_state), _ = ckpt_lib.restore(
-                args.ckpt_dir, (params, opt_state))
+            start_step, restored, _ = ckpt_lib.restore(
+                args.ckpt_dir, ckpt_tree)
+            if rec_state is None:
+                params, opt_state = restored
+            else:
+                params, opt_state, rec_state = restored
+                rec_state = jax.device_put(rec_state, shardings["rec"])
             params = jax.device_put(params, shardings["params"])
             opt_state = jax.device_put(opt_state, shardings["opt"])
             print(f"resumed from step {start_step}")
@@ -218,9 +258,22 @@ def main(argv=None) -> int:
             batch = data.host_batch(step, 0, 1)
             batch = jax.device_put(batch, shardings["batch"])
             t_step = time.time()
-            params, opt_state, metrics = jf(
-                params, opt_state, batch, jnp.asarray(step, jnp.int32), key)
+            if rec_state is not None:
+                params, opt_state, rec_state, metrics = jf(
+                    params, opt_state, rec_state, batch,
+                    jnp.asarray(step, jnp.int32), key)
+            else:
+                params, opt_state, metrics = jf(
+                    params, opt_state, batch, jnp.asarray(step, jnp.int32),
+                    key)
             loss_frac = float(metrics["loss_frac"])
+            if with_budget:
+                # phase-aware budget (DESIGN §8): the phase follows the LR
+                # schedule's progress and the observed loss curve; the EMA
+                # itself is fed through control.observe below
+                control.state.budget.update_phase(
+                    progress=(step + 1) / max(args.steps, 1),
+                    train_loss=float(metrics["loss"]))
             if step % args.log_every == 0 or step == args.steps - 1:
                 m = jax.tree.map(float, metrics)
                 rate = (step - start_step + 1) / (time.time() - t0)
@@ -297,7 +350,7 @@ def main(argv=None) -> int:
                         make_step, opt, _ = build_train_step(cfg, tc, mesh)
                         step_fn, shardings = make_step(
                             jax.eval_shape(opt.init, params), batch0)
-                        jf = jax.jit(step_fn, donate_argnums=(0, 1))
+                        jf = jax.jit(step_fn, donate_argnums=donate)
                         step_cache.put(policy_of(new_sync), (jf, shardings))
                         how = "step rebuilt"
                     print(f"adaptive: use_hadamard={new_sync.use_hadamard} "
@@ -310,9 +363,11 @@ def main(argv=None) -> int:
                 if rb is not None:
                     _, params = rb
             if ckpt and step > 0 and step % args.ckpt_every == 0:
-                ckpt.save(step, (params, opt_state))
+                ckpt.save(step, (params, opt_state) if rec_state is None
+                          else (params, opt_state, rec_state))
         if ckpt:
-            ckpt.save(args.steps, (params, opt_state))
+            ckpt.save(args.steps, (params, opt_state) if rec_state is None
+                      else (params, opt_state, rec_state))
             ckpt.wait()
     finally:
         if ring is not None:

@@ -20,8 +20,8 @@ launcher integration.
 """
 from .backend import Backend
 from .host_ring import HostRing, make_backend, wire_spec
-from .inproc import (InprocBackend, bernoulli_drops, mask_scripted_drops,
-                     peer_factor_delays)
+from .inproc import (InprocBackend, bernoulli_drops, burst_drops,
+                     mask_scripted_drops, peer_factor_delays)
 from .peer import HostPeer, PeerReport, RoundReport
 from .udp import UdpBackend, udp_available
 from .wire import (HEADER_BYTES, KIND_CTRL, KIND_DATA1, KIND_DATA2,
@@ -30,7 +30,7 @@ from .wire import (HEADER_BYTES, KIND_CTRL, KIND_DATA1, KIND_DATA2,
 
 __all__ = [
     "Backend", "HostRing", "make_backend", "wire_spec",
-    "InprocBackend", "bernoulli_drops", "mask_scripted_drops",
+    "InprocBackend", "bernoulli_drops", "burst_drops", "mask_scripted_drops",
     "peer_factor_delays", "HostPeer", "PeerReport", "RoundReport",
     "UdpBackend", "udp_available",
     "HEADER_BYTES", "KIND_CTRL", "KIND_DATA1", "KIND_DATA2", "WIRE_VERSION",

@@ -37,7 +37,7 @@ import numpy as np
 
 from repro.core.pipeline import (CollectiveSpec, OptiReduceConfig,
                                  WireTransport, resolve_spec)
-from repro.core.ubt import AdaptiveTimeout
+from repro.core.ubt import AdaptiveTimeout, LossBudget
 from repro.runtime import StepTelemetry
 
 from .backend import Backend
@@ -65,14 +65,17 @@ class HostRing:
                  backend: str | Backend = "inproc",
                  timeout: AdaptiveTimeout | None = None,
                  default_deadline: float | None = None,
+                 budget: LossBudget | None = None,
                  drop_fn=None, delay_fn=None):
         self.n = int(n_peers)
         self.cfg = cfg
         self.backend = make_backend(backend, self.n, drop_fn=drop_fn,
                                     delay_fn=delay_fn)
         self.timeout = timeout
+        self.budget = budget
         self.peers = [HostPeer(p, self.backend, cfg, timeout=timeout,
-                               default_deadline=default_deadline)
+                               default_deadline=default_deadline,
+                               budget=budget)
                       for p in range(self.n)]
         self._cv = threading.Condition()
         self._lock = self._cv                 # one lock guards all ring state

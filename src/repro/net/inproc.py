@@ -56,6 +56,52 @@ def bernoulli_drops(rate: float, seed: int = 0) -> DropFn:
     return drop
 
 
+def burst_drops(rate: float, seed: int = 0,
+                mean_burst: float = 8.0) -> DropFn:
+    """Gilbert–Elliott bursty loss, deterministic in the header.
+
+    Mirrors ``core.drops.burst_mask``: a two-state Markov chain per packet
+    *stream* — one chain per ``(src, dst, step, bucket, round)``, stepped
+    along ``seq`` — with the shared ``gilbert_elliott_params(rate,
+    mean_burst)`` parameterization, so wire bursts have the same run-length
+    statistics as the in-JAX masks.  The chain is sequential in ``seq`` but
+    header-pure: each stream's state prefix is cached and extended with
+    splitmix64 uniforms keyed by (stream, seq), so out-of-order calls give
+    the same answer and the amortized cost is one mix per packet.  Applies
+    to stage-1 DATA packets only (drop scripts never touch CTRL).
+    """
+    from repro.core.drops import gilbert_elliott_params
+    p, r = gilbert_elliott_params(rate, mean_burst)
+    rate_c = min(max(rate, 0.0), 0.999)
+    # per-stream loss-state prefix: stream key -> list of bools, state[i]
+    # is the chain's Bad indicator for seq i
+    prefixes: dict[tuple, list[bool]] = {}
+
+    def uniform(stream_h: int, seq: int) -> float:
+        return _splitmix64(stream_h ^ _splitmix64(seed ^ seq)) / float(1 << 64)
+
+    def drop(src: int, dst: int, hdr: PacketHeader) -> bool:
+        if rate_c <= 0.0 or hdr.kind != KIND_DATA1:
+            return False
+        stream = (src, dst, hdr.step, hdr.bucket, hdr.round)
+        h = seed & _M64
+        for v in stream:
+            h = _splitmix64(h ^ v)
+        states = prefixes.setdefault(stream, [])
+        while len(states) <= hdr.seq:
+            i = len(states)
+            u = uniform(h, i)
+            if i == 0:
+                bad = u < rate_c                    # stationary start
+            elif states[i - 1]:
+                bad = u >= r                        # Bad: stay unless recover
+            else:
+                bad = u < p                         # Good: enter burst w.p. p
+            states.append(bad)
+        return states[hdr.seq]
+    return drop
+
+
 def mask_scripted_drops(masks: dict[int, np.ndarray],
                         packet_elems: int) -> DropFn:
     """Drop exactly the packets a per-receiver drops-mask names.

@@ -33,7 +33,7 @@ import numpy as np
 from repro.core import tar as tar_lib
 from repro.core.pipeline import (Encoded, HTQuant, OptiReduceConfig,
                                  SyncContext, TarTopology, resolve_spec)
-from repro.core.ubt import AdaptiveTimeout
+from repro.core.ubt import AdaptiveTimeout, LossBudget
 
 from .backend import Backend
 from .wire import (KIND_CTRL, KIND_DATA1, KIND_DATA2, PacketHeader,
@@ -105,7 +105,8 @@ class HostPeer:
 
     def __init__(self, rank: int, backend: Backend, cfg: OptiReduceConfig, *,
                  timeout: AdaptiveTimeout | None = None,
-                 default_deadline: float | None = None):
+                 default_deadline: float | None = None,
+                 budget: LossBudget | None = None):
         self.rank = int(rank)
         self.n = backend.n_peers
         self.backend = backend
@@ -122,6 +123,7 @@ class HostPeer:
                              "full participation only")
         self.codec = spec.codec
         self.timeout = timeout
+        self.budget = budget
         self.default_deadline = (default_deadline if default_deadline
                                  is not None else
                                  (1.0 if backend.virtual_time else 0.25))
@@ -169,8 +171,15 @@ class HostPeer:
     # ------------------------------------------------------- receive loop
     def round_deadline(self) -> float:
         if self.timeout is not None:
-            return self.timeout.round_deadline_or(self.default_deadline)
-        return self.default_deadline
+            d = self.timeout.round_deadline_or(self.default_deadline)
+        else:
+            d = self.default_deadline
+        if self.budget is not None:
+            # accept-or-extend (DESIGN §8): while the observed loss EMA
+            # overruns the phase-tightening budget, wait up to max_stretch×
+            # longer so late packets are recovered instead of masked out
+            d = self.budget.stretch(d)
+        return d
 
     #: fraction of a stream's packets counting as "last percentile seen"
     last_pctile = 0.99

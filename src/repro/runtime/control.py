@@ -103,6 +103,12 @@ class ControlPlane:
                                          (1.0,) * len(t.round_times)),
                       loss_frac=t.loss_frac)
         self.state.incast.update(loss_frac=t.loss_frac, timed_out=t.timed_out)
+        if self.state.budget is not None:
+            # phase-aware loss budget (DESIGN §8): the observed loss EMA is
+            # what the accept-or-extend deadline rule compares to the
+            # tightening budget; the *phase* advances out-of-band via
+            # update_phase (LR progress / loss curve, launcher-fed)
+            self.state.budget.observe(t.loss_frac)
         if at.hadamard_active(t.loss_frac):
             self.use_hadamard = True
         elif t.loss_frac < at.ht_threshold / 2.0:

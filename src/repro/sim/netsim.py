@@ -62,6 +62,12 @@ class NetworkModel:
     # persistent-straggler model: multiplier on every transfer peer p sends
     # (None = homogeneous). Mutable mid-run (a peer degrading / healing).
     peer_factors: tuple[float, ...] | None = None
+    # Gilbert–Elliott burst-loss parameters fitted from wire-observed mask
+    # run-lengths (from_drop_trace(masks=...)): p = P(Good->Bad) and
+    # r = P(Bad->Good) per packet. None = the i.i.d.-round process above is
+    # the whole loss model (seed behavior).
+    burst_p: float | None = None
+    burst_r: float | None = None
 
     def __post_init__(self):
         self.rng = np.random.default_rng(self.seed)
@@ -76,7 +82,8 @@ class NetworkModel:
         return 1.0
 
     @classmethod
-    def from_drop_trace(cls, trace, *, seed: int = 0, **kw) -> "NetworkModel":
+    def from_drop_trace(cls, trace, *, masks=None, seed: int = 0,
+                        **kw) -> "NetworkModel":
         """Calibrate the UBT loss process from a *wire-observed* per-round
         loss-fraction trace (``1 - round_frac_received`` from the host
         transport's :class:`~repro.runtime.StepTelemetry`).
@@ -89,6 +96,15 @@ class NetworkModel:
         = the mean loss among those rounds.  The calibration test in
         tests/test_sim.py pins that a model built this way predicts the
         observed ``loss_frac``.
+
+        ``masks`` (optional): packet-granular 0/1 arrival masks as observed
+        on the wire (rows = per-sender packet streams; any iterable of 1-D
+        or 2-D arrays). When given, the *burstiness* of the loss is fitted
+        too: zero-run lengths across the streams give the Gilbert–Elliott
+        ``burst_r`` (1 / mean burst length) and, with the stationary loss
+        rate, ``burst_p`` — the exact parameterization
+        ``core.drops.gilbert_elliott_params`` uses to synthesize burst
+        masks, so wire-fitted and synthetic burst processes agree.
         """
         t = np.asarray(list(trace), dtype=np.float64)
         if t.size == 0:
@@ -98,8 +114,31 @@ class NetworkModel:
         lossy = t > 0.0
         stall_prob = float(np.mean(lossy))
         per_stall = float(np.mean(t[lossy])) if lossy.any() else 0.0
+        ge = {}
+        if masks is not None:
+            p, r = fit_gilbert_elliott(masks)
+            if p is not None:
+                ge = {"burst_p": p, "burst_r": r}
         return cls(stall_prob=stall_prob, drop_frac_per_stall=per_stall,
-                   seed=seed, **kw)
+                   seed=seed, **ge, **kw)
+
+    def burst_loss_seq(self, n_pkts: int) -> np.ndarray:
+        """Synthesize a 0/1 packet-loss sequence (1 = lost) from the fitted
+        Gilbert–Elliott parameters — the cross-validation generator: its
+        run-length statistics must match the wire masks the fit consumed.
+        Draws from the model's own rng (deterministic in ``seed``)."""
+        if self.burst_p is None or self.burst_r is None:
+            raise ValueError("no fitted burst parameters; calibrate with "
+                             "from_drop_trace(masks=...)")
+        p, r = self.burst_p, self.burst_r
+        stationary = p / max(p + r, 1e-12)
+        u = self.rng.random(n_pkts + 1)
+        lost = np.zeros(n_pkts, dtype=np.float64)
+        bad = u[0] < stationary
+        for k in range(n_pkts):
+            bad = (u[k + 1] >= r) if bad else (u[k + 1] < p)
+            lost[k] = 1.0 if bad else 0.0
+        return lost
 
     @classmethod
     def environment(cls, name: str, seed: int = 0) -> "NetworkModel":
@@ -140,6 +179,42 @@ class NetworkModel:
                         self.rng.uniform(0.2, 1.8, n)
                         * self.drop_frac_per_stall, 0.0)
         return t, np.clip(lost, 0.0, 0.2)
+
+
+def fit_gilbert_elliott(masks) -> tuple[float | None, float | None]:
+    """Fit Gilbert–Elliott (p, r) from packet-granular 0/1 arrival masks.
+
+    ``masks``: iterable of arrays, each a per-stream arrival mask (1 =
+    arrived); 2-D arrays are treated as one stream per row. Zero runs are
+    measured *within* streams (a burst never spans two senders' streams).
+    The estimators are the run-length moment matches: ``r`` = 1 / mean
+    zero-run length (each bad run ends with one Bad->Good transition), and
+    ``p`` from the stationary loss rate pi = p/(p+r). Returns (None, None)
+    when no stream contains a loss (nothing to fit).
+    """
+    run_lengths: list[int] = []
+    lost_total = 0
+    pkt_total = 0
+    for m in masks:
+        arr = np.asarray(m, dtype=np.float64)
+        rows = arr.reshape(1, -1) if arr.ndim == 1 else arr.reshape(
+            arr.shape[0], -1)
+        for row in rows:
+            lost = row <= 0.0
+            pkt_total += lost.size
+            lost_total += int(np.sum(lost))
+            # run-length encode the loss indicator
+            padded = np.concatenate([[0], lost.astype(np.int8), [0]])
+            edges = np.flatnonzero(np.diff(padded))
+            starts, ends = edges[::2], edges[1::2]
+            run_lengths.extend((ends - starts).tolist())
+    if not run_lengths or pkt_total == 0:
+        return None, None
+    mean_burst = float(np.mean(run_lengths))
+    rate = lost_total / pkt_total
+    r = 1.0 / max(mean_burst, 1.0)
+    p = min(1.0, r * rate / max(1.0 - rate, 1e-6))
+    return p, r
 
 
 @dataclasses.dataclass
@@ -280,6 +355,13 @@ class GASimulator:
                 t99 = float(np.max(times)) * 0.99
                 deadline = min(timeout.round_deadline(False),
                                t99 + timeout.x * (timeout.t_c or t99))
+                if control.state.budget is not None:
+                    # accept-or-extend (DESIGN §8): stretch while the loss
+                    # EMA overruns the phase-tightening budget — beyond t_B
+                    # if that is what the data needs (max_stretch bounds
+                    # the round at max_stretch x the t_B-capped deadline,
+                    # matching the wire peers' uncapped stretch)
+                    deadline = control.state.budget.stretch(deadline)
                 arrived = np.where(times <= deadline, 1.0 - lost,
                                    np.minimum(1.0 - lost, deadline / times))
                 total_t += float(min(np.max(times), deadline))
@@ -339,6 +421,14 @@ class GASimulator:
             t99_all = float(np.max(act_times)) * 0.99
             deadline = min(timeout.round_deadline(last_pctile_seen=False),
                            t99_all + timeout.x * (timeout.t_c or t99_all))
+            if control.state.budget is not None:
+                # accept-or-extend (DESIGN §8): while the observed loss EMA
+                # overruns the tightening budget, wait longer for late
+                # packets instead of charging them as drops — beyond t_B if
+                # that is what the data needs (max_stretch bounds the round
+                # at max_stretch x the t_B-capped deadline, matching the
+                # wire peers' uncapped stretch)
+                deadline = control.state.budget.stretch(deadline)
             arrived_frac = np.where(act_times <= deadline, 1.0 - act_lost,
                                     np.minimum(1.0 - act_lost,
                                                deadline / act_times))

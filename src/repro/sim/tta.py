@@ -46,6 +46,12 @@ class TrainRunConfig:
     optimizer: str = "momentum"
     drop_rate: float = 0.0
     drop_pattern: str = "tail"
+    # loss recovery (DESIGN §8): 'stale' fills lost stage-1 entries from
+    # the previous step's mean bucket (plain mean over N); 'ef' adds per-
+    # worker error-feedback residuals of the undelivered wire mass.
+    # Emulated with the same wire-space layout the trainer's recovery
+    # module uses.
+    recovery: str = "none"            # none | stale | ef
     use_hadamard: bool = True
     # per-coordinate compensation of missing contributions is exactly what
     # the HT pipeline provides (§3.3 "unbiased estimate"); the naive no-HT
@@ -80,14 +86,24 @@ def _unflatten(flat, meta):
 
 
 def _aggregate_per_receiver(worker_flats: jnp.ndarray, key,
-                            rc: TrainRunConfig) -> tuple[jnp.ndarray, float]:
+                            rc: TrainRunConfig, stale: jnp.ndarray | None
+                            = None, want_resid: bool = False
+                            ) -> tuple[jnp.ndarray, float, dict]:
     """Full two-stage TAR emulation with per-receiver outcomes.
 
     Stage 1: owner r reduces peers' shard-r contributions under its arrival
     mask. Stage 2: each receiver gets every owner's aggregate under its own
     (tail-drop) mask — so receivers end up with *different* buckets, which
     is the replica-divergence pathology HT exists to tame (Fig 6/14).
-    Returns (per-receiver buckets (N, L), drop fraction).
+
+    ``stale`` (recovery='stale'/'ef'): previous step's mean bucket (L,) —
+    every lost stage-1 entry is filled from it (re-encoded under this
+    step's key) and the owner takes the plain mean over N instead of
+    renormalizing. ``want_resid`` (recovery='ef'): also return, in value
+    space, the gap between each worker's contribution and the stale fill
+    applied in its stead (lost entries only).
+    Returns (per-receiver buckets (N, L), drop fraction, extras) with
+    extras = {'stale': next step's (L,) cache, 'resid': (N, L) or None}.
     """
     n, length = worker_flats.shape
     block = rc.hadamard_block
@@ -99,21 +115,35 @@ def _aggregate_per_receiver(worker_flats: jnp.ndarray, key,
 
     if rc.drop_rate <= 0.0:
         mean = jnp.mean(g, 0)
-        return jnp.broadcast_to(mean[None], (n, lp))[:, :length], 0.0
+        out = jnp.broadcast_to(mean[None], (n, lp))[:, :length]
+        return out, 0.0, {"stale": mean[:length],
+                          "resid": jnp.zeros_like(worker_flats)
+                          if want_resid else None}
 
     if rc.use_hadamard:
         g = jax.vmap(lambda r: ht_encode(r, key, block=block))(g)
+    st_shards = None
+    if stale is not None:
+        st = jnp.pad(stale.astype(g.dtype), (0, pad))
+        if rc.use_hadamard:
+            st = ht_encode(st, key, block=block)
+        st_shards = st.reshape(n, chunk)         # [owner, chunk]
 
     shards = g.reshape(n, n, chunk)              # [worker, owner, chunk]
     dropped = 0.0
     total = 0.0
-    aggs = []
+    aggs, stage1_masks = [], []
     for r in range(n):                           # stage 1, per owner
         m = drops_lib.make_mask(rc.drop_pattern,
                                 jax.random.fold_in(key, r), n, chunk,
                                 rate=rc.drop_rate, self_index=jnp.int32(r))
         contrib = shards[:, r, :]
-        if compensate:
+        if st_shards is not None:
+            # cross-step prediction (DESIGN §8): lost entries filled from
+            # the previous step's mean, plain mean over all N (arrived
+            # entries weigh exactly 1/N — the EF split relies on this)
+            agg = jnp.mean(contrib * m + (1.0 - m) * st_shards[r][None], 0)
+        elif compensate:
             cnt = jnp.sum(m, 0)
             agg = jnp.where(cnt > 0, jnp.sum(contrib * m, 0)
                             / jnp.maximum(cnt, 1), 0.0)
@@ -122,7 +152,21 @@ def _aggregate_per_receiver(worker_flats: jnp.ndarray, key,
         dropped += jnp.sum(1.0 - m)
         total += m.size
         aggs.append(agg)
+        stage1_masks.append(m)
     agg_all = jnp.stack(aggs)                    # (owner, chunk)
+
+    resid = None
+    if want_resid:
+        # worker i's stage-1 arrival across owners, in its wire layout;
+        # residual vs the stale fill applied in its stead — carrying the
+        # full lost mass on top of the fill would apply it twice
+        arrival = jnp.stack(stage1_masks, axis=1).reshape(n, lp)
+        resid = (1.0 - arrival) * (g if st_shards is None
+                                   else g - st_shards.reshape(lp)[None])
+        if rc.use_hadamard:
+            resid = jax.vmap(lambda r_: ht_decode(r_, key, block=block))(
+                resid)
+        resid = resid[:, :length]
 
     buckets = []
     for i in range(n):                           # stage 2, per receiver
@@ -143,7 +187,8 @@ def _aggregate_per_receiver(worker_flats: jnp.ndarray, key,
         buckets.append(bucket)
     out = jnp.stack(buckets)
     drop_frac = float(dropped / total)
-    return out[:, :length], drop_frac
+    return out[:, :length], drop_frac, \
+        {"stale": jnp.mean(out, 0)[:length], "resid": resid}
 
 
 def _aggregate(worker_flats: jnp.ndarray, key, rc: TrainRunConfig,
@@ -263,17 +308,36 @@ def run_training(rc: TrainRunConfig) -> dict:
                           (rc.n_workers * rc.hadamard_block)))
         for _ in range(rc.n_workers)]}
 
+    if rc.recovery not in ("none", "stale", "ef"):
+        raise ValueError(f"unknown recovery mode {rc.recovery!r} "
+                         "(none | stale | ef)")
+    if rc.recovery != "none" and rc.compressor is not None:
+        raise ValueError("recovery emulation rides the TAR path; "
+                         "clear compressor or set recovery='none'")
+    use_stale = rc.recovery in ("stale", "ef")
+    use_ef = rc.recovery == "ef"
+    stale_flat = None
+    ef_state = jnp.zeros((n, flat0.shape[0])) if use_ef else None
+
     hist = {"steps": [], "acc": [], "drops": [], "divergence": []}
     for step in range(rc.steps):
         batch = jax.tree.map(jnp.asarray, data.global_batch(step))
         gtree = worker_grads(params, batch)
         flats = jax.vmap(lambda t: _flatten(t)[0])(gtree)
         skey = jax.random.fold_in(key, step)
+        if ef_state is not None:
+            flats = flats + ef_state
         if rc.compressor is not None:
             mean_flat, drop = _aggregate(flats, skey, rc, state)
             buckets = jnp.broadcast_to(mean_flat[None], (n,) + mean_flat.shape)
         else:
-            buckets, drop = _aggregate_per_receiver(flats, skey, rc)
+            buckets, drop, extras = _aggregate_per_receiver(
+                flats, skey, rc, stale=stale_flat if use_stale else None,
+                want_resid=use_ef)
+            if use_stale:
+                stale_flat = extras["stale"]
+            if use_ef:
+                ef_state = extras["resid"]
         params, opt_state = apply_updates(params, opt_state, buckets,
                                           jnp.asarray(step))
         hist["drops"].append(drop)

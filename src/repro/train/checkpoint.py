@@ -11,6 +11,13 @@ On a real multi-host cluster each host writes only its addressable shards
 full arrays are written. Restore is exact: step counter, params, optimizer
 state, and data-pipeline position (derived from step — the pipeline is
 deterministic, see data/pipeline.py).
+
+Loss-recovery state (DESIGN §8) checkpoints as ordinary tree leaves: with
+``--recovery`` on, the launcher saves ``(params, opt_state, rec_state)``
+so a resume under error feedback continues from the carried residual and
+stale cache instead of silently dropping the undelivered gradient mass.
+The manifest's leaf-count guard in :func:`restore` rejects a resume whose
+``--recovery`` setting (and therefore tree shape) changed.
 """
 from __future__ import annotations
 

@@ -231,6 +231,28 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
         tc.sync, data_axis=data_axis or "data",
         pod_axis=pod_axis)
     sync_spec = resolve_spec(sync_cfg)   # fail fast on unknown strategies
+    rec_policy = None
+    if sync_cfg.recovery != "none":
+        from repro.core import recovery as recovery_lib
+        rec_policy = recovery_lib.parse(sync_cfg.recovery)
+        if fsdp:
+            raise ValueError(
+                "recovery rides the bucketed sync path (stale arena + "
+                "EF residuals are arena-shaped); fsdp grads reduce "
+                "through rs_spec — use dp_mode='replicated'")
+        if pod_axis is not None:
+            raise ValueError(
+                "recovery does not compose with the 2D (pod, data) "
+                "hierarchy yet: the stale/EF wire-space layout assumes "
+                "a single flat TAR shard order")
+        if data_axis is None:
+            raise ValueError("recovery needs a 'data' mesh axis")
+        if rec_policy.ef and tc.transport_override is not None:
+            raise ValueError(
+                "recovery='ef'/'ef+budget' reconstructs sender-arrival "
+                "masks from the synthetic drop model; wire-observed masks "
+                "(transport_override) are not reproducible at the sender "
+                "— use recovery='stale' with wire transports")
     if tc.transport_override is not None:
         if fsdp:
             raise ValueError("transport_override drives the bucketed sync "
@@ -249,8 +271,9 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
     batch_dim_spec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0]) \
         if dp_axes else P()
 
-    def body(params, opt_state, batch, step, key):
+    def _body(params, opt_state, batch, step, key, rec_state):
         skey = jax.random.fold_in(key, step)
+        new_rec = None
 
         def loss_fn(p, mb):
             return lm_loss(p, mb, cfg, pctx, key=skey,
@@ -340,9 +363,34 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
                 loss, grads = jax.value_and_grad(loss_fn)(params, batch)
                 arena = plan.pack(grads)
 
+            if rec_state is not None and "ef" in rec_state:
+                # the carried EF residual joins this rank's contribution
+                # (per-rank state: each data rank dropped different wire
+                # spans last step; the local shard is (1, B, E))
+                arena = arena + rec_state["ef"][0]
+
             synced = sync_packed(arena, ctx, mode=tc.sync_mode,
-                                 spec=sync_spec)
+                                 spec=sync_spec,
+                                 stale=None if rec_state is None
+                                 else rec_state.get("stale"))
             loss_frac = ctx.loss_fraction()
+
+            if rec_state is not None:
+                new_rec = dict(rec_state)
+                if "stale" in new_rec:
+                    # next step's prediction for lost wire spans: this
+                    # step's decoded arena, pre-guard/clip (the sync output
+                    # is replicated — every rank caches identical buckets)
+                    new_rec["stale"] = synced
+                if "ef" in new_rec:
+                    n_dp = mesh.shape[data_axis]
+                    me = jax.lax.axis_index(data_axis)
+                    # residual vs the *pre-update* stale cache: that is
+                    # what the fill applied in this rank's stead, so the
+                    # carried mass is only the gap (no double counting)
+                    new_rec["ef"] = recovery_lib.ef_residual_arena(
+                        arena, ctx.key, sync_cfg, n_dp, me,
+                        stale=rec_state["stale"])[None]
 
             # ---- safeguards (§3.4), clip: fused over the arena -----------
             # norm and clip read the fp32 wire values with ONE param-dtype
@@ -370,7 +418,17 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
             "loss_frac": loss_frac,
             "skipped": skipped.astype(jnp.float32),
         }
-        return new_params, new_opt, metrics
+        return new_params, new_opt, new_rec, metrics
+
+    if rec_policy is None:
+        def body(params, opt_state, batch, step, key):
+            p, o, _, m = _body(params, opt_state, batch, step, key, None)
+            return p, o, m
+    else:
+        def body(params, opt_state, rec_state, batch, step, key):
+            p, o, r, m = _body(params, opt_state, batch, step, key,
+                               rec_state)
+            return p, o, r, m
 
     # optimizer state specs mirror parameter specs leaf-for-leaf
     def opt_specs_like(p_specs_tree, opt_state_tree):
@@ -388,12 +446,23 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
     def make_step(opt_state_example, batch_example):
         o_specs = opt_specs_like(p_specs, opt_state_example)
         batch_spec = jax.tree.map(lambda _: batch_dim_spec, batch_example)
+        metric_specs = {"loss": P(), "grad_norm": P(), "loss_frac": P(),
+                        "skipped": P()}
+        if rec_policy is None:
+            in_specs = (p_specs, o_specs, batch_spec, P(), P())
+            out_specs = (p_specs, o_specs, metric_specs)
+        else:
+            # stale cache is replicated (every rank decodes the same
+            # buckets); the EF residual is per-data-rank, leading axis
+            rec_specs = {}
+            if rec_policy.stale:
+                rec_specs["stale"] = P()
+            if rec_policy.ef:
+                rec_specs["ef"] = P(data_axis)
+            in_specs = (p_specs, o_specs, rec_specs, batch_spec, P(), P())
+            out_specs = (p_specs, o_specs, rec_specs, metric_specs)
         fn = compat.shard_map(
-            body, mesh=mesh,
-            in_specs=(p_specs, o_specs, batch_spec, P(), P()),
-            out_specs=(p_specs, o_specs,
-                       {"loss": P(), "grad_norm": P(), "loss_frac": P(),
-                        "skipped": P()}),
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False)
         shardings = {
             "params": jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
@@ -404,6 +473,10 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
                                   batch_spec,
                                   is_leaf=lambda x: isinstance(x, P)),
         }
+        if rec_policy is not None:
+            shardings["rec"] = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), rec_specs,
+                is_leaf=lambda x: isinstance(x, P))
         return fn, shardings
 
     return make_step, opt, pctx

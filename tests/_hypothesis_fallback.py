@@ -64,6 +64,9 @@ class settings:  # noqa: N801 — API-compatible no-op
     def __init__(self, *a, **kw):
         pass
 
+    def __call__(self, fn):  # decorator form: @settings(...) over a @given
+        return fn
+
     @staticmethod
     def register_profile(name, **kw):
         pass

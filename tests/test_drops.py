@@ -55,7 +55,7 @@ def test_loss_fraction():
 # ------------------------------------------------ properties (satellite):
 # determinism in (key, receiver) and the n_elems % packet_elems != 0 tail
 @given(st.integers(0, 2**31 - 1), st.integers(0, 7),
-       st.sampled_from(["bernoulli", "tail", "straggler"]))
+       st.sampled_from(["bernoulli", "tail", "straggler", "burst"]))
 def test_mask_deterministic_in_key_and_receiver(seed, receiver, pattern):
     """The whole step is jit-compatible because masks are pure functions of
     (key, receiver): the pipeline folds the receiver id into the key, so
@@ -74,7 +74,7 @@ def test_mask_deterministic_in_key_and_receiver(seed, receiver, pattern):
 
 @given(st.integers(0, 2**31 - 1),
        st.integers(1, 4 * 64).filter(lambda n: n % 64 != 0),
-       st.sampled_from(["bernoulli", "tail", "straggler"]))
+       st.sampled_from(["bernoulli", "tail", "straggler", "burst"]))
 def test_mask_tail_edge_shape_and_values(seed, n_elems, pattern):
     """n_elems % packet_elems != 0: the packet-granular mask is generated
     for ceil(n/packet) packets and truncated — the shape must match exactly
@@ -105,3 +105,58 @@ def test_self_row_preserved_at_tail_edge(seed, n_elems):
     m = make_mask("bernoulli", jax.random.PRNGKey(seed), 8, n_elems,
                   rate=0.9, packet_elems=64, self_index=jnp.asarray(5))
     assert float(jnp.min(m[5])) == 1.0
+
+
+# ----------------------------------------------- burst (Gilbert–Elliott)
+def _burst_runs(rate: float, keys: int = 30, n: int = 16,
+                n_packets: int = 128):
+    """Packet-granular burst masks over many keys -> (loss_frac, runs)."""
+    from repro.core.drops import burst_mask
+    lost = total = 0
+    runs = []
+    for s in range(keys):
+        m = np.asarray(burst_mask(jax.random.PRNGKey(s), n, n_packets,
+                                  rate=rate, packet_elems=1))
+        lost += int((1 - m).sum())
+        total += m.size
+        for row in 1 - m.astype(int):
+            # zero-run lengths: edges of the padded loss indicator
+            edges = np.flatnonzero(np.diff(np.concatenate(
+                [[0], row, [0]])))
+            runs.extend((edges[1::2] - edges[::2]).tolist())
+    return lost / total, runs
+
+
+def test_burst_stationary_loss_tracks_rate():
+    """The Gilbert–Elliott chain starts from its stationary distribution,
+    so the long-run loss fraction equals the scripted rate (clustered into
+    bursts, hence the loose tolerance)."""
+    observed, _ = _burst_runs(rate=0.1)
+    assert abs(observed - 0.1) < 0.03
+
+
+def test_burst_run_lengths_near_mean_burst():
+    """Bad-state sojourns are geometric with mean BURST_MEAN_PKTS — the
+    property that distinguishes burst from bernoulli at equal rate (row
+    truncation biases the sample mean down slightly)."""
+    from repro.core.drops import BURST_MEAN_PKTS
+    _, runs = _burst_runs(rate=0.1)
+    assert len(runs) > 50
+    mean_run = float(np.mean(runs))
+    assert BURST_MEAN_PKTS * 0.6 < mean_run < BURST_MEAN_PKTS * 1.4
+    # genuinely bursty: multi-packet runs dominate over singletons
+    assert float(np.mean(np.asarray(runs) > 1)) > 0.5
+
+
+def test_burst_clusters_vs_bernoulli_at_equal_rate():
+    """At the same stationary rate, bernoulli's mean run is ~1/(1-rate)
+    (≈1.1) while burst's is BURST_MEAN_PKTS — the whole point of the
+    pattern (DESIGN §8: bursts are what zero-fill handles worst)."""
+    m = np.asarray(bernoulli_mask(jax.random.PRNGKey(0), 16, 2048, rate=0.1,
+                                  packet_elems=1))
+    bruns = []
+    for row in 1 - m.astype(int):
+        edges = np.flatnonzero(np.diff(np.concatenate([[0], row, [0]])))
+        bruns.extend((edges[1::2] - edges[::2]).tolist())
+    _, runs = _burst_runs(rate=0.1, keys=10)
+    assert np.mean(runs) > 3 * np.mean(bruns)

@@ -323,3 +323,44 @@ def test_udp_four_peer_allreduce_end_to_end():
         assert ring.peers[0].round_deadline() <= 2.0
     finally:
         ring.close()
+
+
+def test_burst_wire_drops_are_bursty_order_free_and_on_rate():
+    """The Gilbert–Elliott wire drop schedule (DESIGN §8): header-pure
+    (out-of-order replay gives identical answers), statistically on-rate,
+    and with multi-packet loss runs along seq — the same chain the in-JAX
+    burst masks use."""
+    from repro.net import burst_drops
+    from repro.net.wire import KIND_CTRL, KIND_DATA1, PacketHeader
+
+    def hdr(seq, step=0):
+        return PacketHeader(kind=KIND_DATA1, sender=0, step=step, bucket=0,
+                            round=1, seq=seq, n_seq=4096)
+
+    fn = burst_drops(0.1, seed=2)
+    n_seq, streams = 4096, 24
+    verdicts = {}
+    for s in range(streams):
+        for q in range(n_seq):
+            verdicts[(s, q)] = fn(0, 1, hdr(q, step=s))
+    # order-free: a fresh schedule queried in reverse agrees everywhere
+    fn2 = burst_drops(0.1, seed=2)
+    for s in reversed(range(streams)):
+        for q in reversed(range(n_seq)):
+            assert fn2(0, 1, hdr(q, step=s)) == verdicts[(s, q)]
+
+    lost = np.array([[verdicts[(s, q)] for q in range(n_seq)]
+                     for s in range(streams)], dtype=int)
+    rate = lost.mean()
+    assert 0.05 < rate < 0.15            # stationary loss tracks the rate
+    runs = []
+    for row in lost:
+        edges = np.flatnonzero(np.diff(np.concatenate([[0], row, [0]])))
+        runs.extend((edges[1::2] - edges[::2]).tolist())
+    from repro.core.drops import BURST_MEAN_PKTS
+    assert BURST_MEAN_PKTS * 0.6 < float(np.mean(runs)) < BURST_MEAN_PKTS * 1.4
+
+    # CTRL packets are never dropped (drop scripts touch DATA only)
+    ctrl = PacketHeader(kind=KIND_CTRL, sender=0, step=0, bucket=0,
+                        round=1, seq=0, n_seq=1)
+    assert not fn(0, 1, ctrl)

@@ -263,3 +263,86 @@ def test_adaptive_transport_is_thin_adapter():
     assert at.control.detector.status(7) == EJECTED
     cfg = at.apply(OptiReduceConfig(strategy="optireduce_rounds"))
     assert cfg.active_peers == tuple(range(7))
+
+
+# --------------------------------------- phase-aware loss budget (DESIGN §8)
+class TestLossBudget:
+    def test_budget_monotone_in_phase(self):
+        from repro.core.ubt import LossBudget
+        b = LossBudget()
+        vals = []
+        for k in range(6):
+            b.update_phase(progress=k / 5.0)
+            vals.append(b.budget())
+        assert vals[0] == pytest.approx(b.budget_init)
+        assert vals[-1] == pytest.approx(b.budget_final)
+        assert all(x > y for x, y in zip(vals, vals[1:]))
+        # the phase never moves backward, even if the signal does
+        b.update_phase(progress=0.1)
+        assert b.budget() == pytest.approx(b.budget_final)
+
+    def test_plateau_detector_advances_phase(self):
+        from repro.core.ubt import LossBudget
+        b = LossBudget(plateau_patience=4)
+        for _ in range(5):     # first feed only seeds the best-loss tracker
+            assert b.update_phase(train_loss=5.0) <= 1.0
+        assert b.phase == pytest.approx(1.0)
+        # an improving curve keeps the phase down
+        c = LossBudget(plateau_patience=4)
+        loss = 5.0
+        for _ in range(8):
+            c.update_phase(train_loss=loss)
+            loss *= 0.9
+        assert c.phase < 0.5
+
+    def test_accept_or_extend_stretch(self):
+        from repro.core.ubt import LossBudget
+        b = LossBudget()
+        b.observe(0.001)                      # under the phase-0 budget
+        assert b.deadline_factor() == 1.0
+        b.update_phase(progress=1.0)          # tighten to budget_final
+        assert b.over_budget()
+        f = b.deadline_factor()
+        assert 1.0 < f <= b.max_stretch
+        assert b.stretch(10.0) == pytest.approx(10.0 * f)
+        assert b.stretch(10.0, hard=12.0) == 12.0
+
+    def test_budget_tightens_accepted_drops_over_lr_decay(self):
+        """Acceptance: under a *constant* lossy network, the budget turns
+        simulated LR decay into a falling accepted-drop fraction — late
+        training waits for late packets instead of charging them as drops
+        (accept-or-extend), while the no-budget control stays flat."""
+        from repro.sim.netsim import GASimulator, NetworkModel
+
+        def run(with_budget: bool):
+            # heavy-tail, no byte-shedding: every drop is a deadline
+            # truncation, i.e. recoverable by waiting — what the budget
+            # trades tail latency for
+            env = NetworkModel(median_ms=1.0, p99_over_p50=4.0,
+                               stall_prob=0.0, seed=11)
+            sim = GASimulator(env, 8)
+            kw = {"budget": {}} if with_budget else {}
+            control = ControlPlane.create(
+                n_nodes=8, detect_stragglers=False,
+                timeout={"x_init": 0.02, "x_max": 0.05,
+                         "warmup_iters": 20}, **kw)
+            control = sim.warmup(1e6, control=control)
+            steps = 60
+            drops = []
+            for s in range(steps):
+                r = sim.optireduce(1e6, control, fixed_incast=1)
+                drops.append(r.drop_frac)
+                if with_budget:
+                    control.state.budget.update_phase(
+                        progress=(s + 1) / steps)
+            return np.asarray(drops)
+
+        budgeted = run(True)
+        flat = run(False)
+        early = float(np.mean(budgeted[:15]))
+        late = float(np.mean(budgeted[-15:]))
+        # same network, but the tightened budget stretches deadlines: the
+        # accepted drop fraction falls materially across the decay
+        assert late < 0.5 * max(early, 1e-12)
+        # and clearly below the unbudgeted control's late-phase drops
+        assert late < 0.5 * float(np.mean(flat[-15:]))

@@ -110,3 +110,43 @@ def test_drop_trace_calibration_validates_input():
     assert lossless.stall_prob == 0.0
     _, lost = lossless.ubt_ms(1e6, n=100)
     assert float(np.max(lost)) == 0.0
+
+
+def test_ge_fit_cross_validates_against_synthetic_burst_masks():
+    """DESIGN §8 cross-validation: fit Gilbert–Elliott parameters from
+    packet-granular synthetic burst masks (core.drops) and the fitted model
+    must (a) match the generator's parameterization and (b) regenerate loss
+    sequences with the same run-length statistics."""
+    import jax
+
+    from repro.core.drops import (BURST_MEAN_PKTS, burst_mask,
+                                  gilbert_elliott_params)
+
+    rate = 0.1
+    masks = [burst_mask(jax.random.PRNGKey(s), 16, 256, rate=rate,
+                        packet_elems=1) for s in range(20)]
+    env = NetworkModel.from_drop_trace([rate], masks=masks, seed=4)
+    true_p, true_r = gilbert_elliott_params(rate, BURST_MEAN_PKTS)
+    # moment-matched parameters land near the generator's (bursty loss has
+    # high sample variance — loose statistical bounds)
+    assert env.burst_r == pytest.approx(true_r, rel=0.5)
+    assert env.burst_p == pytest.approx(true_p, rel=0.6)
+
+    # round trip: the fitted model's own loss sequence reproduces the
+    # stationary rate and mean burst length it was fitted from
+    seq = env.burst_loss_seq(200_000)
+    assert float(np.mean(seq)) == pytest.approx(rate, abs=0.05)
+    padded = np.concatenate([[0], seq.astype(np.int8), [0]])
+    edges = np.flatnonzero(np.diff(padded))
+    runs = edges[1::2] - edges[::2]
+    assert float(np.mean(runs)) == pytest.approx(1.0 / env.burst_r, rel=0.3)
+
+
+def test_ge_fit_absent_without_masks_or_losses():
+    env = NetworkModel.from_drop_trace([0.05, 0.0], seed=1)
+    assert env.burst_p is None
+    with pytest.raises(ValueError, match="burst"):
+        env.burst_loss_seq(10)
+    # lossless masks: nothing to fit, burst params stay unset
+    clean = NetworkModel.from_drop_trace([0.0], masks=[np.ones((4, 64))])
+    assert clean.burst_p is None
