@@ -14,6 +14,9 @@ Three questions, all answered on the *host* datapath (repro/net):
                     schedule injected; the mask is what training consumes).
   codec overhead  — packetize + reassemble round-trip per bucket size (the
                     pure wire-format tax, no sockets, no jax).
+  fan-in scale    — round latency at 16/32/64 peers (inproc; UDP to 32 —
+                    the single-process localhost ceiling) at fixed per-peer
+                    payload: the n² cost curve elastic membership pays.
 
 UDP rows are always emitted so the BENCH key set never shrinks between
 runs (run.py's shape gate); in a sandbox that forbids sockets they carry
@@ -47,10 +50,11 @@ def _cfg(packet_elems: int = 256) -> OptiReduceConfig:
                             hadamard_block=256, packet_elems=packet_elems)
 
 
-def _ring_latency(backend: str, n: int, elems: int, reps: int,
-                  key) -> tuple[float, float]:
-    ring = HostRing(n, _cfg(), backend=backend,
-                    default_deadline=1.0 if backend == "inproc" else 0.5)
+def _ring_latency(backend: str, n: int, elems: int, reps: int, key,
+                  deadline: float | None = None) -> tuple[float, float]:
+    if deadline is None:
+        deadline = 1.0 if backend == "inproc" else 0.5
+    ring = HostRing(n, _cfg(), backend=backend, default_deadline=deadline)
     buckets = np.random.default_rng(0).standard_normal(
         (n, elems)).astype(np.float32)
     try:
@@ -107,6 +111,43 @@ def _reassembly_overhead(elems: int, packet_elems: int,
     return statistics.median(times), _iqr(times)
 
 
+#: peer counts for the fan-in scale rows.  Inproc covers the full ladder;
+#: UDP stops at 32 — beyond that a single process multiplexing N sockets,
+#: N receive threads and N jit contexts measures host oversubscription,
+#: not the wire (the multi-process launcher is the 64+ story).
+SCALE_PEERS = (16, 32, 64)
+UDP_SCALE_PEERS = (16, 32)
+SCALE_ELEMS = 4096
+
+
+def _scale_rows(rows: Rows, key, reps: int) -> None:
+    """Round latency vs peer count at fixed per-peer payload: the TAR
+    schedule is all-to-all per stage, so wire work grows ~n² while the
+    per-peer bucket stays put — the fan-in cost curve the elastic runtime
+    (DESIGN §9) pays per extra member."""
+    for n in SCALE_PEERS:
+        med, iqr = _ring_latency("inproc", n, SCALE_ELEMS, reps, key)
+        rows.add(f"transport/inproc_scale_{n}p_median_ms", med,
+                 f"TAR allreduce, {n} peers, {SCALE_ELEMS} fp32/peer, "
+                 f"median of {reps} reps")
+        rows.add(f"transport/inproc_scale_{n}p_iqr_ms", iqr,
+                 "dispersion sibling")
+    for n in UDP_SCALE_PEERS:
+        if udp_available():
+            # a generous deadline keeps scheduler stalls at high fan-in
+            # from masking packets (this measures latency, not loss)
+            med, iqr = _ring_latency("udp", n, SCALE_ELEMS, reps, key,
+                                     deadline=2.0)
+            note = (f"localhost UDP sockets, {n} peers, {SCALE_ELEMS} "
+                    f"fp32/peer, median of {reps} reps")
+        else:
+            med, iqr, note = 0.0, 0.0, "udp-unavailable"
+        rows.add(f"transport/udp_scale_{n}p_median_ms", med, note)
+        rows.add(f"transport/udp_scale_{n}p_iqr_ms", iqr,
+                 "dispersion sibling" if note != "udp-unavailable"
+                 else note)
+
+
 def run(quick: bool = True) -> Rows:
     rows = Rows()
     key = jax.random.PRNGKey(0)
@@ -131,6 +172,8 @@ def run(quick: bool = True) -> Rows:
         rows.add(f"transport/udp_{label}_roundtrip_iqr_ms", uiqr,
                  "dispersion sibling" if u_note != "udp-unavailable"
                  else u_note)
+
+    _scale_rows(rows, key, reps=5 if quick else 9)
 
     _loss_sweep(rows, n, 16_384, (0.0, 0.01, 0.05), key)
 

@@ -15,7 +15,15 @@ Falls back to the deterministic in-memory loopback when the sandbox forbids
 UDP socket binding (same code path, virtual clock).
 
     PYTHONPATH=src python examples/udp_allreduce.py
+
+``--spawn`` instead routes through the multi-process launcher (DESIGN §9):
+one OS process per rank over the TCP rendezvous, a scripted SIGKILL
+mid-run, and the relaunch that restores the victim's checkpoint and walks
+it back in through the survivors' PROBATION window:
+
+    PYTHONPATH=src python examples/udp_allreduce.py --spawn
 """
+import argparse
 import os
 import sys
 
@@ -28,6 +36,61 @@ from repro.core.allreduce import OptiReduceConfig
 from repro.net import (HostRing, InprocBackend, UdpBackend, bernoulli_drops,
                        peer_factor_delays, udp_available)
 from repro.runtime import ControlPlane
+
+
+def run_spawn():
+    """SIGKILL-and-readmit demo through repro.launch.multiproc: spawn one
+    process per rank (threads when the sandbox forbids sockets), SIGKILL
+    rank 1 mid-run, relaunch it, and narrate the membership lifecycle the
+    survivors observed — ejection, checkpoint restore, probation, active.
+    """
+    from repro.launch import multiproc as mp
+
+    n, kill_rank, kill_step, steps = 4, 1, 1, 8
+    over_udp = udp_available()
+    backend = "udp" if over_udp else "inproc"
+    argv = ["--backend", backend, "--nprocs", str(n), "--steps", str(steps),
+            "--elems", "4096", "--drop-rate", "0.02",
+            "--kill-rank", str(kill_rank), "--kill-step", str(kill_step),
+            "--restart"]
+    if over_udp:
+        # a respawned OS process pays interpreter + jit warmup before it can
+        # rejoin; pace the survivors so readmission happens mid-run
+        argv += ["--step-sleep", "2.0", "--deadline", "1.0"]
+    print(f"spawning {n} {'processes' if over_udp else 'threads'} "
+          f"({backend}); SIGKILL rank {kill_rank} at step {kill_step}, "
+          f"then relaunch it\n")
+    report = mp.main(argv)
+
+    killed = [w for w in report["workers"] if w.get("exit") == "killed"]
+    finished = {w["rank"]: w for w in report["workers"] if "steps" in w}
+    for _ in killed:
+        print(f"rank {kill_rank}: SIGKILLed at step {kill_step} — no FIN, "
+              f"no atexit; the rendezvous heartbeat is what notices")
+    rejoin = finished.get(kill_rank)
+    if rejoin is not None:
+        print(f"rank {kill_rank} relaunched (uid {rejoin['uid']}): restored "
+              f"checkpoint step {rejoin['resumed_from']}, rejoined at step "
+              f"{rejoin['start_step']}, finished step "
+              f"{rejoin['steps'][-1]['step']}")
+    print(f"\n{'step':>4}  " + "  ".join(
+        f"rank{r}:sees_rank{kill_rank}" for r in range(n) if r != kill_rank))
+    for step in range(steps):
+        row = []
+        for r in range(n):
+            if r == kill_rank:
+                continue
+            rec = next((s for s in finished[r]["steps"]
+                        if s["step"] == step), None)
+            row.append("-" if rec is None else rec["statuses"][kill_rank])
+        print(f"{step:4d}  " + "  ".join(f"{c:>16}" for c in row))
+    checks = {}
+    for r, w in sorted(finished.items()):
+        for s in w["steps"]:
+            checks.setdefault(s["step"], set()).add(s["checksum"])
+    agree = [step for step, cs in sorted(checks.items()) if len(cs) == 1]
+    print(f"\nbitwise-identical results across participants at steps "
+          f"{agree} (membership changes redraw the mean, never corrupt it)")
 
 
 def main():
@@ -104,4 +167,8 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--spawn", action="store_true",
+                    help="multi-process launch with a scripted SIGKILL + "
+                         "restart (repro.launch.multiproc)")
+    run_spawn() if ap.parse_args().spawn else main()

@@ -68,6 +68,13 @@ def main(argv=None) -> int:
     ap.add_argument("--wire-deadline", type=float, default=None,
                     help="receive deadline before the AdaptiveTimeout is "
                          "profiled (backend clock units)")
+    ap.add_argument("--rendezvous", default=None,
+                    help="with --transport=udp: coordinate the ring's peers "
+                         "through the socket rendezvous (repro/net/"
+                         "rendezvous.py) — 'auto' starts an in-process "
+                         "coordinator, host:port joins an external one; the "
+                         "peers consume the live membership view (a rank "
+                         "that leaves or dies is skipped, not waited on)")
     ap.add_argument("--incast", type=int, default=1,
                     help="round-schedule incast I (rounds topologies)")
     ap.add_argument("--adaptive", action="store_true",
@@ -108,7 +115,8 @@ def main(argv=None) -> int:
     # UDP); --drop-rate becomes injected *wire* loss instead of the
     # synthetic mask model, and the ring's telemetry finally feeds the
     # ControlPlane per-peer stage times (not just step wall-clock).
-    control = ring = None
+    control = ring = rdv_server = None
+    rdv_clients = []
     with_budget = args.recovery == "ef+budget"
     need_control = args.adaptive or args.transport != "lossy" or with_budget
     if need_control:
@@ -133,9 +141,32 @@ def main(argv=None) -> int:
                      "io_callback, advancing the ring's per-rank exchange "
                      "counter tp times per bucket and pairing deposits "
                      "from different buckets into one wire exchange")
+        if args.rendezvous and args.transport != "udp":
+            ap.error("--rendezvous coordinates real socket peers; it needs "
+                     "--transport=udp")
         from repro.core.pipeline import WireTransport
         from repro.net import HostRing, bernoulli_drops
         n_wire = mesh.shape.get("data", 1)
+        membership = None
+        if args.rendezvous:
+            from repro.net import RendezvousClient, RendezvousServer
+            if args.rendezvous == "auto":
+                rdv_server = RendezvousServer(n_wire)
+                rdv_addr = rdv_server.addr
+            else:
+                host, _, port = args.rendezvous.rpartition(":")
+                rdv_addr = (host or "127.0.0.1", int(port))
+            # one client per ring peer; joins are sequential so rank i is
+            # peer i, and every client heartbeats — the shared membership
+            # view is live, not a snapshot
+            for uid in range(n_wire):
+                c = RendezvousClient(rdv_addr, uid=uid)
+                c.join()
+                rdv_clients.append(c)
+            membership = rdv_clients[0]
+            print(f"rendezvous: {n_wire} peers joined at "
+                  f"{rdv_addr[0]}:{rdv_addr[1]} "
+                  f"generation={membership.generation}")
         ring = HostRing(
             n_wire,
             OptiReduceConfig(strategy=args.strategy, incast=args.incast,
@@ -145,7 +176,8 @@ def main(argv=None) -> int:
             default_deadline=args.wire_deadline,
             budget=control.state.budget,
             drop_fn=(bernoulli_drops(args.drop_rate, seed=args.seed)
-                     if args.drop_rate > 0 else None))
+                     if args.drop_rate > 0 else None),
+            membership=membership)
 
     tc = TrainConfig(
         sync=OptiReduceConfig(strategy=args.strategy,
@@ -372,6 +404,10 @@ def main(argv=None) -> int:
     finally:
         if ring is not None:
             ring.close()          # UDP sockets + the bridge worker
+        for c in rdv_clients:
+            c.leave()
+        if rdv_server is not None:
+            rdv_server.close()
     print("done")
     return 0
 

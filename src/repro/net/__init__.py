@@ -5,34 +5,49 @@ an adaptive per-round receive deadline, where *actually missing* packets
 become the arrival mask the compensated mean absorbs — as a host-side
 subsystem:
 
-    wire.py       packet codec: sequenced datagrams <-> payload + mask
-                  (bit-compatible with core/drops.py masks)
-    backend.py    the Backend datagram-fabric protocol
-    inproc.py     deterministic in-memory loopback (scripted drop/delay)
-    udp.py        real non-blocking UDP sockets on localhost
-    peer.py       HostPeer: one rank's TAR schedule over the wire
-    host_ring.py  HostRing: the N-peer driver + the io_callback bridge
-                  feeding WireTransport / StepTelemetry
+    wire.py        packet codec: sequenced datagrams <-> payload + mask
+                   (bit-compatible with core/drops.py masks)
+    backend.py     the Backend datagram-fabric protocol
+    inproc.py      deterministic in-memory loopback (scripted drop/delay)
+    udp.py         real non-blocking UDP sockets on localhost (threaded
+                   UdpBackend + single-socket UdpProcessBackend)
+    rendezvous.py  socket rendezvous: rank assignment, generation-numbered
+                   elastic membership, heartbeat liveness, phase barriers
+    peer.py        HostPeer: one rank's TAR schedule over the wire,
+                   membership-view aware
+    host_ring.py   HostRing: the N-peer driver + the io_callback bridge
+                   feeding WireTransport / StepTelemetry
 
 See ``repro.core.pipeline.WireTransport`` for the in-JAX side of the
-bridge and ``launch/train.py --transport={lossy,inproc,udp}`` for the
-launcher integration.
+bridge, ``launch/train.py --transport={lossy,inproc,udp}`` for the
+launcher integration, and ``repro.launch.multiproc`` for the multi-process
+peer runtime on top of the rendezvous.
 """
 from .backend import Backend
-from .host_ring import HostRing, make_backend, wire_spec
+from .host_ring import HostRing, aggregate_reports, make_backend, wire_spec
 from .inproc import (InprocBackend, bernoulli_drops, burst_drops,
                      mask_scripted_drops, peer_factor_delays)
 from .peer import HostPeer, PeerReport, RoundReport
-from .udp import UdpBackend, udp_available
+from .rendezvous import (PHASES_PER_STEP, FrameBuffer, LocalCoordinator,
+                         LocalClient, Member, Membership, RendezvousClient,
+                         RendezvousError, RendezvousFull, RendezvousMessage,
+                         RendezvousServer, RendezvousState, RendezvousTimeout,
+                         StaticMembership, tcp_available)
+from .udp import UdpBackend, UdpProcessBackend, udp_available
 from .wire import (HEADER_BYTES, KIND_CTRL, KIND_DATA1, KIND_DATA2,
                    WIRE_VERSION, PacketHeader, Reassembly, WireError,
                    n_packets, packetize)
 
 __all__ = [
-    "Backend", "HostRing", "make_backend", "wire_spec",
+    "Backend", "HostRing", "aggregate_reports", "make_backend", "wire_spec",
     "InprocBackend", "bernoulli_drops", "burst_drops", "mask_scripted_drops",
     "peer_factor_delays", "HostPeer", "PeerReport", "RoundReport",
-    "UdpBackend", "udp_available",
+    "UdpBackend", "UdpProcessBackend", "udp_available",
+    "PHASES_PER_STEP", "FrameBuffer", "LocalCoordinator", "LocalClient",
+    "Member", "Membership", "RendezvousClient", "RendezvousError",
+    "RendezvousFull", "RendezvousMessage", "RendezvousServer",
+    "RendezvousState", "RendezvousTimeout", "StaticMembership",
+    "tcp_available",
     "HEADER_BYTES", "KIND_CTRL", "KIND_DATA1", "KIND_DATA2", "WIRE_VERSION",
     "PacketHeader", "Reassembly", "WireError", "n_packets", "packetize",
 ]

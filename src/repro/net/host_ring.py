@@ -47,15 +47,55 @@ from .udp import UdpBackend
 
 
 def make_backend(kind: str | Backend, n_peers: int, *, drop_fn=None,
-                 delay_fn=None) -> Backend:
+                 delay_fn=None, scramble_seed=None) -> Backend:
     """Build a backend by name (``inproc`` | ``udp``) or pass one through."""
     if isinstance(kind, Backend):
         return kind
     if kind == "inproc":
         return InprocBackend(n_peers, drop_fn=drop_fn, delay_fn=delay_fn)
     if kind == "udp":
-        return UdpBackend(n_peers, drop_fn=drop_fn)
+        return UdpBackend(n_peers, drop_fn=drop_fn,
+                          scramble_seed=scramble_seed)
     raise ValueError(f"unknown backend {kind!r} (inproc | udp)")
+
+
+def aggregate_reports(reports: list[PeerReport], step: int) -> StepTelemetry:
+    """Cross-receiver fold of per-peer wire observations: a round completes
+    when its slowest receiver does; a peer's stage time is the worst any
+    receiver waited on it.  Used by :class:`HostRing` (all N receivers in
+    one process) and by ``repro.launch.multiproc`` workers (a single
+    receiver's report — each process only observes its own rounds)."""
+    n_rounds = max(len(r.rounds) for r in reports)
+    round_times, round_to, round_frac = [], [], []
+    for i in range(n_rounds):
+        rs = [r.rounds[i] for r in reports if i < len(r.rounds)]
+        round_times.append(max(x.time for x in rs))
+        round_to.append(any(x.timed_out for x in rs))
+        round_frac.append(float(np.mean([x.frac_received for x in rs])))
+    last = np.stack([r.sender_last_t for r in reports])         # (R, n)
+    # a rank no receiver observed (skipped as dead) keeps NaN without the
+    # nanmax all-NaN-slice warning
+    seen = ~np.all(np.isnan(last), axis=0)
+    peer_times = np.full(last.shape[1], np.nan)
+    peer_times[seen] = np.nanmax(last[:, seen], axis=0)         # (n,)
+    dropped = sum(r.dropped for r in reports)
+    total = sum(r.total for r in reports)
+    return StepTelemetry.from_wire(
+        step=step,
+        round_times=tuple(round_times),
+        round_timed_out=tuple(round_to),
+        round_frac_received=tuple(round_frac),
+        peer_stage_times=tuple(float(t) for t in peer_times),
+        dropped=float(dropped), total=float(total),
+        # the §3.2.1 warmup profiles *stage* (round) times — feed the
+        # slowest COMPLETED round: an expired round only reports the
+        # deadline itself (the receiver stopped waiting), and sampling
+        # that would make t_B converge to whatever budget it started
+        # with instead of the network's real pace.  A step where every
+        # round was lossy contributes no sample (the ControlPlane falls
+        # back to the per-peer arrival times).
+        step_time=max((t for t, to in zip(round_times, round_to)
+                       if not to), default=None))
 
 
 class HostRing:
@@ -66,16 +106,18 @@ class HostRing:
                  timeout: AdaptiveTimeout | None = None,
                  default_deadline: float | None = None,
                  budget: LossBudget | None = None,
-                 drop_fn=None, delay_fn=None):
+                 drop_fn=None, delay_fn=None, scramble_seed=None,
+                 membership=None):
         self.n = int(n_peers)
         self.cfg = cfg
         self.backend = make_backend(backend, self.n, drop_fn=drop_fn,
-                                    delay_fn=delay_fn)
+                                    delay_fn=delay_fn,
+                                    scramble_seed=scramble_seed)
         self.timeout = timeout
         self.budget = budget
         self.peers = [HostPeer(p, self.backend, cfg, timeout=timeout,
                                default_deadline=default_deadline,
-                               budget=budget)
+                               budget=budget, membership=membership)
                       for p in range(self.n)]
         self._cv = threading.Condition()
         self._lock = self._cv                 # one lock guards all ring state
@@ -101,14 +143,16 @@ class HostRing:
         self.backend.close()
 
     # ------------------------------------------------- standalone datapath
-    def allreduce(self, buckets, key, *, step: int = 0, bucket: int = 0
-                  ) -> tuple[np.ndarray, StepTelemetry]:
+    def allreduce(self, buckets, key, *, step: int = 0, bucket: int = 0,
+                  stale=None) -> tuple[np.ndarray, StepTelemetry]:
         """One full over-the-wire TAR allreduce of per-peer buckets.
 
         ``buckets``: (n, L) array (or list of n flat arrays) — peer p
         contributes row p.  ``key`` is the replicated per-step PRNG key
-        (same at every peer, exactly like ``SyncContext.key``).  Returns
-        the (n, L) per-peer synced results and the step's telemetry.
+        (same at every peer, exactly like ``SyncContext.key``).  ``stale``
+        is the replicated previous-step decoded bucket for StaleFill
+        recovery codecs (``cfg.recovery != "none"``).  Returns the (n, L)
+        per-peer synced results and the step's telemetry.
         """
         buckets = np.asarray(buckets)
         if buckets.ndim != 2 or buckets.shape[0] != self.n:
@@ -121,7 +165,8 @@ class HostRing:
         def run(p: int) -> None:
             try:
                 peer = self.peers[p]
-                peer.phase1_encode(buckets[p], key, step, bucket)
+                peer.phase1_encode(buckets[p], key, step, bucket,
+                                   stale=stale)
                 self.backend.barrier(timeout=60.0)
                 peer.phase2_send_stage1(step, bucket)
                 self.backend.barrier(timeout=60.0)
@@ -275,36 +320,7 @@ class HostRing:
     # -------------------------------------------------------- aggregation
     def _aggregate(self, reports: list[PeerReport],
                    step: int) -> StepTelemetry:
-        """Cross-receiver fold: a round completes when its slowest receiver
-        does; a peer's stage time is the worst any receiver waited on it."""
-        n_rounds = max(len(r.rounds) for r in reports)
-        round_times, round_to, round_frac = [], [], []
-        for i in range(n_rounds):
-            rs = [r.rounds[i] for r in reports if i < len(r.rounds)]
-            round_times.append(max(x.time for x in rs))
-            round_to.append(any(x.timed_out for x in rs))
-            round_frac.append(float(np.mean([x.frac_received for x in rs])))
-        last = np.stack([r.sender_last_t for r in reports])     # (R, n)
-        with np.errstate(all="ignore"):
-            peer_times = np.nanmax(last, axis=0)                # (n,)
-        dropped = sum(r.dropped for r in reports)
-        total = sum(r.total for r in reports)
-        return StepTelemetry.from_wire(
-            step=step,
-            round_times=tuple(round_times),
-            round_timed_out=tuple(round_to),
-            round_frac_received=tuple(round_frac),
-            peer_stage_times=tuple(float(t) for t in peer_times),
-            dropped=float(dropped), total=float(total),
-            # the §3.2.1 warmup profiles *stage* (round) times — feed the
-            # slowest COMPLETED round: an expired round only reports the
-            # deadline itself (the receiver stopped waiting), and sampling
-            # that would make t_B converge to whatever budget it started
-            # with instead of the network's real pace.  A step where every
-            # round was lossy contributes no sample (the ControlPlane falls
-            # back to the per-peer arrival times).
-            step_time=max((t for t, to in zip(round_times, round_to)
-                           if not to), default=None))
+        return aggregate_reports(reports, step)
 
 
 def wire_spec(cfg: OptiReduceConfig, ring: HostRing) -> CollectiveSpec:

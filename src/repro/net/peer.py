@@ -60,6 +60,11 @@ class PeerReport:
     stage2_dropped: float = 0.0
     stage2_total: float = 0.0
     stage_time: float = 0.0     # sum of round completion times
+    # senders skipped because the membership view says they are dead: their
+    # rounds cost nothing, their mask rows are excluded from loss accounting
+    # (a known-dead peer is degradation the control plane already decided,
+    # not packet loss for the Hadamard/incast controllers to react to)
+    skipped_senders: tuple[int, ...] = ()
 
     def merge(self, other: "PeerReport") -> None:
         self.rounds.extend(other.rounds)
@@ -74,6 +79,7 @@ class PeerReport:
         self.stage2_dropped += other.stage2_dropped
         self.stage2_total += other.stage2_total
         self.stage_time += other.stage_time
+        self.skipped_senders = self.skipped_senders + other.skipped_senders
 
 
 class _PacketStore:
@@ -106,11 +112,19 @@ class HostPeer:
     def __init__(self, rank: int, backend: Backend, cfg: OptiReduceConfig, *,
                  timeout: AdaptiveTimeout | None = None,
                  default_deadline: float | None = None,
-                 budget: LossBudget | None = None):
+                 budget: LossBudget | None = None,
+                 membership=None):
         self.rank = int(rank)
         self.n = backend.n_peers
         self.backend = backend
         self.cfg = cfg
+        # membership view (rendezvous client or StaticMembership): which of
+        # the n rank slots are live *right now*.  None = fixed full world.
+        # A dead rank's rounds are skipped outright — no deadline burned,
+        # nothing sent its way — which is how rendezvous leave/death events
+        # map onto the same degraded-participation schedules the
+        # ControlPlane's ejections use (DESIGN §9).
+        self.membership = membership
         spec = resolve_spec(cfg)
         if not isinstance(spec.topology, TarTopology):
             raise ValueError(
@@ -132,6 +146,10 @@ class HostPeer:
         self._build_stage_fns()
         # in-flight state between phases of one exchange
         self._held: dict = {}
+        # last exchange's observed (n, s) stage-1 / stage-2 arrival masks —
+        # what the EF residual accounting reconstructs lost mass from
+        self.last_mask1: np.ndarray | None = None
+        self.last_mask2: np.ndarray | None = None
 
     # ---------------------------------------------------- jitted stage fns
     def _ctx(self, key) -> SyncContext:
@@ -151,14 +169,18 @@ class HostPeer:
             self._enc_local = jax.jit(enc_local)
             self._enc_finish = jax.jit(enc_finish)
         else:
-            def enc(x, key):
+            def enc(x, key, stale):
+                # `stale` is the previous step's decoded bucket (StaleFill
+                # recovery, DESIGN §8) — None traces the plain variant
+                ctx = SyncContext(cfg=self.cfg, key=key, stale=stale)
                 x, _ = tar_lib.pad_for_tar(x, n, codec.block(cfg))
-                return codec.encode(x, self._ctx(key), cfg.data_axis).data
+                e = codec.encode(x, ctx, cfg.data_axis)
+                return e.data, e.stale
             self._enc = jax.jit(enc)
 
-        def red(received, mask, me, lo, step, key):
+        def red(received, mask, me, lo, step, stale_w, key):
             ctx = self._ctx(key)
-            enc = Encoded(None, lo=lo, step=step)
+            enc = Encoded(None, lo=lo, step=step, stale=stale_w)
             own = codec.reduce(received, mask, me, enc, ctx)
             return codec.encode_shard(own, me, enc, ctx)
         self._red = jax.jit(red)
@@ -249,6 +271,16 @@ class HostPeer:
         streams: dict[int, Reassembly] = {}
         for r in range(1, n):
             sender = (me - r) % n
+            if self.membership is not None \
+                    and not self.membership.is_live(sender):
+                # a known-dead sender costs nothing: no deadline burned,
+                # its mask row stays zero (the compensated mean excludes
+                # it) and its sender_last_t stays NaN (unobserved — the
+                # straggler detector must not score a corpse)
+                report.rounds.append(RoundReport(
+                    time=0.0, timed_out=False, frac_received=1.0))
+                report.skipped_senders += (sender,)
+                continue
             deadline = self.round_deadline()
             reas, last_t, eff = self._recv_stream(kind, step, bucket, r,
                                                   sender, n_elems, dtype,
@@ -289,16 +321,21 @@ class HostPeer:
         me, n = self.rank, self.n
         for r in range(1, n):
             dst = (me + r) % n
+            if self.membership is not None \
+                    and not self.membership.is_live(dst):
+                continue                  # no socket to reach a dead rank
             row = shards[dst] if shards.ndim == 2 else shards
             for dgram in packetize(np.ascontiguousarray(row), kind=kind,
                                    sender=me, step=step, bucket=bucket,
                                    round=r, packet_elems=self.packet_elems):
                 self.backend.send(me, dst, dgram)
 
-    def phase1_encode(self, x: np.ndarray, key, step: int,
-                      bucket: int) -> None:
+    def phase1_encode(self, x: np.ndarray, key, step: int, bucket: int,
+                      stale: np.ndarray | None = None) -> None:
         """Encode the bucket; for quantizing codecs, advertise the local
-        per-block amax on the control channel."""
+        per-block amax on the control channel.  ``stale`` is the previous
+        step's decoded bucket for StaleFill recovery codecs (ignored — and
+        unreachable — for quantized codecs: ``wrap_codec`` rejects them)."""
         self._store.clear()
         xj = jnp.asarray(x)
         if isinstance(self.codec, HTQuant):
@@ -308,13 +345,17 @@ class HostPeer:
                                    step=step, bucket=bucket, round=0,
                                    packet_elems=max(1, amax_np.shape[0])):
                 for dst in range(self.n):
-                    if dst != self.rank:
-                        self.backend.send(self.rank, dst, dgram)
+                    if dst == self.rank or (self.membership is not None and
+                                            not self.membership.is_live(dst)):
+                        continue
+                    self.backend.send(self.rank, dst, dgram)
             self._held = {"x1": x1, "amax": amax_np, "key": key,
-                          "length": x.shape[-1]}
+                          "stale_w": None, "length": x.shape[-1]}
         else:
-            data = np.asarray(self._enc(xj, key))
-            self._held = {"wire1": data, "lo": None, "step": None, "key": key,
+            stale_j = None if stale is None else jnp.asarray(stale)
+            data, stale_w = self._enc(xj, key, stale_j)
+            self._held = {"wire1": np.asarray(data), "lo": None, "step": None,
+                          "stale_w": stale_w, "key": key,
                           "length": x.shape[-1]}
 
     def phase2_send_stage1(self, step: int, bucket: int) -> None:
@@ -326,7 +367,8 @@ class HostPeer:
             nblk = shared.shape[0]
             deadline = self.round_deadline()
             for p in range(self.n):
-                if p == self.rank:
+                if p == self.rank or (self.membership is not None and
+                                      not self.membership.is_live(p)):
                     continue
                 reas, _, _ = self._recv_stream(KIND_CTRL, step, bucket, 0, p,
                                                nblk, np.float32, deadline,
@@ -350,13 +392,19 @@ class HostPeer:
                                             h["wire1"].dtype)
         received, mask = self._assemble(streams, h["shards"][self.rank], s,
                                         h["wire1"].dtype)
-        report.dropped = float(np.sum(1.0 - mask))
-        report.total = float(mask.size)
+        # skipped (known-dead) senders' all-zero rows are planned
+        # degradation, not packet loss: exclude them from both counters so
+        # loss_frac keeps driving the Hadamard/incast controllers correctly
+        skipped = len(report.skipped_senders)
+        report.dropped = float(np.sum(1.0 - mask)) - skipped * s
+        report.total = float(mask.size) - skipped * s
         wire2 = np.asarray(self._red(
             jnp.asarray(received), jnp.asarray(mask),
-            jnp.asarray(self.rank, jnp.int32), h["lo"], h["step"], h["key"]))
+            jnp.asarray(self.rank, jnp.int32), h["lo"], h["step"],
+            h["stale_w"], h["key"]))
         h["wire2"], h["mask1"] = wire2, mask
-        self._send_shards(wire2, KIND_DATA2, step, bucket)
+        self.last_mask1 = mask            # observed arrival mask, kept for
+        self._send_shards(wire2, KIND_DATA2, step, bucket)  # EF accounting
         return report
 
     def phase4_decode(self, step: int, bucket: int
@@ -371,8 +419,10 @@ class HostPeer:
                                             h["wire2"].dtype)
         gathered, mask2 = self._assemble(streams, h["wire2"], s2,
                                          h["wire2"].dtype)
-        report.stage2_dropped = float(np.sum(1.0 - mask2))
-        report.stage2_total = float(mask2.size)
+        skipped = len(report.skipped_senders)
+        report.stage2_dropped = float(np.sum(1.0 - mask2)) - skipped * s2
+        report.stage2_total = float(mask2.size) - skipped * s2
+        self.last_mask2 = mask2
         out = np.asarray(self._dec(jnp.asarray(gathered.reshape(-1)),
                                    h["lo"], h["step"], h["key"]))
         out = out[:h["length"]]
@@ -396,8 +446,9 @@ class HostPeer:
         streams, report = self._recv_rounds(KIND_DATA1, step, bucket, s,
                                             shards.dtype)
         _, mask = self._assemble(streams, shards[me], s, shards.dtype)
-        report.dropped = float(np.sum(1.0 - mask))
-        report.total = float(mask.size)
+        skipped = len(report.skipped_senders)
+        report.dropped = float(np.sum(1.0 - mask)) - skipped * s
+        report.total = float(mask.size) - skipped * s
         return mask, report
 
     def bridge_send(self, shards: np.ndarray, step: int, bucket: int) -> None:

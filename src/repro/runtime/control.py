@@ -42,6 +42,11 @@ class SyncPolicy:
     incast: int = 1
     active_peers: tuple[int, ...] | None = None     # None = full set
     timeout_x: float = dataclasses.field(default=0.10, compare=False)
+    # membership generation this policy was computed under (rendezvous-fed;
+    # 0 = no rendezvous).  Stamped so a launcher can order policies against
+    # membership snapshots; excluded from equality/hash — the generation
+    # number itself never changes the compiled program
+    generation: int = dataclasses.field(default=0, compare=False)
 
     @property
     def compile_key(self) -> Hashable:
@@ -65,6 +70,7 @@ class ControlPlane:
         self.detector = detector
         self.use_hadamard = use_hadamard
         self.steps = 0                      # observed (post-warmup) steps
+        self.generation = 0                 # latest membership generation
 
     @classmethod
     def create(cls, n_nodes: int, *, use_hadamard: bool = False,
@@ -120,6 +126,26 @@ class ControlPlane:
         self.steps += 1
         return self.policy() != before
 
+    def apply_membership(self, kind: str, rank: int,
+                         generation: int | None = None) -> bool:
+        """Fold one rendezvous membership event into the detector's
+        lifecycle (DESIGN §9): ``"leave"``/``"death"`` force-eject the rank
+        (a dead peer is degradation already decided, not a score to argue
+        with); ``"join"`` readmits it through PROBATION.  Takes primitives
+        — not a rendezvous event type — so ``runtime`` stays import-free of
+        ``net`` (net already imports runtime).  Returns True if the active
+        set changed."""
+        if generation is not None:
+            self.generation = max(self.generation, int(generation))
+        if not 0 <= rank < self.detector.n_peers:
+            return False
+        if kind == "join":
+            return self.detector.readmit(rank)
+        if kind in ("leave", "death"):
+            return self.detector.force_eject(rank)
+        raise ValueError(f"unknown membership event kind {kind!r} "
+                         "(join | leave | death)")
+
     def policy(self) -> SyncPolicy:
         active = self.detector.active_peers()
         n = self.detector.n_peers
@@ -130,7 +156,8 @@ class ControlPlane:
             # only a-1 distinct peers to fan in from
             incast=max(1, min(self.state.incast.value, max(1, a - 1))),
             active_peers=None if len(active) == n else active,
-            timeout_x=self.state.timeout.x)
+            timeout_x=self.state.timeout.x,
+            generation=self.generation)
 
     def apply(self, cfg):
         """Fold the current policy into a sync config."""

@@ -43,6 +43,9 @@ class PeerState:
     clean: int = 0          # consecutive under-threshold steps in PROBATION
     countdown: int = 0      # steps remaining in the EJECTED cooldown
     ejections: int = 0      # lifetime ejection count (telemetry/reporting)
+    held: bool = False      # membership-ejected (crashed/left): the cooldown
+    #                         never auto-promotes it to PROBATION — only an
+    #                         explicit readmit() (a rendezvous rejoin) does
 
 
 class StragglerDetector:
@@ -111,6 +114,8 @@ class StragglerDetector:
         self._score(peer_times)
         for peer in self.peers:
             if peer.status == EJECTED:
+                if peer.held:
+                    continue            # a corpse never cools back in
                 peer.countdown -= 1
                 if peer.countdown <= 0:
                     peer.status = PROBATION
@@ -140,6 +145,43 @@ class StragglerDetector:
                 else:
                     peer.strikes = 0
         return self.active_peers() != before
+
+    # -------------------------------------------- membership-driven events
+    def force_eject(self, peer_index: int) -> bool:
+        """Rendezvous-driven ejection (crash / leave): immediate, bypasses
+        both ``patience`` and the ``min_active`` floor — a dead peer cannot
+        participate regardless of what the schedule would prefer — and is
+        *held* out of the cooldown -> PROBATION path until an explicit
+        :meth:`readmit` (its rejoin).  Returns True if the status moved."""
+        p = self.peers[peer_index]
+        changed = p.status != EJECTED
+        if changed:
+            p.ejections += 1
+        p.status = EJECTED
+        p.held = True
+        p.strikes = 0
+        p.clean = 0
+        p.countdown = 0
+        return changed
+
+    def readmit(self, peer_index: int) -> bool:
+        """Rendezvous-driven probationary readmission (a peer re-joined).
+
+        EJECTED -> PROBATION with a *fresh* score: a restarted process does
+        not inherit its corpse's EWMA (the crash step charged the corpse
+        the full deadline, and one PROBATION strike would re-eject it on
+        arrival).  No-op unless currently EJECTED.  Returns True if moved.
+        """
+        p = self.peers[peer_index]
+        if p.status != EJECTED:
+            return False
+        p.status = PROBATION
+        p.held = False
+        p.score = 1.0
+        p.strikes = 0
+        p.clean = 0
+        p.countdown = 0
+        return True
 
     def _can_eject(self) -> bool:
         return len(self.active_peers()) - 1 >= self.min_active

@@ -43,7 +43,12 @@ def test_bench_transport_quick_schema(tmp_path):
                 "transport/loss_sweep_rate_0_observed",
                 "transport/loss_sweep_rate_0.01_observed",
                 "transport/loss_sweep_rate_0.05_observed",
-                "transport/reassembly_64KB_median_ms"):
+                "transport/reassembly_64KB_median_ms",
+                "transport/inproc_scale_16p_median_ms",
+                "transport/inproc_scale_32p_median_ms",
+                "transport/inproc_scale_64p_median_ms",
+                "transport/udp_scale_16p_median_ms",
+                "transport/udp_scale_32p_median_ms"):
         assert key in keys, key
     # every median row carries its dispersion sibling (run.py schema)
     for key in keys:

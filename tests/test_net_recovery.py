@@ -1,0 +1,260 @@
+"""StaleFill / error-feedback recovery over the real wire (DESIGN §8 on
+the §9 transport).
+
+The core recovery suite proves the mechanisms against *synthetic* masks (a
+pure function of the step key); here the masks are whatever the receivers
+actually observed on the wire — injected loss AND reordering — and the
+same exactness laws must hold against ``HostPeer.last_mask1``:
+
+  * StaleFill conservation:   mean_i(x_i) == out + mean_i((1-m_i)(x_i - stale))
+  * EF ledger (telescoped):   sum_t mean_i(x_i^t) == sum_t out^t + mean_i(r_i^T)
+
+Loss is injected on stage-1 DATA only (stage 2 stays lossless) so every
+rank decodes the identical aggregate and the conservation ledger closes
+exactly.  UDP cases add ``scramble_seed`` reordering on top of the drops —
+reassembly must be order-free for the laws to survive (auto-skip when the
+sandbox forbids sockets).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.allreduce import OptiReduceConfig
+from repro.core.hadamard import ht_decode, ht_encode
+from repro.core.pipeline import resolve_spec
+from repro.core.recovery import StaleFill
+from repro.net import HostRing, bernoulli_drops, udp_available
+from repro.net.wire import KIND_DATA1
+
+pytestmark = pytest.mark.net
+
+needs_udp = pytest.mark.skipif(not udp_available(),
+                               reason="sandbox forbids UDP sockets")
+
+N = 4
+ELEMS = 4096          # = N * 1024: no TAR padding, shard spans align
+
+
+def _cfg(**kw):
+    base = dict(strategy="optireduce", use_hadamard=False, drop_rate=0.0,
+                packet_elems=256, recovery="stale")
+    base.update(kw)
+    return OptiReduceConfig(**base)
+
+
+def _data1_drops(rate, seed):
+    """Bernoulli loss on stage-1 DATA only — CTRL and stage-2 stay clean,
+    so all ranks decode identical bytes and the ledger closes exactly."""
+    base = bernoulli_drops(rate, seed=seed)
+
+    def drop(src, dst, hdr):
+        return hdr.kind == KIND_DATA1 and base(src, dst, hdr)
+    return drop
+
+
+def _data(step, elems=ELEMS, seed=0):
+    return np.random.default_rng(seed + step).standard_normal(
+        (N, elems)).astype(np.float32)
+
+
+def _key(step, seed=0):
+    return jax.random.fold_in(jax.random.PRNGKey(seed), step)
+
+
+def _element_mask(ring, elems):
+    """(N_sender, elems) element-wise stage-1 arrival matrix: column span
+    ``[p*s, (p+1)*s)`` of sender ``i``'s row is receiver p's observed
+    ``last_mask1[i]`` (receiver p owns shard p)."""
+    s = elems // N
+    cols = [np.asarray(ring.peers[p].last_mask1) for p in range(N)]
+    assert all(c.shape == (N, s) for c in cols)
+    return np.concatenate(cols, axis=1)
+
+
+def _assert_stage2_clean(ring):
+    for p in range(N):
+        m2 = ring.peers[p].last_mask2
+        assert m2 is None or np.all(np.asarray(m2) == 1.0)
+
+
+def _run_stalefill(ring, steps, elems=ELEMS):
+    """Thread ``stale`` = previous step's decoded bucket (step 0: zeros —
+    exactly zero-fill) and record (data, stale, out, element_mask)."""
+    stale = np.zeros(elems, np.float32)
+    recs = []
+    for step in range(steps):
+        data = _data(step, elems)
+        out, _ = ring.allreduce(data, _key(step), step=step, bucket=0,
+                                stale=stale)
+        _assert_stage2_clean(ring)
+        for p in range(1, N):           # lossless stage 2: one truth
+            np.testing.assert_array_equal(out[0], out[p])
+        recs.append((data, stale, np.asarray(out[0]),
+                     _element_mask(ring, elems)))
+        stale = np.asarray(out[0])
+    return recs
+
+
+# ------------------------------------------------- conservation (identity)
+def test_stalefill_conserves_mass_inproc():
+    """Identity codec: wire == value space, so the law is elementwise —
+    what the fill did NOT recover is exactly the masked gap to the stale
+    prediction, reconstructed from the receivers' observed masks."""
+    ring = HostRing(N, _cfg(), backend="inproc",
+                    drop_fn=_data1_drops(0.15, seed=7))
+    recs = _run_stalefill(ring, steps=3)
+    saw_loss = False
+    for data, stale, out, mask in recs:
+        saw_loss |= bool(np.any(mask == 0.0))
+        gap = ((1.0 - mask) * (data - stale[None, :])).mean(axis=0)
+        np.testing.assert_allclose(data.mean(axis=0), out + gap,
+                                   rtol=1e-5, atol=1e-5)
+    assert saw_loss, "drop injection never fired — the law was vacuous"
+
+
+def test_stalefill_differs_from_compensated_mean_once_cache_is_warm():
+    """Same wire, recovery on vs off: step 0 (zero cache) the fill IS
+    zero-fill-with-plain-mean, but once the cache holds step 0's decoded
+    bucket the prediction pulls lost spans toward it — outputs diverge."""
+    drop = _data1_drops(0.15, seed=7)
+    ring_fill = HostRing(N, _cfg(), backend="inproc", drop_fn=drop)
+    ring_none = HostRing(N, _cfg(recovery="none"), backend="inproc",
+                         drop_fn=drop)
+    recs = _run_stalefill(ring_fill, steps=2)
+    outs_none = []
+    for step in range(2):
+        out, _ = ring_none.allreduce(_data(step), _key(step), step=step,
+                                     bucket=0)
+        outs_none.append(np.asarray(out[0]))
+    # warm-cache step must differ (the prediction carries real mass)
+    assert not np.allclose(recs[1][2], outs_none[1], atol=1e-6)
+
+
+def test_stalefill_hadamard_conserves_mass_in_wire_space():
+    """Hadamard codec: masks live in *rotated* space, so the conservation
+    law decodes the masked wire gap — exact only because HT is linear and
+    the stale cache is re-encoded under the same per-step key."""
+    cfg = _cfg(use_hadamard=True, hadamard_block=256)
+    ring = HostRing(N, cfg, backend="inproc",
+                    drop_fn=_data1_drops(0.15, seed=11))
+    recs = _run_stalefill(ring, steps=2)
+    for step, (data, stale, out, mask) in enumerate(recs):
+        key = _key(step)
+        w = np.stack([np.asarray(ht_encode(data[i], key, block=256))
+                      for i in range(N)])
+        w_stale = np.asarray(ht_encode(stale, key, block=256))
+        gap_wire = ((1.0 - mask) * (w - w_stale[None, :])).mean(axis=0)
+        gap = np.asarray(ht_decode(gap_wire, key, block=256))
+        np.testing.assert_allclose(data.mean(axis=0), out + gap,
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------- EF exactly-once
+def test_ef_ledger_closes_exactly_once_inproc():
+    """Error feedback over the real wire: each rank carries the residual
+    its receivers' observed masks say went undelivered (minus what the
+    stale fill applied in its stead) into the next step's contribution.
+    Telescoping the per-step law gives the exactly-once ledger:
+
+        sum_t mean_i(x_i^t) == sum_t out^t + mean_i(r_i^T)
+
+    — every unit of gradient mass is applied once: now, or (discounted by
+    the fill) later, or it is still on the books in the final residual.
+    """
+    steps = 4
+    ring = HostRing(N, _cfg(recovery="ef"), backend="inproc",
+                    drop_fn=_data1_drops(0.2, seed=5))
+    stale = np.zeros(ELEMS, np.float32)
+    resid = np.zeros((N, ELEMS), np.float32)
+    sum_true = np.zeros(ELEMS, np.float64)
+    sum_out = np.zeros(ELEMS, np.float64)
+    resid_was_nonzero = False
+    for step in range(steps):
+        data = _data(step)
+        contrib = data + resid
+        out, _ = ring.allreduce(contrib, _key(step), step=step, bucket=0,
+                                stale=stale)
+        _assert_stage2_clean(ring)
+        out0 = np.asarray(out[0])
+        mask = _element_mask(ring, ELEMS)
+        # sender-side residual from the *observed* masks: what I owed,
+        # minus the prediction the receivers already applied for me
+        resid = ((1.0 - mask) * (contrib - stale[None, :])).astype(
+            np.float32)
+        resid_was_nonzero |= bool(np.any(resid != 0.0))
+        sum_true += data.mean(axis=0)
+        sum_out += out0
+        stale = out0
+    np.testing.assert_allclose(sum_true, sum_out + resid.mean(axis=0),
+                               rtol=1e-4, atol=1e-4)
+    assert resid_was_nonzero, "no mass was ever deferred — vacuous ledger"
+
+
+# ------------------------------------------------------------ UDP + reorder
+@needs_udp
+def test_stalefill_conserves_mass_over_udp_with_reordering():
+    """The same conservation law over real datagrams with loss AND
+    scrambled send order — reassembly must be order-free for the observed
+    masks to still account for exactly the missing mass.  The generous
+    deadline keeps wall-clock expiry out of the masks (scripted loss
+    only)."""
+    elems = 2048
+    ring = HostRing(N, _cfg(packet_elems=128), backend="udp",
+                    drop_fn=_data1_drops(0.15, seed=13),
+                    scramble_seed=11, default_deadline=2.0)
+    recs = _run_stalefill(ring, steps=2, elems=elems)
+    saw_loss = False
+    for data, stale, out, mask in recs:
+        saw_loss |= bool(np.any(mask == 0.0))
+        gap = ((1.0 - mask) * (data - stale[None, :])).mean(axis=0)
+        np.testing.assert_allclose(data.mean(axis=0), out + gap,
+                                   rtol=1e-5, atol=1e-5)
+    assert saw_loss
+
+
+@needs_udp
+def test_udp_reordering_is_invariant_under_loss():
+    """Drops are header-pure and reassembly is positional: two runs
+    differing only in the scramble permutation (and one with none) must
+    produce bitwise identical results."""
+    elems, step = 2048, 0
+    outs = []
+    for scramble in (None, 1, 97):
+        ring = HostRing(N, _cfg(packet_elems=128), backend="udp",
+                        drop_fn=_data1_drops(0.15, seed=13),
+                        scramble_seed=scramble, default_deadline=2.0)
+        out, _ = ring.allreduce(_data(step, elems), _key(step), step=step,
+                                bucket=0, stale=np.zeros(elems, np.float32))
+        outs.append(np.asarray(out))
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+# ---------------------------------------------------------- composability
+def test_recovery_composability_guards():
+    """The registry rejects the combinations the math cannot serve, and
+    ``recovery="none"`` resolves to the unwrapped (seed) codec."""
+    with pytest.raises(ValueError, match="linear"):
+        resolve_spec(OptiReduceConfig(strategy="optireduce_q",
+                                      recovery="stale"))
+    with pytest.raises(ValueError, match="active_peers|degraded"):
+        resolve_spec(OptiReduceConfig(strategy="optireduce", recovery="ef",
+                                      active_peers=(0, 1, 2)))
+    assert isinstance(resolve_spec(_cfg()).codec, StaleFill)
+    assert not isinstance(resolve_spec(_cfg(recovery="none")).codec,
+                          StaleFill)
+
+
+def test_stale_none_collapses_to_compensated_mean():
+    """With the wrapper armed but no cache offered (``stale=None``) the
+    reduce must fall back bitwise to the compensated masked mean — the
+    collapse-when-disabled property, on the wire path."""
+    drop = _data1_drops(0.15, seed=7)
+    out_fill, _ = HostRing(N, _cfg(), backend="inproc",
+                           drop_fn=drop).allreduce(
+        _data(0), _key(0), step=0, bucket=0, stale=None)
+    out_none, _ = HostRing(N, _cfg(recovery="none"), backend="inproc",
+                           drop_fn=drop).allreduce(
+        _data(0), _key(0), step=0, bucket=0)
+    np.testing.assert_array_equal(np.asarray(out_fill),
+                                  np.asarray(out_none))

@@ -1,0 +1,348 @@
+"""Property + loop tests for the socket rendezvous (repro/net/rendezvous.py).
+
+Mirrors the wire.py test discipline: the message codec must roundtrip and
+be invariant to stream chunking; client view state must be invariant to
+duplicate / out-of-order UPDATE delivery; the pure state machine must keep
+its generation strictly monotonic under arbitrary join/leave interleavings
+and release a barrier tag exactly when every required live member arrived.
+The TCP and in-memory shells are exercised end-to-end (join -> barriers ->
+leave/death -> degraded release).
+"""
+import socket
+import threading
+import time
+
+import pytest
+
+try:
+    from hypothesis import given, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, strategies as st
+
+from repro.net import (PHASES_PER_STEP, FrameBuffer, LocalCoordinator,
+                       Member, Membership, RendezvousClient, RendezvousError,
+                       RendezvousFull, RendezvousMessage, RendezvousServer,
+                       RendezvousState, tcp_available)
+from repro.net.rendezvous import (MSG_BARRIER, MSG_HEADER_BYTES, MSG_JOIN,
+                                  MSG_RELEASE, MSG_UPDATE, MSG_WELCOME,
+                                  _ClientCore, decode_join, encode_join)
+
+pytestmark = pytest.mark.net
+
+needs_tcp = pytest.mark.skipif(not tcp_available(),
+                               reason="sandbox forbids TCP sockets")
+
+
+# ---------------------------------------------------------- message codec
+@given(st.sampled_from([MSG_JOIN, MSG_WELCOME, MSG_UPDATE, MSG_BARRIER,
+                        MSG_RELEASE]),
+       st.integers(-1, 32767), st.integers(0, 65535),
+       st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+def test_message_roundtrip(kind, rank, world, generation, seq):
+    msg = RendezvousMessage(kind=kind, rank=rank, world=world,
+                            generation=generation, seq=seq,
+                            payload=b"\x00\x01payload\xff")
+    blob = msg.encode()
+    back, used = RendezvousMessage.decode(blob + b"trailing")
+    assert back == msg
+    assert used == len(blob)
+    assert len(blob) == MSG_HEADER_BYTES + len(msg.payload)
+
+
+def test_message_rejects_garbage():
+    msg = RendezvousMessage(kind=MSG_BARRIER, seq=7)
+    blob = msg.encode()
+    with pytest.raises(RendezvousError):
+        RendezvousMessage.decode(bytes([99]) + blob[1:])     # bad version
+    with pytest.raises(RendezvousError):
+        RendezvousMessage.decode(blob[:1] + bytes([77]) + blob[2:])
+    assert RendezvousMessage.decode(blob[:MSG_HEADER_BYTES - 1]) is None
+    with pytest.raises(RendezvousError):
+        RendezvousMessage(kind=MSG_UPDATE,
+                          payload=b"x" * 0x10000).encode()   # length field
+
+
+@given(st.integers(1, 64), st.integers(0, 6))
+def test_framebuffer_chunk_invariance(chunk, seed):
+    """Feeding a message stream in arbitrary chunk sizes yields exactly the
+    same message sequence (TCP delivers bytes, not datagrams)."""
+    msgs = [RendezvousMessage(kind=MSG_BARRIER, rank=r, seq=seed * 10 + r,
+                              payload=b"p" * (r * 3))
+            for r in range(5)]
+    stream = b"".join(m.encode() for m in msgs)
+    fb = FrameBuffer()
+    got = []
+    for i in range(0, len(stream), chunk):
+        got.extend(fb.feed(stream[i:i + chunk]))
+    assert got == msgs
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 64))
+def test_membership_blob_roundtrip(generation, world):
+    mem = Membership(
+        generation=generation, world_size=world,
+        members=tuple(Member(rank=r, uid=r * 7 + 1, host="127.0.0.1",
+                             port=40000 + r, since=r * PHASES_PER_STEP)
+                      for r in range(min(world, 5))))
+    assert Membership.decode(mem.encode()) == mem
+
+
+def test_join_payload_roundtrip():
+    assert decode_join(encode_join(42, "10.0.0.3", 9999)) == \
+        (42, "10.0.0.3", 9999)
+    with pytest.raises(RendezvousError):
+        decode_join(b"\x00")
+
+
+# ------------------------------------------------------- client view state
+def test_client_core_update_invariance():
+    """Duplicate and out-of-order UPDATEs never roll the snapshot back:
+    only a strictly newer generation moves it; events always append."""
+    core = _ClientCore()
+    m1 = Membership(generation=1, world_size=2,
+                    members=(Member(rank=0, uid=1), Member(rank=1, uid=2)))
+    m3 = Membership(generation=3, world_size=2,
+                    members=(Member(rank=0, uid=1),))
+    core.apply(m3, ("death", 1, 3))
+    core.apply(m1, ("join", 1, 1))              # stale: arrives late
+    assert core.membership == m3
+    core.apply(m3, ("death", 1, 3))             # duplicate delivery
+    assert core.membership == m3
+    assert list(core.events) == [("death", 1, 3), ("join", 1, 1),
+                                 ("death", 1, 3)]
+
+
+# ------------------------------------------------------ pure state machine
+def _ops_from_seed(seed, world, n_ops):
+    """Deterministic join/leave/death op tape for the interleaving test."""
+    h = seed
+    ops = []
+    for i in range(n_ops):
+        h = (h * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+        ops.append(("join", "leave", "dead")[h % 3])
+    return ops
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 5), st.integers(4, 24))
+def test_generation_monotone_under_interleavings(seed, world, n_ops):
+    """Every successful membership mutation bumps the generation by exactly
+    one; rank slots stay unique and inside the world; a failed op leaves
+    the generation untouched."""
+    st_ = RendezvousState(world)
+    uid = 0
+    for op in _ops_from_seed(seed, world, n_ops):
+        gen = st_.generation
+        live = st_.live_ranks()
+        if op == "join":
+            try:
+                rank, since = st_.join(uid, "h", 1000 + uid, now=0.0)
+                uid += 1
+                assert rank not in live and 0 <= rank < world
+                assert since % PHASES_PER_STEP == 0
+                assert st_.generation == gen + 1
+            except RendezvousFull:
+                assert len(live) == world and st_.generation == gen
+        else:
+            target = live[0] if live else 0
+            removed = (st_.leave(target) if op == "leave"
+                       else st_.dead(target))
+            assert removed == (target in live)
+            assert st_.generation == gen + (1 if removed else 0)
+        ranks = st_.live_ranks()
+        assert len(set(ranks)) == len(ranks)
+        assert all(0 <= r < world for r in ranks)
+
+
+def test_initial_cohort_since_zero_rejoiner_next_boundary():
+    st_ = RendezvousState(2)
+    _, since0 = st_.join(10, "h", 1, now=0.0)
+    _, since1 = st_.join(11, "h", 2, now=0.0)
+    assert since0 == since1 == 0 and st_.started
+    for tag in range(6):                     # run into step 1, phase 1
+        st_.barrier_arrive(0, tag)
+        st_.barrier_arrive(1, tag)
+    assert st_.latest_step() == 1
+    assert st_.leave(0)
+    rank, since = st_.join(12, "h", 3, now=0.0)
+    assert rank == 0
+    assert since == 2 * PHASES_PER_STEP      # next step boundary: tag 8
+
+
+def test_release_requires_every_required_member():
+    st_ = RendezvousState(2)
+    st_.join(1, "h", 1, now=0.0)
+    st_.barrier_arrive(0, 0)
+    assert st_.release_ready() == {}         # not started: world incomplete
+    st_.join(2, "h", 2, now=0.0)
+    assert st_.release_ready() == {}         # started, but rank 1 not there
+    st_.barrier_arrive(1, 0)
+    assert st_.release_ready() == {0: (0, 1)}
+    assert st_.release_ready() == {}         # released tags retire
+
+
+def test_death_releases_held_fence_degraded():
+    st_ = RendezvousState(2)
+    st_.join(1, "h", 1, now=0.0)
+    st_.join(2, "h", 2, now=0.0)
+    st_.barrier_arrive(0, 4)
+    assert st_.release_ready() == {}
+    assert st_.dead(1)                       # the awaited peer crashes
+    assert st_.release_ready() == {4: (0,)}  # survivors proceed degraded
+
+
+def test_rejoiner_not_required_at_inflight_fences():
+    st_ = RendezvousState(2)
+    st_.join(1, "h", 1, now=0.0)
+    st_.join(2, "h", 2, now=0.0)
+    for tag in range(5):
+        st_.barrier_arrive(0, tag)
+        st_.barrier_arrive(1, tag)
+        st_.release_ready()
+    st_.dead(1)
+    st_.join(3, "h", 3, now=0.0)             # rejoiner: since = tag 8
+    st_.barrier_arrive(0, 5)
+    assert st_.release_ready() == {5: (0,)}  # tag 5 predates its since
+    st_.barrier_arrive(0, 8)
+    assert st_.release_ready() == {}         # tag 8 requires the rejoiner
+    st_.barrier_arrive(1, 8)
+    assert st_.release_ready() == {8: (0, 1)}
+
+
+def test_heartbeat_expiry_is_death():
+    st_ = RendezvousState(2, heartbeat_timeout=1.0)
+    st_.join(1, "h", 1, now=0.0)
+    st_.join(2, "h", 2, now=0.0)
+    st_.heartbeat(0, 5.0)
+    assert st_.expire(5.5) == [1]
+    assert st_.live_ranks() == (0,)
+
+
+# ------------------------------------------------------- in-memory shell
+def test_local_loop_join_barrier_events():
+    coord = LocalCoordinator(3)
+    clients = [coord.client(u) for u in range(3)]
+    ranks = sorted(c.join()[0] for c in clients)
+    assert ranks == [0, 1, 2]
+    done = []
+
+    def run(c):
+        for tag in range(4):
+            c.barrier(tag)
+        done.append(c.rank)
+
+    ts = [threading.Thread(target=run, args=(c,)) for c in clients]
+    for t in ts: t.start()
+    for t in ts: t.join()
+    assert sorted(done) == [0, 1, 2]
+    gen = clients[0].generation
+    clients[2].crash()
+    assert clients[0].generation == gen + 1
+    assert ("death", clients[2].rank, gen + 1) in clients[0].events()
+    assert not clients[0].is_live(clients[2].rank)
+
+
+def test_local_crash_releases_waiters():
+    coord = LocalCoordinator(2)
+    a, b = coord.client(0), coord.client(1)
+    a.join(); b.join()
+    released = []
+
+    def wait():
+        a.barrier(0, timeout=10.0)
+        released.append(True)
+
+    t = threading.Thread(target=wait)
+    t.start()
+    time.sleep(0.05)
+    b.crash()                                # the awaited peer dies
+    t.join(timeout=10.0)
+    assert released == [True]
+
+
+# ------------------------------------------------------------- TCP shell
+@needs_tcp
+def test_tcp_loop_join_barrier_leave():
+    server = RendezvousServer(2)
+    try:
+        a = RendezvousClient(server.addr, uid=1, peer_port=5001)
+        b = RendezvousClient(server.addr, uid=2, peer_port=5002)
+        ra, mem_a, start_a = a.join()
+        rb, _, _ = b.join()
+        assert sorted((ra, rb)) == [0, 1] and start_a == 0
+        assert a.addr_of(rb)[1] == 5002      # b's advertised datagram port
+        assert b.addr_of(ra)[1] == 5001
+        done = []
+
+        def run(c):
+            for tag in range(4):
+                c.barrier(tag, timeout=30.0)
+            done.append(c.rank)
+
+        ts = [threading.Thread(target=run, args=(c,)) for c in (a, b)]
+        for t in ts: t.start()
+        for t in ts: t.join()
+        assert sorted(done) == [0, 1]
+        b.leave()
+        deadline = time.monotonic() + 10.0
+        evs = []
+        while time.monotonic() < deadline and not evs:
+            evs = [e for e in a.events() if e[0] == "leave"]
+            time.sleep(0.01)
+        assert evs and evs[0][1] == rb
+        assert not a.is_live(rb)
+        a.leave()
+    finally:
+        server.close()
+
+
+@needs_tcp
+def test_tcp_eof_death_releases_survivor():
+    server = RendezvousServer(2)
+    try:
+        a = RendezvousClient(server.addr, uid=1)
+        b = RendezvousClient(server.addr, uid=2)
+        a.join(); b.join()
+        released = []
+
+        def wait():
+            a.barrier(0, timeout=30.0)
+            released.append(True)
+
+        t = threading.Thread(target=wait)
+        t.start()
+        time.sleep(0.1)
+        b._closed = True
+        b._sock.close()                      # SIGKILL stand-in: raw EOF
+        t.join(timeout=30.0)
+        assert released == [True]
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline and a.is_live(b.rank):
+            time.sleep(0.01)
+        assert not a.is_live(b.rank)
+        a.leave()
+    finally:
+        server.close()
+
+
+@needs_tcp
+def test_tcp_rejoin_gets_freed_slot_and_future_since():
+    server = RendezvousServer(2)
+    try:
+        a = RendezvousClient(server.addr, uid=1)
+        b = RendezvousClient(server.addr, uid=2)
+        a.join(); b.join()
+        for tag in range(2):                 # both at step 0
+            ta = threading.Thread(target=a.barrier, args=(tag,))
+            ta.start()
+            b.barrier(tag, timeout=30.0)
+            ta.join(timeout=30.0)
+        rb = b.rank
+        b.leave()
+        c = RendezvousClient(server.addr, uid=3)
+        rc, _, start_step = c.join()
+        assert rc == rb                      # lowest freed slot reused
+        assert start_step == 1               # next step boundary
+        c.leave()
+        a.leave()
+    finally:
+        server.close()
