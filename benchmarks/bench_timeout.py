@@ -95,6 +95,33 @@ def _run_straggler(eject: bool, steps: int, *, factor: float = 6.0,
     return np.asarray(times), np.asarray(drops), control
 
 
+def _run_rebalance(mode: str, steps: int, *, factor: float = 6.0,
+                   seed: int = 7):
+    """Three-arm straggler ablation at equal environment: ``wait`` (no
+    detector, every round waits), ``eject`` (degraded participation — the
+    straggler's gradient share is zero), ``rebalance`` (straggler-
+    proportional shard weights — the slow peer keeps a smaller contiguous
+    slice, so its contribution survives).  The straggler sits mid-ring
+    (peer 3) and the schedule runs at incast 4, where ejection and
+    rebalancing execute the same number of gated rounds."""
+    env = NetworkModel(p99_over_p50=1.5, stall_prob=0.01, seed=seed)
+    n = 8
+    env.peer_factors = (1.0,) * 3 + (float(factor),) + (1.0,) * (n - 4)
+    sim = GASimulator(env, n)
+    nbytes = 25 * 2 ** 20
+    control = ControlPlane.create(
+        n_nodes=n, detect_stragglers=(mode == "eject"),
+        rebalance=(mode == "rebalance"))
+    sim.warmup(nbytes, control=control)
+    times, contribs = [], []
+    for _ in range(steps):
+        r = sim.optireduce(nbytes, control, fixed_incast=4)
+        times.append(r.time_ms)
+        if r.peer_contrib is not None:
+            contribs.append(r.peer_contrib[3])
+    return np.asarray(times), contribs, control
+
+
 def run(quick: bool = True) -> Rows:
     rows = Rows()
     steps = 100 if quick else 400
@@ -127,6 +154,35 @@ def run(quick: bool = True) -> Rows:
              "median step-time saved by degrading participation")
     rows.add("timeout/ejection_drop_frac", float(np.mean(d_ej)),
              "transport loss among active peers stays bounded")
+
+    # ---- rebalance vs eject vs wait (straggler-proportional shards) -----
+    # medians over the back half: the weight hysteresis takes a few tens
+    # of steps to settle on the straggler's share, and the comparison is
+    # about the steady state, not the transient
+    t_w, _, _ = _run_rebalance("wait", steps)
+    t_e, _, ctl_e = _run_rebalance("eject", steps)
+    t_r, contrib, ctl_r = _run_rebalance("rebalance", steps)
+    half = len(t_w) // 2
+    tail = float(np.mean(contrib[-max(1, len(contrib) // 2):])) \
+        if contrib else 0.0
+    rows.add("timeout/rebalance_wait_median_ms",
+             float(np.median(t_w[half:])), "1 peer 6x slow; wait-for-all")
+    rows.add("timeout/rebalance_wait_iqr_ms", _iqr(t_w[half:]))
+    rows.add("timeout/rebalance_eject_median_ms",
+             float(np.median(t_e[half:])),
+             f"ejected={list(ctl_e.detector.ejected_peers())}; "
+             "straggler contributes nothing")
+    rows.add("timeout/rebalance_eject_iqr_ms", _iqr(t_e[half:]))
+    rows.add("timeout/rebalance_median_ms", float(np.median(t_r[half:])),
+             f"weights={list(ctl_r.detector.weights())}; "
+             f"ejected={list(ctl_r.detector.ejected_peers())}")
+    rows.add("timeout/rebalance_iqr_ms", _iqr(t_r[half:]))
+    rows.add("timeout/rebalance_vs_eject_pct",
+             100 * (float(np.median(t_r[half:]))
+                    / float(np.median(t_e[half:])) - 1),
+             "acceptance: within +15% of ejection, contribution nonzero")
+    rows.add("timeout/rebalance_contrib_frac", tail,
+             "straggler's surviving gradient share (ejection: 0)")
     return rows
 
 

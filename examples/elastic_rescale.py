@@ -17,6 +17,14 @@ flip, served from the compiled-step cache, no checkpoint surgery.
 Per-phase step times and drop fractions are printed, plus every policy
 transition and the step-cache hit/miss trace (eject -> readmit reuses the
 previously compiled steps; only the first sight of each policy "compiles").
+
+Act two narrates the gentler alternative (DESIGN §10): the same straggler
+under ``rebalance=True`` — instead of ejecting, the detector's EWMA scores
+become shard *weights*, the slow peer's slice of the TAR schedule shrinks
+(it keeps contributing gradient, just over fewer elements), step time
+recovers to near-ejection pace, and when the peer heals its weight floats
+back to uniform — at which point the policy normalizes to the exact
+full-participation trace again.
 """
 import os
 import sys
@@ -111,5 +119,52 @@ def main():
           "after probation, no checkpoint surgery")
 
 
+def rebalance_act():
+    """Act two: the same straggler, rebalanced instead of ejected."""
+    print("\n--- act two: rebalance instead of eject " + "-" * 28)
+    env = NetworkModel.environment("local_1.5", seed=7)
+    sim = GASimulator(env, N)
+    control = ControlPlane.create(n_nodes=N, detect_stragglers=False,
+                                  rebalance=True,
+                                  detector_kw=dict(alpha=0.4))
+    sim.warmup(BUCKET, control=control)
+
+    def phase(name, steps):
+        times, contribs = [], []
+        for _ in range(steps):
+            r = sim.optireduce(BUCKET, control, fixed_incast=4)
+            times.append(r.time_ms)
+            if r.peer_contrib is not None:
+                contribs.append(r.peer_contrib[SLOW_PEER])
+        w = control.detector.weights()
+        med = float(np.median(times))
+        share = float(np.mean(contribs[-10:])) if contribs \
+            else w[SLOW_PEER] / sum(w)
+        print(f"{name:28s} median step {med:7.2f} ms   "
+              f"weights={list(w)}   peer {SLOW_PEER} contrib {share:.3f}")
+        return med, w, share
+
+    healthy, w0, _ = phase("phase 1: healthy", 30)
+    env.peer_factors = tuple(SLOW_FACTOR if p == SLOW_PEER else 1.0
+                             for p in range(N))
+    slowed, w1, share = phase(
+        f"phase 2: peer {SLOW_PEER} {SLOW_FACTOR:.0f}x slow", 50)
+    env.peer_factors = None
+    healed, w2, _ = phase("phase 3: peer healed", 50)
+
+    assert w1[SLOW_PEER] < w1[0], \
+        "the straggler's shard weight never shrank"
+    assert share > 0.0, "rebalanced straggler lost its gradient share"
+    assert slowed < SLOW_FACTOR * healthy, \
+        "rebalancing did not contain the straggler tail"
+    assert len(set(w2)) == 1, \
+        f"healed peer's weight never floated back to uniform: {w2}"
+    print(f"\nrebalance OK: weight {w0[SLOW_PEER]} -> {w1[SLOW_PEER]} "
+          f"while slow, yet {share:.0%} of the straggler's gradient still "
+          f"reached the aggregate (ejection: 0%), back to {w2[SLOW_PEER]} "
+          "after healing — no ejection, no lost gradient")
+
+
 if __name__ == "__main__":
     main()
+    rebalance_act()

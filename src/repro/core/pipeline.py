@@ -99,6 +99,19 @@ class OptiReduceConfig:
     # virtual ring.  Ejected peers still receive the reduced result (they
     # keep training, so probationary readmission is a pure policy flip).
     active_peers: tuple[int, ...] | None = None
+    # straggler-proportional shard rebalancing (DESIGN §10): positive shard
+    # units per *active* peer (aligned with the sorted active set; None =
+    # uniform).  A slow-but-alive peer owns a smaller contiguous slice of
+    # the bucket and fast peers absorb the remainder; a uniform tuple
+    # normalizes to None so the full-participation trace stays bitwise
+    # identical.  Rounds-scheduled TAR and kind='ring' topologies only.
+    shard_weights: tuple[int, ...] | None = None
+    # link-fault rewiring (DESIGN §10): directed (src, dst) edges declared
+    # dead by the control plane's link-health tracker.  Round schedules
+    # relay the affected pair through a live intermediate; the ring
+    # topology reorders its virtual ring to avoid the edge — neither
+    # endpoint is ejected.
+    dead_links: tuple[tuple[int, int], ...] = ()
     # loss recovery beyond zero-fill (DESIGN §8, core/recovery.py):
     # none | stale (cross-step stale-value fill) | ef (stale + error-feedback
     # residual carry) | ef+budget (+ the phase-aware LossBudget controller).
@@ -148,6 +161,38 @@ def active_subset(cfg: OptiReduceConfig, n: int) -> tuple[int, ...] | None:
     if ap[0] < 0 or ap[-1] >= n:
         raise ValueError(f"active_peers {ap} outside the {n}-peer axis")
     return None if len(ap) == n else ap
+
+
+def weights_subset(cfg: OptiReduceConfig,
+                   n_active: int) -> tuple[int, ...] | None:
+    """Normalized shard-weight tuple for an ``n_active``-peer schedule.
+
+    Returns the per-active-peer positive integer units, or None when the
+    weights are uniform — a uniform tuple normalizes away so a policy
+    assigning everyone equal units stays on the exact uniform-shard trace
+    (the same discipline as :func:`active_subset`).
+    """
+    w = cfg.shard_weights
+    if w is None:
+        return None
+    w = tuple(int(u) for u in w)
+    if len(w) != n_active:
+        raise ValueError(f"shard_weights {w} do not match the "
+                         f"{n_active}-peer active set")
+    if any(u < 1 for u in w):
+        raise ValueError(f"shard_weights must be positive integers, got {w}")
+    return None if all(u == w[0] for u in w) else w
+
+
+def dead_link_set(cfg: OptiReduceConfig,
+                  n: int) -> tuple[tuple[int, int], ...]:
+    """Normalized (sorted, deduplicated) dead directed edges."""
+    dl = cfg.dead_links or ()
+    out = tuple(sorted({(int(s), int(d)) for (s, d) in dl}))
+    for (s, d) in out:
+        if not (0 <= s < n and 0 <= d < n) or s == d:
+            raise ValueError(f"dead link {(s, d)} outside the {n}-peer axis")
+    return out
 
 
 def _mask_for(ctx: SyncContext, n: int, s: int, axis: str,
@@ -610,10 +655,15 @@ class PsumTopology(Topology):
 
     def encode_stage(self, bucket, transport, codec, ctx):
         cfg = ctx.cfg
-        if active_subset(cfg, compat.axis_size(cfg.data_axis)) is not None:
+        n = compat.axis_size(cfg.data_axis)
+        if active_subset(cfg, n) is not None:
             raise ValueError(
                 "psum is XLA-native: it cannot exclude peers — degraded "
                 "participation needs a TAR or ring topology")
+        if weights_subset(cfg, n) is not None or dead_link_set(cfg, n):
+            raise ValueError(
+                "psum is XLA-native: it cannot rebalance shards or route "
+                "around links — use a rounds-scheduled TAR or ring topology")
         return (bucket,)
 
     def exchange_stage(self, state, transport, codec, ctx):
@@ -655,12 +705,44 @@ class RingTopology(Topology):
                 "(or a TAR topology)")
         return active
 
+    def _geometry(self, cfg: OptiReduceConfig, n: int):
+        """(active, order, weights): the degraded set, the (possibly
+        link-rewired) virtual ring order, and the per-position shard
+        weights — None/None/None on the exact uniform full-participation
+        trace (the bitwise-parity fast path).
+
+        A failed (i -> j) edge reroutes the virtual ring around the edge
+        (ring hops are all distance-1, so a ``tar.ring_order``-ed tuple
+        avoids it completely) rather than ejecting j; weights follow their
+        peer through the reordering.
+        """
+        active = self._active(cfg, n)
+        part = active if active is not None else tuple(range(n))
+        weights = weights_subset(cfg, len(part))
+        dead = dead_link_set(cfg, n)
+        if (weights is not None or dead) and self.kind != "ring":
+            raise ValueError(
+                f"{self.kind} exchanges over a rigid power-of-base "
+                "structure; shard weights / dead links support kind='ring' "
+                "(or a rounds-scheduled TAR topology)")
+        order = tar_lib.ring_order(part, dead) if dead else part
+        if weights is not None and order != part:
+            weights = tuple(weights[part.index(p)] for p in order)
+        if active is None and order == part and weights is None:
+            return None, None, None
+        return active, order, weights
+
     def encode_stage(self, bucket, transport, codec, ctx):
         cfg = ctx.cfg
         n = compat.axis_size(cfg.data_axis)
-        active = self._active(cfg, n)
-        x, _ = tar_lib.pad_for_tar(bucket, n if active is None
-                                   else len(active), codec.block(cfg))
+        active, order, weights = self._geometry(cfg, n)
+        if weights is not None:
+            pad_n = sum(weights)
+        elif order is not None:
+            pad_n = len(order)
+        else:
+            pad_n = n
+        x, _ = tar_lib.pad_for_tar(bucket, pad_n, codec.block(cfg))
         enc = codec.encode(x, ctx, cfg.data_axis)
         return (enc.data, enc.lo, enc.step)
 
@@ -668,12 +750,15 @@ class RingTopology(Topology):
         data, lo, step = state
         cfg = ctx.cfg
         n = compat.axis_size(cfg.data_axis)
-        active = self._active(cfg, n)
-        if active is not None:
-            # virtual ring of active peers; ejected peers' garbage output is
-            # replaced by the graft before it can reach the pod reduction
-            out = ring_lib.ring_allreduce(data, cfg.data_axis, active=active)
-            out = tar_lib.graft_inactive(out, cfg.data_axis, active)
+        active, order, weights = self._geometry(cfg, n)
+        if order is not None:
+            # virtual ring of active peers in link-avoiding order; ejected
+            # peers' garbage output is replaced by the graft before it can
+            # reach the pod reduction
+            out = ring_lib.ring_allreduce(data, cfg.data_axis, active=order,
+                                          weights=weights)
+            if active is not None:
+                out = tar_lib.graft_inactive(out, cfg.data_axis, active)
         elif self.kind == "ring":
             out = ring_lib.ring_allreduce(data, cfg.data_axis)
         elif self.kind == "tree":
@@ -738,17 +823,42 @@ class TarTopology(Topology):
         return jax.lax.pmean(own, cfg.pod_axis)
 
     def _participation(self, cfg: OptiReduceConfig, n: int):
-        """(active, n_shards): the rounds schedule shards over the active
-        set; a2a keeps N shards and excludes by mask."""
+        """(active, n_shards, weights, dead): the rounds schedule shards
+        over the active set — straggler-proportionally when ``weights`` is
+        set — and relays around ``dead`` links; a2a keeps N uniform shards
+        and excludes by mask."""
         active = active_subset(cfg, n)
+        part = active if active is not None else tuple(range(n))
+        weights = weights_subset(cfg, len(part))
+        dead = dead_link_set(cfg, n)
+        if (weights is not None or dead) and self.schedule != "rounds":
+            raise ValueError(
+                "the a2a TAR schedule lowers to all_to_all/all_gather, "
+                "which can neither resize its tiles nor avoid an edge — "
+                "use schedule='rounds' for shard_weights / dead_links")
         if active is not None and self.schedule == "rounds":
-            return active, len(active)
-        return active, n
+            return active, len(active), weights, dead
+        return active, n, weights, dead
+
+    @staticmethod
+    def _check_weighted(cfg: OptiReduceConfig, codec) -> None:
+        if not codec.linear:
+            raise ValueError(
+                "shard_weights require a linear codec: a quantizing codec "
+                "grids the bucket by uniform shard geometry")
+        if cfg.recovery != "none":
+            raise ValueError(
+                "shard_weights are incompatible with gradient recovery: "
+                "stale-fill indexes the bucket by uniform shard geometry")
 
     def encode_stage(self, bucket, transport, codec, ctx):
         cfg = ctx.cfg
         n = compat.axis_size(cfg.data_axis)
-        _, n_shards = self._participation(cfg, n)
+        _, n_shards, weights, _ = self._participation(cfg, n)
+        if weights is not None:
+            self._check_weighted(cfg, codec)
+            # pad so the bucket cuts into sum(weights) block-aligned units
+            n_shards = sum(weights)
         x, _ = tar_lib.pad_for_tar(bucket, n_shards, codec.block(cfg))
         enc = codec.encode(x, ctx, cfg.data_axis)
         # 4th slot: the re-encoded stale bucket a recovery codec may attach
@@ -761,22 +871,39 @@ class TarTopology(Topology):
         cfg = ctx.cfg
         axis = cfg.data_axis
         n = compat.axis_size(axis)
-        active, n_shards = self._participation(cfg, n)
+        active, n_shards, weights, dead = self._participation(cfg, n)
         enc = Encoded(data, lo=lo, step=step, stale=stale)
-        s = data.shape[0] // n_shards
-        shards = data.reshape(n_shards, s)
+        if weights is not None:
+            self._check_weighted(cfg, codec)
+            plan = tar_lib.shard_plan(data.shape[0], weights,
+                                      codec.block(cfg))
+            if plan.padded != data.shape[0]:
+                raise ValueError(
+                    f"bucket length {data.shape[0]} not a multiple of "
+                    f"sum(shard_weights)={sum(weights)} units")
+            shards = tar_lib.weighted_rows(data, plan)
+            s = plan.s_max
+        else:
+            plan = None
+            s = data.shape[0] // n_shards
+            shards = data.reshape(n_shards, s)
         if self.schedule == "rounds":
             received = tar_lib.tar_exchange_rounds(
-                shards, axis, incast=transport.incast(ctx), active=active)
+                shards, axis, incast=transport.incast(ctx), active=active,
+                dead_links=dead)
         else:
             received = jax.lax.all_to_all(shards, axis, split_axis=0,
                                           concat_axis=0, tiled=True)
         i = jax.lax.axis_index(axis)
-        if active is not None and self.schedule == "rounds":
+        if self.schedule == "rounds" and (active is not None
+                                          or plan is not None):
             # rows are in virtual-ring order; so are shard ownership and the
             # self row of the drop mask
-            vpos, _ = tar_lib.peer_lookup(active, n)
-            shard_index = jnp.take(vpos, i)
+            if active is not None:
+                vpos, _ = tar_lib.peer_lookup(active, n)
+                shard_index = jnp.take(vpos, i)
+            else:
+                shard_index = i        # weighted, full participation
             mask = transport.arrival_mask(ctx, n_shards, s, axis,
                                           self_index=shard_index)
         else:
@@ -796,7 +923,8 @@ class TarTopology(Topology):
         wire = codec.encode_shard(own, shard_index, enc, ctx)
         if self.schedule == "rounds":
             gathered = tar_lib.tar_broadcast_rounds(
-                wire, axis, incast=transport.incast(ctx), active=active)
+                wire, axis, incast=transport.incast(ctx), active=active,
+                dead_links=dead, plan=plan)
             if active is not None:
                 gathered = tar_lib.graft_inactive(gathered, axis, active)
         else:
@@ -817,6 +945,12 @@ class TarTopology(Topology):
         the all_gather at next use is the deferred stage 2."""
         cfg = ctx.cfg
         n = compat.axis_size(axis)
+        _active = active_subset(cfg, n)
+        part_n = n if _active is None else len(_active)
+        if weights_subset(cfg, part_n) is not None or dead_link_set(cfg, n):
+            raise ValueError(
+                "reduce_scatter lowers to all_to_all (the FSDP a2a form): "
+                "shard_weights / dead_links need the rounds schedule")
         g2 = jnp.moveaxis(g, dim, 0)
         lead = g2.shape[0]
         rest = g2.shape[1:]

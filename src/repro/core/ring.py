@@ -24,7 +24,8 @@ def psum_mean(x: jnp.ndarray, axis) -> jnp.ndarray:
 
 def ring_allreduce(x: jnp.ndarray, axis: str, *,
                    hop_masks: jnp.ndarray | None = None,
-                   active: tuple[int, ...] | None = None) -> jnp.ndarray:
+                   active: tuple[int, ...] | None = None,
+                   weights: tuple[int, ...] | None = None) -> jnp.ndarray:
     """Bandwidth-optimal ring allreduce (Patarasuk-Yuan): N-1 reduce-scatter
     hops + N-1 all-gather hops over a fixed ring i -> i+1.
 
@@ -33,12 +34,22 @@ def ring_allreduce(x: jnp.ndarray, axis: str, *,
     accumulated partial sum, which is exactly Ring's pathology.
 
     With a degraded-participation set ``active`` the ring is the *virtual
-    ring of active peers*: A chunks, 2(A-1) hops, mean over A contributions;
-    ejected peers self-loop (their partial sums never enter the ring) and
-    their garbage result must be replaced via ``tar.graft_inactive`` by the
-    caller.  ``hop_masks`` then indexes the 2(A-1) virtual hops.
+    ring of active peers* **in the order given** — callers route around
+    failed links by passing a ``tar.ring_order``-ed tuple, since only
+    consecutive (distance-1) hops are ever used: A chunks, 2(A-1) hops,
+    mean over A contributions; ejected peers self-loop (their partial sums
+    never enter the ring) and their garbage result must be replaced via
+    ``tar.graft_inactive`` by the caller.  ``hop_masks`` then indexes the
+    2(A-1) virtual hops.
+
+    ``weights`` (positive shard units per virtual position, len A) makes
+    chunk ownership straggler-proportional: x must be pre-padded to a
+    multiple of ``sum(weights)`` and is cut by ``tar.shard_plan`` into
+    contiguous slices that ride the ring zero-padded to the widest slice.
     """
     n = _n(axis)
+    if active is None and weights is not None:
+        active = tuple(range(n))
     if active is None:
         ring_n, k = n, jax.lax.axis_index(axis)
         perm = [(j, (j + 1) % n) for j in range(n)]
@@ -48,8 +59,20 @@ def ring_allreduce(x: jnp.ndarray, axis: str, *,
         vpos, _ = peer_lookup(active, n)
         k = jnp.take(vpos, jax.lax.axis_index(axis))
         perm = _ring_perms(active, n)(1)
-    s = x.shape[0] // ring_n
-    chunks = x.reshape(ring_n, s)
+    if weights is not None:
+        from .tar import shard_plan, weighted_flat, weighted_rows
+        if len(weights) != ring_n:
+            raise ValueError(f"weights {weights} do not match ring size {ring_n}")
+        plan = shard_plan(x.shape[0], weights)
+        if plan.padded != x.shape[0]:
+            raise ValueError(f"bucket length {x.shape[0]} not a multiple of "
+                             f"sum(weights)={sum(weights)}")
+        chunks = weighted_rows(x, plan)
+        s = plan.s_max
+    else:
+        plan = None
+        s = x.shape[0] // ring_n
+        chunks = x.reshape(ring_n, s)
 
     acc = chunks  # acc[c] = running partial sum of chunk c held at this node
     # reduce-scatter: after N-1 hops, node k owns the full sum of chunk (k+1)%n
@@ -69,6 +92,8 @@ def ring_allreduce(x: jnp.ndarray, axis: str, *,
         m = hop_masks[ring_n - 1 + h] if hop_masks is not None else 1.0
         cur = recv * m
         out = out.at[(k - h) % ring_n].set(cur)
+    if plan is not None:
+        return weighted_flat(out, plan)
     return out.reshape(ring_n * s)
 
 

@@ -20,6 +20,8 @@ reduce-scatter, inter-pod same-rank aggregation, intra-pod broadcast —
 """
 from __future__ import annotations
 
+from typing import NamedTuple, Sequence
+
 import jax
 import jax.numpy as jnp
 
@@ -82,8 +84,26 @@ def tar_allreduce(x: jnp.ndarray, axis: str, *,
     return jax.lax.all_gather(own, axis, axis=0, tiled=True)
 
 
+def relay_via(src: int, dst: int, participants: Sequence[int],
+              dead_links) -> int:
+    """First participant that can relay src->dst around a dead edge.
+
+    Both relay hops (src->m and m->dst) must themselves be live; raises
+    when the dead-link set isolates the pair (the caller must eject one
+    endpoint instead of rerouting).
+    """
+    dead = set(dead_links)
+    for m in participants:
+        if m in (src, dst):
+            continue
+        if (src, m) not in dead and (m, dst) not in dead:
+            return m
+    raise ValueError(f"no live relay for dead link {(src, dst)} "
+                     f"among participants {tuple(participants)}")
+
+
 def _grouped_rounds(axis: str, n: int, incast: int, send_for_round,
-                    perm_for_round=None):
+                    perm_for_round=None, dead_links=(), participants=None):
     """Run rounds 1..N-1 with <= incast permutes in flight per group.
 
     In round r (r = 1..N-1) node j sends to node (j+r) mod N and receives
@@ -95,7 +115,16 @@ def _grouped_rounds(axis: str, n: int, incast: int, send_for_round,
     burst.  ``perm_for_round`` overrides the per-round permutation (the
     degraded-participation schedules route over a virtual ring of active
     peers; ``n`` is then the *virtual* ring size).
+
+    ``dead_links`` is a set of directed (src, dst) edges that must not be
+    used: any round whose permutation would traverse a dead edge has that
+    pair removed from the main ppermute and replaced by a two-hop relay
+    through a live intermediate (two extra single-pair ppermutes). The
+    receiver's row is bit-identical either way — a ppermute destination
+    not named receives zeros, so ``direct + relayed`` routes exactly the
+    payload.
     """
+    dead = {(int(s), int(d)) for (s, d) in dead_links}
     rows = []
     pending = []
     token = None
@@ -105,10 +134,18 @@ def _grouped_rounds(axis: str, n: int, incast: int, send_for_round,
             perm = [(j, (j + r) % n) for j in range(n)]
         else:
             perm = perm_for_round(r)
+        dead_pairs = [p for p in perm
+                      if p[0] != p[1] and (p[0], p[1]) in dead]
+        live = [p for p in perm if p not in dead_pairs] if dead_pairs else perm
         send = send_for_round(r)
         if token is not None:           # gate on the previous group's recvs
             send, token = compat.optimization_barrier((send, token))
-        recv = jax.lax.ppermute(send, axis, perm)      # from (i - r) % n
+        recv = jax.lax.ppermute(send, axis, live)      # from (i - r) % n
+        for (src, dst) in dead_pairs:
+            m = relay_via(src, dst, participants
+                          if participants is not None else range(n), dead)
+            mid = jax.lax.ppermute(send, axis, [(src, m)])
+            recv = recv + jax.lax.ppermute(mid, axis, [(m, dst)])
         pending.append(recv)
         if len(pending) == incast or r == n - 1:
             pending = list(compat.optimization_barrier(tuple(pending)))
@@ -147,6 +184,117 @@ def _ring_perms(active: tuple[int, ...], n: int):
     return perm_for_round
 
 
+# ------------------------------------------- weighted (non-uniform) shards
+class ShardPlan(NamedTuple):
+    """Contiguous block-aligned ownership of a padded bucket.
+
+    ``sizes[k]``/``offsets[k]`` describe the slice owned by virtual-ring
+    position k; ``padded`` is the bucket length the plan covers and
+    ``s_max`` the widest slice (the static row width every round moves —
+    narrower slices ride zero-padded so the scanned strategy body stays
+    static per policy).
+    """
+    sizes: tuple[int, ...]
+    offsets: tuple[int, ...]
+    padded: int
+    s_max: int
+
+
+def shard_plan(length: int, weights: Sequence[int], block: int = 1) -> ShardPlan:
+    """Cut a bucket into straggler-proportional contiguous shards.
+
+    ``weights`` are positive integer shard units, one per virtual-ring
+    position (a slow-but-alive peer gets fewer units, fast peers absorb
+    the remainder).  ``length`` is padded up to a multiple of
+    ``sum(weights) * block`` — exactly what ``pad_for_tar(x, sum(weights),
+    block)`` produces — so every slice is ``w_k * unit`` elements with
+    ``unit`` a multiple of ``block``: every element is owned by exactly
+    one position and codec blocks never straddle an ownership boundary.
+    """
+    ws = tuple(int(w) for w in weights)
+    if not ws or any(w < 1 for w in ws):
+        raise ValueError(f"shard weights must be positive integers, got {weights}")
+    total = sum(ws)
+    quantum = total * block
+    padded = length + ((-length) % quantum)
+    unit = padded // total
+    sizes = tuple(w * unit for w in ws)
+    offsets = []
+    off = 0
+    for s in sizes:
+        offsets.append(off)
+        off += s
+    return ShardPlan(sizes, tuple(offsets), padded, max(sizes))
+
+
+def weighted_rows(x: jnp.ndarray, plan: ShardPlan) -> jnp.ndarray:
+    """(padded,) flat bucket -> (A, s_max) row matrix; row k is the slice
+    owned by virtual position k, zero-padded to the static row width."""
+    rows = []
+    for size, off in zip(plan.sizes, plan.offsets):
+        row = x[off:off + size]
+        if size < plan.s_max:
+            row = jnp.pad(row, (0, plan.s_max - size))
+        rows.append(row)
+    return jnp.stack(rows)
+
+
+def weighted_flat(rows: jnp.ndarray, plan: ShardPlan) -> jnp.ndarray:
+    """(A, s_max) row matrix -> (padded,) flat bucket: the inverse of
+    :func:`weighted_rows` (zero-pad tails are dropped)."""
+    return jnp.concatenate([rows[k, :size]
+                            for k, size in enumerate(plan.sizes)])
+
+
+def ring_order(active: tuple[int, ...], dead_links) -> tuple[int, ...]:
+    """Link-avoiding virtual-ring order.
+
+    Returns a permutation of ``active`` in which no consecutive hop
+    (including the wrap-around) traverses a dead directed edge — a failed
+    (i -> j) edge reroutes the virtual ring around the edge instead of
+    ejecting j.  When no dead edge touches consecutive active pairs the
+    order is ``tuple(active)`` unchanged (the bitwise-parity fast path).
+    Raises ValueError when the dead set leaves no Hamiltonian cycle (the
+    caller must fall back to ejection).
+    """
+    act = tuple(active)
+    a = len(act)
+    if a <= 1:
+        return act
+    members = set(act)
+    dead = {(int(s), int(d)) for (s, d) in dead_links
+            if int(s) in members and int(d) in members}
+    if not dead:
+        return act
+    hops = {(act[j], act[(j + 1) % a]) for j in range(a)}
+    if not (hops & dead):
+        return act
+    # depth-first search for a Hamiltonian cycle avoiding the dead edges
+    start = act[0]
+    order = [start]
+    rest = set(act) - {start}
+
+    def extend() -> bool:
+        if not rest:
+            return (order[-1], start) not in dead
+        cur = order[-1]
+        for p in sorted(rest):
+            if (cur, p) in dead:
+                continue
+            order.append(p)
+            rest.discard(p)
+            if extend():
+                return True
+            order.pop()
+            rest.add(p)
+        return False
+
+    if not extend():
+        raise ValueError(f"no dead-link-avoiding ring order for "
+                         f"active={act} dead={sorted(dead)}")
+    return tuple(order)
+
+
 def graft_inactive(full: jnp.ndarray, axis: str,
                    active: tuple[int, ...]) -> jnp.ndarray:
     """Deliver the assembled result to ejected peers.
@@ -179,7 +327,8 @@ def _sender_order(i: jnp.ndarray, n: int) -> jnp.ndarray:
 
 
 def tar_exchange_rounds(shards: jnp.ndarray, axis: str, *, incast: int = 1,
-                        active: tuple[int, ...] | None = None) -> jnp.ndarray:
+                        active: tuple[int, ...] | None = None,
+                        dead_links=()) -> jnp.ndarray:
     """Stage-1 shard exchange on the explicit round schedule (Fig 5b).
 
     shards: (N, S), row j = this node's contribution to peer j's shard.
@@ -193,6 +342,13 @@ def tar_exchange_rounds(shards: jnp.ndarray, axis: str, *, incast: int = 1,
     nor are waited on), and the returned (A, S) matrix is in virtual-sender
     order.  Ejected peers execute the same program on garbage rows; their
     result is replaced by :func:`graft_inactive` after stage 2.
+
+    Non-uniform (weighted) shards are expressed entirely in the row
+    matrix: build ``shards`` with :func:`weighted_rows` over a
+    :func:`shard_plan` (rows zero-padded to the static width) and pass
+    ``active`` explicitly — the schedule itself is weight-agnostic.
+    ``dead_links`` reroutes any round traversing a failed directed edge
+    through a two-hop relay (see :func:`_grouped_rounds`).
     """
     n = axis_size(axis)
     incast = max(1, int(incast))
@@ -201,7 +357,8 @@ def tar_exchange_rounds(shards: jnp.ndarray, axis: str, *, incast: int = 1,
         own_rows = [jnp.take(shards, i, axis=0)]       # my own contribution
         own_rows += _grouped_rounds(axis, n, incast,
                                     lambda r: jnp.take(shards, (i + r) % n,
-                                                       axis=0))
+                                                       axis=0),
+                                    dead_links=dead_links)
         # rows arrive ordered by sender distance r; reorder to sender index
         received_by_dist = jnp.stack(own_rows)         # row r = from (i-r)%n
         senders = _sender_order(i, n)
@@ -215,14 +372,17 @@ def tar_exchange_rounds(shards: jnp.ndarray, axis: str, *, incast: int = 1,
         own_rows += _grouped_rounds(
             axis, a, incast,
             lambda r: jnp.take(shards, (k + r) % a, axis=0),
-            perm_for_round=_ring_perms(active, n))
+            perm_for_round=_ring_perms(active, n),
+            dead_links=dead_links, participants=active)
     received_by_dist = jnp.stack(own_rows)             # row r = virt (k-r)%A
     senders = (k - jnp.arange(a)) % a
     return jnp.zeros_like(received_by_dist).at[senders].set(received_by_dist)
 
 
 def tar_broadcast_rounds(own: jnp.ndarray, axis: str, *, incast: int = 1,
-                         active: tuple[int, ...] | None = None) -> jnp.ndarray:
+                         active: tuple[int, ...] | None = None,
+                         dead_links=(),
+                         plan: ShardPlan | None = None) -> jnp.ndarray:
     """Stage-2 broadcast of the aggregated shard, mirrored round schedule.
 
     own: (S,) this node's aggregated shard. Returns the reassembled flat
@@ -230,17 +390,22 @@ def tar_broadcast_rounds(own: jnp.ndarray, axis: str, *, incast: int = 1,
     With ``active`` set, the mirror of the degraded exchange: A-1 rounds on
     the virtual ring assembling the flat (A*S,) bucket on active peers
     (virtual-position order); route it to ejected peers afterwards with
-    :func:`graft_inactive`.
+    :func:`graft_inactive`.  With a weighted ``plan``, ``own`` is the
+    zero-padded (s_max,) row and the reassembly concatenates each
+    position's valid slice (:func:`weighted_flat`) instead of reshaping.
     """
     n = axis_size(axis)
     incast = max(1, int(incast))
     if active is None:
         i = jax.lax.axis_index(axis)
         out_rows = [own]
-        out_rows += _grouped_rounds(axis, n, incast, lambda r: own)
+        out_rows += _grouped_rounds(axis, n, incast, lambda r: own,
+                                    dead_links=dead_links)
         got_by_dist = jnp.stack(out_rows)              # row r = shard of (i-r)%n
         senders = _sender_order(i, n)
         out = jnp.zeros_like(got_by_dist).at[senders].set(got_by_dist)
+        if plan is not None:
+            return weighted_flat(out, plan)
         return out.reshape(n * own.shape[0])
     a = len(active)
     vpos, _ = peer_lookup(active, n)
@@ -248,10 +413,14 @@ def tar_broadcast_rounds(own: jnp.ndarray, axis: str, *, incast: int = 1,
     out_rows = [own]
     if a > 1:
         out_rows += _grouped_rounds(axis, a, incast, lambda r: own,
-                                    perm_for_round=_ring_perms(active, n))
+                                    perm_for_round=_ring_perms(active, n),
+                                    dead_links=dead_links,
+                                    participants=active)
     got_by_dist = jnp.stack(out_rows)                  # row r = virt (k-r)%A
     senders = (k - jnp.arange(a)) % a
     out = jnp.zeros_like(got_by_dist).at[senders].set(got_by_dist)
+    if plan is not None:
+        return weighted_flat(out, plan)
     return out.reshape(a * own.shape[0])
 
 

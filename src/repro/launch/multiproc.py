@@ -65,15 +65,22 @@ class _StepMembership:
     would depend on which rank finished first.  :meth:`refresh` runs at
     the step fence, right after the membership events drain, so deaths
     still degrade the very next step.
+
+    The snapshot applies the same rule the barriers do: a member with
+    ``since > tag(step, 0)`` is not yet required — a rejoiner whose JOIN
+    races a survivor's step fence (its ``since`` is rounded up to the
+    next step boundary) must not be waited on this step, or whether the
+    survivors skip it would depend on restart timing.
     """
 
     def __init__(self, client):
         self._client = client
         self._live: frozenset | None = None
 
-    def refresh(self) -> None:
+    def refresh(self, step: int) -> None:
         mem = self._client.membership()
-        self._live = None if mem is None else frozenset(mem.live_ranks())
+        self._live = None if mem is None else frozenset(
+            m.rank for m in mem.members if m.since <= _tag(step, 0))
 
     def is_live(self, rank: int) -> bool:
         return self._live is None or rank in self._live
@@ -167,7 +174,7 @@ def _run_peer(client, backend, args, *, uid: int, kill_fn=None) -> dict:
         client.barrier(_tag(step, 0), timeout=args.barrier_timeout)
         for kind, r, gen in client.events():
             control.apply_membership(kind, r, gen)
-        step_mem.refresh()
+        step_mem.refresh(step)
         # every worker derives the same per-step data matrix from the seed
         # and contributes its own row — what makes cross-run bitwise
         # comparison (multiproc UDP vs single-process inproc) meaningful
@@ -321,11 +328,16 @@ def _launch_udp(args) -> dict:
                 if rc == -signal.SIGKILL and want_restart and not respawned:
                     # the scripted victim: respawn once the coordinator has
                     # processed the death (slot freed) and the survivors
-                    # have moved past the crash step
+                    # have finished the post-crash step — a step-(k+1)
+                    # fence arrival means every survivor drained the death
+                    # event at its step-(k+1) boundary (the step's phase
+                    # barriers cannot all release otherwise), so the
+                    # ejection is observed at every rank before the rejoin
+                    # can race a fence
                     respawned = True
                     while (server is not None
                            and (len(server.live_ranks()) >= args.nprocs
-                                or server.latest_step() <= args.kill_step)
+                                or server.latest_step() <= args.kill_step + 1)
                            and time.monotonic() < deadline):
                         time.sleep(0.05)
                     spawn(uid, 1)
@@ -400,9 +412,14 @@ def _launch_inproc(args) -> dict:
                 # ended up holding --kill-rank; detect the death by outcome
                 victim = next((w["uid"] for w in results.values()
                                if w.get("exit") == "killed"), None)
+            # respawn only after the survivors have FINISHED the
+            # post-crash step (a step-(k+2) fence arrival means every
+            # survivor's step-(k+1) drain observed the ejection) so the
+            # rejoin cannot race the death into one event drain and hide
+            # the EJECTED state from the status trail
             if victim is not None and \
                     len(coord.live_ranks()) < args.nprocs and \
-                    coord.latest_step() > args.kill_step:
+                    coord.latest_step() > args.kill_step + 1:
                 respawned = True
                 t2 = threading.Thread(target=run, args=(victim, 1),
                                       daemon=True)

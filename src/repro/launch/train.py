@@ -81,6 +81,17 @@ def main(argv=None) -> int:
                     help="drive next-step Hadamard/incast/participation "
                          "from the runtime ControlPlane (paper §3.2 + the "
                          "straggler detector) fed by observed telemetry")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="with --adaptive: emit straggler-proportional "
+                         "shard weights (a slow-but-alive peer owns a "
+                         "smaller contiguous slice of each bucket) and "
+                         "link-avoiding schedules (a failed directed edge "
+                         "is relayed/rerouted) instead of relying on "
+                         "ejection alone")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write a per-step JSON report (per-peer straggler "
+                         "scores, shard weights, dead-link events) for "
+                         "offline analysis")
     ap.add_argument("--policy-cache", type=int, default=4,
                     help="compiled train steps kept per SyncPolicy (LRU), "
                          "so an eject -> readmit cycle never recompiles")
@@ -118,10 +129,12 @@ def main(argv=None) -> int:
     control = ring = rdv_server = None
     rdv_clients = []
     with_budget = args.recovery == "ef+budget"
-    need_control = args.adaptive or args.transport != "lossy" or with_budget
+    need_control = (args.adaptive or args.transport != "lossy" or with_budget
+                    or bool(args.report))
     if need_control:
         from repro.runtime import ControlPlane, StepTelemetry
         control = ControlPlane.create(n_nodes=mesh.shape.get("data", 1),
+                                      rebalance=args.rebalance,
                                       **({"budget": {}} if with_budget
                                          else {}))
     if args.transport != "lossy":
@@ -275,15 +288,28 @@ def main(argv=None) -> int:
             # wire bridge does not model (WireTransport raises); keep the
             # detector observing but hold full participation
             participation_matters = False
+        # weighted shards / dead-link rewiring need a resizable schedule
+        # (rounds TAR or a true ring) and the in-JAX transport — the wire
+        # bridge's deposit geometry is fixed per compile, so the launcher
+        # holds those knobs at default there (the detector still observes)
+        reschedulable = ((isinstance(topo, TarTopology)
+                          and topo.schedule == "rounds") or
+                         (isinstance(topo, RingTopology)
+                          and topo.kind == "ring"))
+        rebalance_matters = args.rebalance and reschedulable and ring is None
+        deadlink_matters = reschedulable and ring is None
 
         def policy_of(sync: OptiReduceConfig) -> SyncPolicy:
             return SyncPolicy(use_hadamard=sync.use_hadamard,
                               incast=sync.incast,
-                              active_peers=sync.active_peers)
+                              active_peers=sync.active_peers,
+                              shard_weights=sync.shard_weights,
+                              dead_links=sync.dead_links)
 
         step_cache = PolicyStepCache(maxsize=max(1, args.policy_cache))
         step_cache.put(policy_of(tc.sync), (jf, shardings))
         stable_rec, stable_for = None, 0
+    report_rows: list[dict] = []
     t0 = time.time()
     try:
         for step in range(start_step, args.steps):
@@ -353,6 +379,20 @@ def main(argv=None) -> int:
                     control.observe(StepTelemetry(
                         step=step, loss_frac=loss_frac,
                         step_time=time.time() - t_step))
+                if args.report:
+                    det = control.detector
+                    report_rows.append({
+                        "step": step,
+                        "scores": [float(s) for s in det.scores()],
+                        "weights": [int(w) for w in det.weights()],
+                        "active": [int(p) for p in det.active_peers()],
+                        "dead_links": [list(l)
+                                       for l in control.dead_links()],
+                        "dead_link_events": [
+                            list(l) for l in
+                            ((wire_t.dead_link_events or ())
+                             if wire_t is not None else ())],
+                    })
             if args.adaptive:
                 new_sync = control.apply(tc.sync)
                 if not incast_matters:       # incast only lowers rounds forms
@@ -364,14 +404,22 @@ def main(argv=None) -> int:
                 if not participation_matters:
                     new_sync = dataclasses.replace(
                         new_sync, active_peers=tc.sync.active_peers)
+                if not rebalance_matters:
+                    new_sync = dataclasses.replace(new_sync,
+                                                   shard_weights=None)
+                if not deadlink_matters:
+                    new_sync = dataclasses.replace(new_sync, dead_links=())
                 # debounce: a growing incast ramps one step at a time, and each
                 # rebuild recompiles the whole step — wait for the controller to
                 # settle. A Hadamard toggle is an accuracy decision and an
                 # ejection stops the straggler wait: both immediate.
                 stable_for = stable_for + 1 if new_sync == stable_rec else 1
                 stable_rec = new_sync
+                # a link failure (or recovery probe) reroutes immediately —
+                # waiting three steps on a dead edge loses three deadlines
                 urgent = (new_sync.use_hadamard != tc.sync.use_hadamard or
-                          new_sync.active_peers != tc.sync.active_peers)
+                          new_sync.active_peers != tc.sync.active_peers or
+                          new_sync.dead_links != tc.sync.dead_links)
                 if new_sync != tc.sync and (urgent or stable_for >= 3):
                     tc = dataclasses.replace(tc, sync=new_sync)
                     cached = step_cache.get(policy_of(new_sync))
@@ -387,7 +435,9 @@ def main(argv=None) -> int:
                         how = "step rebuilt"
                     print(f"adaptive: use_hadamard={new_sync.use_hadamard} "
                           f"incast={new_sync.incast} "
-                          f"active={new_sync.active_peers} ({how})", flush=True)
+                          f"active={new_sync.active_peers} "
+                          f"weights={new_sync.shard_weights} "
+                          f"dead={new_sync.dead_links} ({how})", flush=True)
             monitor.observe(step, loss_frac, bool(metrics["skipped"] > 0))
             if monitor.halted:
                 print("HALT: excessive gradient loss (§3.4); rolling back")
@@ -408,6 +458,14 @@ def main(argv=None) -> int:
             c.leave()
         if rdv_server is not None:
             rdv_server.close()
+    if args.report and control is not None:
+        import json
+        with open(args.report, "w") as f:
+            json.dump({"n_peers": control.detector.n_peers,
+                       "rebalance": bool(args.rebalance),
+                       "steps": report_rows}, f, indent=1)
+        print(f"report: {len(report_rows)} steps -> {args.report}",
+              flush=True)
     print("done")
     return 0
 

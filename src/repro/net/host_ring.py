@@ -80,8 +80,12 @@ def aggregate_reports(reports: list[PeerReport], step: int) -> StepTelemetry:
     peer_times[seen] = np.nanmax(last[:, seen], axis=0)         # (n,)
     dropped = sum(r.dropped for r in reports)
     total = sum(r.total for r in reports)
+    # union of link-fault suspects across receivers — the ControlPlane's
+    # link-health tracker turns repeated observations into dead_links
+    events = tuple(sorted({l for r in reports for l in r.lost_links}))
     return StepTelemetry.from_wire(
         step=step,
+        dead_link_events=events,
         round_times=tuple(round_times),
         round_timed_out=tuple(round_to),
         round_frac_received=tuple(round_frac),
@@ -107,7 +111,7 @@ class HostRing:
                  default_deadline: float | None = None,
                  budget: LossBudget | None = None,
                  drop_fn=None, delay_fn=None, scramble_seed=None,
-                 membership=None):
+                 membership=None, shard_weights=None, dead_links=()):
         self.n = int(n_peers)
         self.cfg = cfg
         self.backend = make_backend(backend, self.n, drop_fn=drop_fn,
@@ -117,7 +121,9 @@ class HostRing:
         self.budget = budget
         self.peers = [HostPeer(p, self.backend, cfg, timeout=timeout,
                                default_deadline=default_deadline,
-                               budget=budget, membership=membership)
+                               budget=budget, membership=membership,
+                               shard_weights=shard_weights,
+                               dead_links=dead_links)
                       for p in range(self.n)]
         self._cv = threading.Condition()
         self._lock = self._cv                 # one lock guards all ring state
@@ -170,7 +176,15 @@ class HostRing:
                 self.backend.barrier(timeout=60.0)
                 peer.phase2_send_stage1(step, bucket)
                 self.backend.barrier(timeout=60.0)
+                # a relay hop's wrapped datagrams must be forwarded before
+                # the final receivers stop polling (virtual-time backends
+                # never block in wait) — every peer drains once, fenced, so
+                # two-hop delivery lands inside the coming receive phase
+                peer.relay_pump(step)
+                self.backend.barrier(timeout=60.0)
                 rep = peer.phase3_reduce_send_stage2(step, bucket)
+                self.backend.barrier(timeout=60.0)
+                peer.relay_pump(step)
                 self.backend.barrier(timeout=60.0)
                 out, rep2 = peer.phase4_decode(step, bucket)
                 rep.merge(rep2)
@@ -239,6 +253,10 @@ class HostRing:
                 dep = {me: np.asarray(v) for me, v in dep.items()}
                 for me in range(self.n):
                     self.peers[me].bridge_send(dep[me], step, 0)
+                for me in range(self.n):
+                    # forward relay-wrapped datagrams (dead-link reroute)
+                    # before any receiver evaluates its deadline
+                    self.peers[me].relay_pump(step)
                 results = {me: self.peers[me].bridge_receive(dep[me], step, 0)
                            for me in range(self.n)}
             except Exception as e:      # a dead worker must not wedge flush

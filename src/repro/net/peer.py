@@ -36,8 +36,9 @@ from repro.core.pipeline import (Encoded, HTQuant, OptiReduceConfig,
 from repro.core.ubt import AdaptiveTimeout, LossBudget
 
 from .backend import Backend
-from .wire import (KIND_CTRL, KIND_DATA1, KIND_DATA2, PacketHeader,
-                   Reassembly, n_packets, packetize)
+from .wire import (KIND_CTRL, KIND_DATA1, KIND_DATA2, KIND_RELAY,
+                   PacketHeader, Reassembly, WireError, n_packets, packetize,
+                   unwrap_relay, wrap_relay)
 
 
 @dataclasses.dataclass
@@ -65,9 +66,16 @@ class PeerReport:
     # (a known-dead peer is degradation the control plane already decided,
     # not packet loss for the Hadamard/incast controllers to react to)
     skipped_senders: tuple[int, ...] = ()
+    # directed (src, dst=this receiver) links observed *fully* lossy while
+    # at least one other sender's stream completed — a link-fault suspect
+    # (not a straggler: a slow peer still lands some packets), folded into
+    # StepTelemetry.dead_link_events by ``host_ring.aggregate_reports``
+    lost_links: tuple[tuple[int, int], ...] = ()
 
     def merge(self, other: "PeerReport") -> None:
         self.rounds.extend(other.rounds)
+        self.lost_links = tuple(sorted(set(self.lost_links)
+                                       | set(other.lost_links)))
         if other.sender_last_t is not None:
             if self.sender_last_t is None:
                 self.sender_last_t = other.sender_last_t.copy()
@@ -113,7 +121,9 @@ class HostPeer:
                  timeout: AdaptiveTimeout | None = None,
                  default_deadline: float | None = None,
                  budget: LossBudget | None = None,
-                 membership=None):
+                 membership=None,
+                 shard_weights: tuple[int, ...] | None = None,
+                 dead_links: tuple[tuple[int, int], ...] = ()):
         self.rank = int(rank)
         self.n = backend.n_peers
         self.backend = backend
@@ -136,6 +146,40 @@ class HostPeer:
             raise ValueError("host wire datapath: single data axis, "
                              "full participation only")
         self.codec = spec.codec
+        # straggler-proportional shard ownership: rank p owns shard_weights[p]
+        # units of the bucket (uniform normalizes to None so the default
+        # wire trace stays bitwise-identical to the seed)
+        if shard_weights is not None:
+            w = tuple(int(u) for u in shard_weights)
+            if len(w) != self.n:
+                raise ValueError(f"shard_weights has {len(w)} entries for "
+                                 f"{self.n} peers")
+            if any(u < 1 for u in w):
+                raise ValueError("shard_weights must be positive")
+            if not self.codec.linear:
+                raise ValueError(
+                    "shard_weights require a linear codec: a quantizing "
+                    "codec keys its grids on uniform shard geometry")
+            if cfg.recovery != "none":
+                raise ValueError("shard_weights: recovery codecs assume "
+                                 "uniform shard geometry")
+            shard_weights = None if len(set(w)) == 1 else w
+        self.shard_weights = shard_weights
+        # directed edges the control plane declared dead: sends crossing one
+        # are relay-wrapped through a live third peer instead of ejecting
+        # either endpoint
+        dl = set()
+        for (src, dst) in dead_links:
+            src, dst = int(src), int(dst)
+            if not (0 <= src < self.n and 0 <= dst < self.n) or src == dst:
+                raise ValueError(f"dead link ({src}, {dst}) is not a "
+                                 f"directed edge between distinct ranks "
+                                 f"< {self.n}")
+            dl.add((src, dst))
+        self.dead_links = tuple(sorted(dl))
+        # padding denominator: total shard units (== n when uniform)
+        self._pad_n = (self.n if self.shard_weights is None
+                       else sum(self.shard_weights))
         self.timeout = timeout
         self.budget = budget
         self.default_deadline = (default_deadline if default_deadline
@@ -156,11 +200,14 @@ class HostPeer:
         return SyncContext(cfg=self.cfg, key=key)
 
     def _build_stage_fns(self) -> None:
-        codec, cfg, n = self.codec, self.cfg, self.n
+        codec, cfg = self.codec, self.cfg
+        # pad to the shard-unit total, not the peer count: with weighted
+        # shards each unit must stay block-aligned (uniform: pad_n == n)
+        pad_n = self._pad_n
 
         if isinstance(codec, HTQuant):
             def enc_local(x, key):
-                x, _ = tar_lib.pad_for_tar(x, n, codec.block(cfg))
+                x, _ = tar_lib.pad_for_tar(x, pad_n, codec.block(cfg))
                 return codec.local_amax(x, self._ctx(key))
 
             def enc_finish(x1, amax, key):
@@ -173,7 +220,7 @@ class HostPeer:
                 # `stale` is the previous step's decoded bucket (StaleFill
                 # recovery, DESIGN §8) — None traces the plain variant
                 ctx = SyncContext(cfg=self.cfg, key=key, stale=stale)
-                x, _ = tar_lib.pad_for_tar(x, n, codec.block(cfg))
+                x, _ = tar_lib.pad_for_tar(x, pad_n, codec.block(cfg))
                 e = codec.encode(x, ctx, cfg.data_axis)
                 return e.data, e.stale
             self._enc = jax.jit(enc)
@@ -191,6 +238,38 @@ class HostPeer:
         self._dec = jax.jit(dec)
 
     # ------------------------------------------------------- receive loop
+    def _ingest(self, step: int) -> None:
+        """Drain the backend mailbox into the packet store, forwarding any
+        relay-wrapped datagram (dead-link reroute) to its final destination
+        — this peer is the relay hop for it, not the receiver."""
+        me = self.rank
+        direct: list[tuple[bytes, float]] = []
+        for dgram, t in self.backend.poll(me):
+            if len(dgram) >= 2 and dgram[1] == KIND_RELAY:
+                try:
+                    dst, inner = unwrap_relay(dgram)
+                except WireError:
+                    continue              # garbage wrap: drop it
+                if dst == me:             # degenerate wrap: just ingest
+                    direct.append((inner, t))
+                else:
+                    self.backend.send(me, dst, inner)
+            else:
+                direct.append((dgram, t))
+        self._store.ingest(direct, step)
+
+    def relay_pump(self, step: int) -> None:
+        """One explicit mailbox drain so relay-wrapped datagrams move on.
+
+        Virtual-time backends deliver everything in a single drain and
+        ``wait`` never blocks, so a relay hop that is itself busy in a
+        send phase would otherwise forward its wrapped datagrams only
+        after the final receiver stopped polling — the ring driver pumps
+        every peer between send and receive phases to make two-hop
+        delivery deterministic.  Direct datagrams drained here are kept
+        in the packet store for the coming receive phase."""
+        self._ingest(step)
+
     def round_deadline(self) -> float:
         if self.timeout is not None:
             d = self.timeout.round_deadline_or(self.default_deadline)
@@ -244,7 +323,7 @@ class HostPeer:
         arrivals: dict[int, tuple[float, PacketHeader, bytes]] = {}
         eff = deadline
         while True:
-            self._store.ingest(be.poll(me), step)
+            self._ingest(step)
             for hdr, frag, t in self._store.take(stream):
                 rel = max(0.0, t - t0)
                 if rel <= deadline and 0 <= hdr.seq < n_seq \
@@ -262,9 +341,14 @@ class HostPeer:
                 last_t = max(last_t, rel)
         return reas, last_t, eff
 
-    def _recv_rounds(self, kind: int, step: int, bucket: int, n_elems: int,
+    def _recv_rounds(self, kind: int, step: int, bucket: int, n_elems,
                      dtype) -> tuple[dict[int, Reassembly], PeerReport]:
-        """Run the N-1 receive rounds; round r expects sender (me-r)%n."""
+        """Run the N-1 receive rounds; round r expects sender (me-r)%n.
+
+        ``n_elems`` is the expected stream length — an int when every
+        sender's stream is the same size, or a callable ``sender -> int``
+        for weighted shards (stage 2 receives each owner's own-size slice).
+        """
         me, n = self.rank, self.n
         report = PeerReport(sender_last_t=np.full(n, np.nan))
         report.sender_last_t[me] = 0.0
@@ -282,8 +366,9 @@ class HostPeer:
                 report.skipped_senders += (sender,)
                 continue
             deadline = self.round_deadline()
+            ne = n_elems(sender) if callable(n_elems) else n_elems
             reas, last_t, eff = self._recv_stream(kind, step, bucket, r,
-                                                  sender, n_elems, dtype,
+                                                  sender, ne, dtype,
                                                   deadline)
             streams[sender] = reas
             # an incomplete round costs the receiver the effective deadline
@@ -297,27 +382,56 @@ class HostPeer:
                 frac_received=reas.frac_received()))
             report.sender_last_t[sender] = min(sender_t, eff)
             report.stage_time += min(round_t, eff)
+        if any(reas.complete for reas in streams.values()):
+            # a sender whose stream landed *zero* packets while another
+            # sender's completed is a link-fault suspect, not a straggler
+            # (a slow peer still lands some packets) and not an outage
+            # (something got through): report the directed edge
+            report.lost_links = tuple(sorted(
+                (sender, me) for sender, reas in streams.items()
+                if reas.received_packets == 0))
         return streams, report
 
     def _assemble(self, streams: dict[int, Reassembly], own: np.ndarray,
-                  s: int, dtype) -> tuple[np.ndarray, np.ndarray]:
-        """(n, s) received matrix + arrival mask in sender order."""
+                  s: int, dtype, sizes=None) -> tuple[np.ndarray, np.ndarray]:
+        """(n, s) received matrix + arrival mask in sender order.
+
+        ``sizes[sender]`` (optional) is the valid prefix of each row under
+        weighted shards; the zero tail is marked *arrived* (mask 1.0) — it
+        is planned padding, not loss, and the compensated mean averages the
+        zeros exactly like the in-JAX weighted rows do."""
         n, me = self.n, self.rank
         received = np.zeros((n, s), dtype)
         mask = np.zeros((n, s), np.float32)
         received[me] = own
         mask[me] = 1.0
         for sender, reas in streams.items():
-            received[sender] = reas.payload()
-            mask[sender] = reas.mask()
+            w = s if sizes is None else sizes[sender]
+            received[sender, :w] = reas.payload()
+            mask[sender, :w] = reas.mask()
+            mask[sender, w:] = 1.0
         return received, mask
 
     # ------------------------------------------------------------- phases
     # One allreduce = four phases with a backend barrier between them (the
     # drivers in host_ring.py run them across peers threaded or in lockstep)
 
+    def _send_datagram(self, dst: int, dgram: bytes, step: int) -> None:
+        """Post one datagram, relay-wrapping it around a dead (me, dst)
+        edge through the first live third peer (``tar.relay_via`` — the
+        same relay the in-JAX schedule lowers to)."""
+        me = self.rank
+        if (me, dst) in self.dead_links:
+            live = tuple(p for p in range(self.n)
+                         if self.membership is None
+                         or self.membership.is_live(p))
+            m = tar_lib.relay_via(me, dst, live, self.dead_links)
+            self.backend.send(me, m, wrap_relay(me, dst, step, dgram))
+        else:
+            self.backend.send(me, dst, dgram)
+
     def _send_shards(self, shards: np.ndarray, kind: int, step: int,
-                     bucket: int) -> None:
+                     bucket: int, sizes=None) -> None:
         me, n = self.rank, self.n
         for r in range(1, n):
             dst = (me + r) % n
@@ -325,10 +439,12 @@ class HostPeer:
                     and not self.membership.is_live(dst):
                 continue                  # no socket to reach a dead rank
             row = shards[dst] if shards.ndim == 2 else shards
+            if sizes is not None and shards.ndim == 2:
+                row = row[:sizes[dst]]    # weighted: send the valid prefix
             for dgram in packetize(np.ascontiguousarray(row), kind=kind,
                                    sender=me, step=step, bucket=bucket,
                                    round=r, packet_elems=self.packet_elems):
-                self.backend.send(me, dst, dgram)
+                self._send_datagram(dst, dgram, step)
 
     def phase1_encode(self, x: np.ndarray, key, step: int, bucket: int,
                       stale: np.ndarray | None = None) -> None:
@@ -348,7 +464,7 @@ class HostPeer:
                     if dst == self.rank or (self.membership is not None and
                                             not self.membership.is_live(dst)):
                         continue
-                    self.backend.send(self.rank, dst, dgram)
+                    self._send_datagram(dst, dgram, step)
             self._held = {"x1": x1, "amax": amax_np, "key": key,
                           "stale_w": None, "length": x.shape[-1]}
         else:
@@ -379,32 +495,62 @@ class HostPeer:
                                              h["key"])
             h["wire1"], h["lo"], h["step"] = np.asarray(data), lo, stp
             del h["x1"], h["amax"]
-        s = h["wire1"].shape[0] // self.n
-        h["shards"] = h["wire1"].reshape(self.n, s)
-        self._send_shards(h["shards"], KIND_DATA1, step, bucket)
+        wire1 = h["wire1"]
+        if self.shard_weights is not None:
+            # weighted shard geometry: rank p owns the contiguous slice
+            # [offsets[p], offsets[p]+sizes[p]) — rows are zero-padded to
+            # the static s_max exactly like ``tar.weighted_rows``
+            plan = tar_lib.shard_plan(wire1.shape[0], self.shard_weights,
+                                      self.codec.block(self.cfg))
+            if plan.padded != wire1.shape[0]:
+                raise ValueError(
+                    f"encoded bucket of {wire1.shape[0]} elements is not "
+                    f"padded for weights {self.shard_weights} "
+                    f"(need a multiple of {plan.padded})")
+            shards = np.zeros((self.n, plan.s_max), wire1.dtype)
+            for p in range(self.n):
+                shards[p, :plan.sizes[p]] = \
+                    wire1[plan.offsets[p]:plan.offsets[p] + plan.sizes[p]]
+            h["plan"], h["shards"] = plan, shards
+            self._send_shards(shards, KIND_DATA1, step, bucket,
+                              sizes=plan.sizes)
+        else:
+            s = wire1.shape[0] // self.n
+            h["plan"] = None
+            h["shards"] = wire1.reshape(self.n, s)
+            self._send_shards(h["shards"], KIND_DATA1, step, bucket)
 
     def phase3_reduce_send_stage2(self, step: int, bucket: int) -> PeerReport:
         """Receive stage 1 under the per-round deadlines, run the codec's
         compensated reduce, and broadcast the re-encoded shard."""
         h = self._held
+        plan = h["plan"]
         s = h["shards"].shape[1]
-        streams, report = self._recv_rounds(KIND_DATA1, step, bucket, s,
+        # under weighted shards every sender posts me *my* slice — a stream
+        # of sizes[me] elements — into a row zero-padded to the static s_max
+        valid = s if plan is None else plan.sizes[self.rank]
+        streams, report = self._recv_rounds(KIND_DATA1, step, bucket, valid,
                                             h["wire1"].dtype)
+        sizes1 = None if plan is None else (valid,) * self.n
         received, mask = self._assemble(streams, h["shards"][self.rank], s,
-                                        h["wire1"].dtype)
+                                        h["wire1"].dtype, sizes=sizes1)
         # skipped (known-dead) senders' all-zero rows are planned
         # degradation, not packet loss: exclude them from both counters so
         # loss_frac keeps driving the Hadamard/incast controllers correctly
+        # (weighted: count only the valid prefixes — padding cannot drop)
         skipped = len(report.skipped_senders)
-        report.dropped = float(np.sum(1.0 - mask)) - skipped * s
-        report.total = float(mask.size) - skipped * s
+        report.dropped = float(np.sum(1.0 - mask[:, :valid])) \
+            - skipped * valid
+        report.total = float(self.n * valid) - skipped * valid
         wire2 = np.asarray(self._red(
             jnp.asarray(received), jnp.asarray(mask),
             jnp.asarray(self.rank, jnp.int32), h["lo"], h["step"],
             h["stale_w"], h["key"]))
         h["wire2"], h["mask1"] = wire2, mask
         self.last_mask1 = mask            # observed arrival mask, kept for
-        self._send_shards(wire2, KIND_DATA2, step, bucket)  # EF accounting
+        # EF accounting; weighted broadcasts only the owned valid prefix
+        out2 = wire2 if plan is None else wire2[:valid]
+        self._send_shards(out2, KIND_DATA2, step, bucket)
         return report
 
     def phase4_decode(self, step: int, bucket: int
@@ -414,16 +560,36 @@ class HostPeer:
         decodes through (drops are modeled on stage 1; see DESIGN §2) —
         and is charged to ``stage2_dropped``."""
         h = self._held
+        plan = h["plan"]
         s2 = h["wire2"].shape[0]
-        streams, report = self._recv_rounds(KIND_DATA2, step, bucket, s2,
-                                            h["wire2"].dtype)
-        gathered, mask2 = self._assemble(streams, h["wire2"], s2,
-                                         h["wire2"].dtype)
-        skipped = len(report.skipped_senders)
-        report.stage2_dropped = float(np.sum(1.0 - mask2)) - skipped * s2
-        report.stage2_total = float(mask2.size) - skipped * s2
+        if plan is None:
+            streams, report = self._recv_rounds(KIND_DATA2, step, bucket, s2,
+                                                h["wire2"].dtype)
+            gathered, mask2 = self._assemble(streams, h["wire2"], s2,
+                                             h["wire2"].dtype)
+            skipped = len(report.skipped_senders)
+            report.stage2_dropped = float(np.sum(1.0 - mask2)) - skipped * s2
+            report.stage2_total = float(mask2.size) - skipped * s2
+            flat = gathered.reshape(-1)
+        else:
+            # each owner q broadcast its own-size slice: per-sender stream
+            # lengths, per-row valid prefixes, and a weighted_flat-style
+            # concatenation of the prefixes back into the flat bucket
+            sizes = plan.sizes
+            streams, report = self._recv_rounds(
+                KIND_DATA2, step, bucket, lambda q: sizes[q],
+                h["wire2"].dtype)
+            gathered, mask2 = self._assemble(streams, h["wire2"], s2,
+                                             h["wire2"].dtype, sizes=sizes)
+            skip_elems = float(sum(sizes[p] for p in report.skipped_senders))
+            drop2 = float(sum(np.sum(1.0 - mask2[p, :sizes[p]])
+                              for p in range(self.n)))
+            report.stage2_dropped = drop2 - skip_elems
+            report.stage2_total = float(sum(sizes)) - skip_elems
+            flat = np.concatenate([gathered[p, :sizes[p]]
+                                   for p in range(self.n)])
         self.last_mask2 = mask2
-        out = np.asarray(self._dec(jnp.asarray(gathered.reshape(-1)),
+        out = np.asarray(self._dec(jnp.asarray(flat),
                                    h["lo"], h["step"], h["key"]))
         out = out[:h["length"]]
         self._held = {}

@@ -39,8 +39,9 @@ HEADER_BYTES = struct.calcsize(HEADER_FMT)          # 16
 KIND_DATA1 = 1      # stage-1 shard exchange payload
 KIND_DATA2 = 2      # stage-2 aggregated-shard broadcast payload
 KIND_CTRL = 3       # small reliable-ish control payloads (HTQuant amax)
+KIND_RELAY = 4      # dead-link reroute: payload is a complete inner datagram
 
-_KINDS = (KIND_DATA1, KIND_DATA2, KIND_CTRL)
+_KINDS = (KIND_DATA1, KIND_DATA2, KIND_CTRL, KIND_RELAY)
 
 
 class WireError(ValueError):
@@ -86,6 +87,31 @@ class PacketHeader:
 def n_packets(n_elems: int, packet_elems: int) -> int:
     """Packets needed for a stream of ``n_elems`` elements."""
     return max(1, -(-n_elems // packet_elems))
+
+
+def wrap_relay(relay_src: int, final_dst: int, step: int,
+               inner: bytes) -> bytes:
+    """Wrap a datagram for a two-hop dead-link reroute.
+
+    The outer header's ``sender`` is the peer posting the wrap (so fabric
+    accounting stays truthful) and ``bucket`` carries the *final*
+    destination rank; the payload is the complete inner datagram, which the
+    relay peer re-sends verbatim — the receiver sees the original sender's
+    header, and any per-(src, dst) drop schedule sees the relay hop's
+    physical endpoints, which is exactly why the reroute survives a dead
+    directed edge.
+    """
+    hdr = PacketHeader(kind=KIND_RELAY, sender=relay_src, step=step,
+                       bucket=final_dst, round=0, seq=0, n_seq=1)
+    return hdr.encode() + inner
+
+
+def unwrap_relay(datagram: bytes) -> tuple[int, bytes]:
+    """(final_dst, inner datagram) of a ``KIND_RELAY`` wrap."""
+    hdr, inner = PacketHeader.decode(datagram)
+    if hdr.kind != KIND_RELAY:
+        raise WireError(f"not a relay datagram (kind {hdr.kind})")
+    return hdr.bucket, inner
 
 
 def packetize(payload: np.ndarray, *, kind: int, sender: int, step: int,

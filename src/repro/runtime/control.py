@@ -12,6 +12,13 @@ exposes exactly one output, a :class:`SyncPolicy`:
   active-set size;
 * ``active_peers`` — the degraded-participation set (None = everyone), fed
   straight into ``OptiReduceConfig.active_peers``;
+* ``shard_weights`` — straggler-proportional shard units per *active* peer
+  (None = uniform), from ``StragglerDetector.weights()`` when rebalancing
+  is enabled: a slow-but-alive peer owns a smaller contiguous slice of the
+  bucket instead of being ejected;
+* ``dead_links``   — directed (src, dst) edges the link-health tracker has
+  declared failed; the round schedules reroute around them (relay / ring
+  reordering) instead of ejecting either endpoint;
 * ``timeout_x``    — the x%-wait knob the simulator's deadline rule uses
   (host-only: it never changes the compiled program, so it is excluded
   from policy equality/hash and the compile key).
@@ -41,6 +48,12 @@ class SyncPolicy:
     use_hadamard: bool = False
     incast: int = 1
     active_peers: tuple[int, ...] | None = None     # None = full set
+    # shard units per active peer, aligned with the (sorted) active set;
+    # None = uniform — a uniform tuple is normalized away before it gets
+    # here so the full-participation trace stays bitwise-identical
+    shard_weights: tuple[int, ...] | None = None
+    # directed (src, dst) edges declared failed by the link-health tracker
+    dead_links: tuple[tuple[int, int], ...] = ()
     timeout_x: float = dataclasses.field(default=0.10, compare=False)
     # membership generation this policy was computed under (rendezvous-fed;
     # 0 = no rendezvous).  Stamped so a launcher can order policies against
@@ -51,24 +64,43 @@ class SyncPolicy:
     @property
     def compile_key(self) -> Hashable:
         """What a compiled train step depends on."""
-        return (self.use_hadamard, self.incast, self.active_peers)
+        return (self.use_hadamard, self.incast, self.active_peers,
+                self.shard_weights, self.dead_links)
 
     def apply(self, cfg):
         """Fold this policy into a sync config (any dataclass carrying
-        ``use_hadamard`` / ``incast`` / ``active_peers`` fields)."""
+        ``use_hadamard`` / ``incast`` / ``active_peers`` /
+        ``shard_weights`` / ``dead_links`` fields)."""
         return dataclasses.replace(cfg, use_hadamard=self.use_hadamard,
                                    incast=self.incast,
-                                   active_peers=self.active_peers)
+                                   active_peers=self.active_peers,
+                                   shard_weights=self.shard_weights,
+                                   dead_links=self.dead_links)
 
 
 class ControlPlane:
     """Telemetry-driven owner of the UBT controllers + straggler detector."""
 
     def __init__(self, state: UbtState, detector: StragglerDetector, *,
-                 use_hadamard: bool = False):
+                 use_hadamard: bool = False, rebalance: bool = False,
+                 link_patience: int = 2, link_recover: int = 50):
         self.state = state
         self.detector = detector
         self.use_hadamard = use_hadamard
+        # rebalance: emit straggler-proportional shard weights instead of
+        # relying on ejection alone — a slow peer keeps a (smaller) slice
+        self.rebalance = bool(rebalance)
+        # link-health tracker: ``link_patience`` consecutive fully-lossy
+        # observations declare a directed edge dead; once dead the schedule
+        # relays around it, so the edge goes unobserved — after
+        # ``link_recover`` quiet steps it is revived (probed) and re-killed
+        # within ``link_patience`` steps if still down.  Both transitions
+        # are recompiles; the long recover period bounds the probe cost
+        self.link_patience = max(1, int(link_patience))
+        self.link_recover = max(1, int(link_recover))
+        self._link_strikes: dict[tuple[int, int], int] = {}
+        self._link_quiet: dict[tuple[int, int], int] = {}
+        self._dead_links: set[tuple[int, int]] = set()
         self.steps = 0                      # observed (post-warmup) steps
         self.generation = 0                 # latest membership generation
 
@@ -76,6 +108,8 @@ class ControlPlane:
     def create(cls, n_nodes: int, *, use_hadamard: bool = False,
                detector: StragglerDetector | None = None,
                detect_stragglers: bool = True,
+               rebalance: bool = False,
+               link_patience: int = 2, link_recover: int = 50,
                detector_kw: dict | None = None, **kw) -> "ControlPlane":
         """Build the full controller bundle for an ``n_nodes`` job.  ``kw``
         forwards to :meth:`UbtState.create` (``timeout=``/``incast=``/
@@ -86,7 +120,9 @@ class ControlPlane:
                                          enabled=detect_stragglers,
                                          **(detector_kw or {}))
         return cls(state=UbtState.create(n_nodes=n_nodes, **kw),
-                   detector=detector, use_hadamard=use_hadamard)
+                   detector=detector, use_hadamard=use_hadamard,
+                   rebalance=rebalance, link_patience=link_patience,
+                   link_recover=link_recover)
 
     # ------------------------------------------------------------ the loop
     def observe(self, t: StepTelemetry) -> bool:
@@ -123,8 +159,36 @@ class ControlPlane:
             self.use_hadamard = False
         if t.peer_stage_times is not None:
             self.detector.observe(t.peer_stage_times)
+        self._observe_links(t.dead_link_events or ())
         self.steps += 1
         return self.policy() != before
+
+    def _observe_links(self, events) -> None:
+        """Fold one step's fully-lossy link observations into the tracker."""
+        seen = {(int(s), int(d)) for (s, d) in events}
+        for link in seen:
+            self._link_strikes[link] = self._link_strikes.get(link, 0) + 1
+            self._link_quiet.pop(link, None)
+            if self._link_strikes[link] >= self.link_patience:
+                self._dead_links.add(link)
+        for link in list(self._link_strikes):
+            if link in seen:
+                continue
+            if link in self._dead_links:
+                # dead + unobserved: the schedule is relaying around it, so
+                # silence is expected — count quiet steps toward a probe
+                self._link_quiet[link] = self._link_quiet.get(link, 0) + 1
+                if self._link_quiet[link] >= self.link_recover:
+                    self._dead_links.discard(link)
+                    self._link_strikes.pop(link, None)
+                    self._link_quiet.pop(link, None)
+            else:
+                # a clean observation clears accumulated strikes
+                self._link_strikes.pop(link, None)
+
+    def dead_links(self) -> tuple[tuple[int, int], ...]:
+        """Currently-dead directed edges, sorted (telemetry/reporting)."""
+        return tuple(sorted(self._dead_links))
 
     def apply_membership(self, kind: str, rank: int,
                          generation: int | None = None) -> bool:
@@ -150,12 +214,23 @@ class ControlPlane:
         active = self.detector.active_peers()
         n = self.detector.n_peers
         a = max(1, len(active))
+        weights = None
+        if self.rebalance:
+            units = self.detector.weights()
+            w = tuple(units[p] for p in active)
+            if w and any(u != w[0] for u in w):
+                weights = w          # uniform normalizes to None (parity)
+        member = set(active)
+        dead = tuple(sorted(link for link in self._dead_links
+                            if link[0] in member and link[1] in member))
         return SyncPolicy(
             use_hadamard=self.use_hadamard,
             # senders use the min advertised I, and a degraded schedule has
             # only a-1 distinct peers to fan in from
             incast=max(1, min(self.state.incast.value, max(1, a - 1))),
             active_peers=None if len(active) == n else active,
+            shard_weights=weights,
+            dead_links=dead,
             timeout_x=self.state.timeout.x,
             generation=self.generation)
 

@@ -54,12 +54,18 @@ class StragglerDetector:
     def __init__(self, n_peers: int, *, alpha: float = 0.25,
                  eject_score: float = 1.75, readmit_score: float = 1.25,
                  patience: int = 4, cooldown: int = 12, probation: int = 6,
-                 min_active: int = 2, enabled: bool = True):
+                 min_active: int = 2, enabled: bool = True,
+                 weight_resolution: int = 4, weight_floor: float = 0.25,
+                 weight_band: float = 0.35):
         if not 0.0 < alpha <= 1.0:
             raise ValueError(f"alpha {alpha} outside (0, 1]")
         if readmit_score >= eject_score:
             raise ValueError("readmit_score must sit below eject_score "
                              "(the hysteresis band)")
+        if weight_resolution < 1:
+            raise ValueError(f"weight_resolution {weight_resolution} < 1")
+        if not 0.0 < weight_floor <= 1.0:
+            raise ValueError(f"weight_floor {weight_floor} outside (0, 1]")
         self.n_peers = int(n_peers)
         self.alpha = float(alpha)
         self.eject_score = float(eject_score)
@@ -69,7 +75,11 @@ class StragglerDetector:
         self.probation = int(probation)
         self.min_active = max(1, int(min_active))
         self.enabled = bool(enabled)
+        self.weight_resolution = int(weight_resolution)
+        self.weight_floor = float(weight_floor)
+        self.weight_band = float(weight_band)
         self.peers = [PeerState() for _ in range(self.n_peers)]
+        self._weight_units = [self.weight_resolution] * self.n_peers
 
     # ------------------------------------------------------------- queries
     def active_peers(self) -> tuple[int, ...]:
@@ -86,6 +96,47 @@ class StragglerDetector:
 
     def scores(self) -> tuple[float, ...]:
         return tuple(p.score for p in self.peers)
+
+    def weights(self) -> tuple[int, ...]:
+        """Straggler-proportional shard units per peer (0 for EJECTED).
+
+        Normalized inverse-score: a peer's raw target is
+        ``resolution * median_active_score / score`` — uniform
+        (== ``weight_resolution``) for a median-pace peer, proportionally
+        fewer units for a slow one — clamped to
+        ``[weight_floor * resolution, resolution]`` so a slow-but-alive
+        peer always keeps a nonzero contiguous slice, then rounded to
+        integer units.  PROBATION peers are additionally capped at half
+        weight: they are being *watched*, not yet trusted with a full
+        shard (reduced, never zero).  Hysteresis banding: the stored unit
+        moves only when the raw target strays ``weight_band`` beyond the
+        rounding midpoint, so score dithering around a unit boundary does
+        not thrash SyncPolicy compile keys (every distinct weight tuple is
+        a recompile).
+        """
+        res = self.weight_resolution
+        floor_units = max(1, int(round(self.weight_floor * res)))
+        active = self.active_peers()
+        scores = [self.peers[p].score for p in active]
+        med = max(float(np.median(scores)), 1e-12) if scores else 1.0
+        out = []
+        for i, p in enumerate(self.peers):
+            if p.status == EJECTED:
+                # park at the floor so a readmitted peer re-enters small
+                # and earns its weight back through the hysteresis band
+                self._weight_units[i] = floor_units
+                out.append(0)
+                continue
+            cap = res if p.status == ACTIVE else max(floor_units, res // 2)
+            target = res * med / max(p.score, 1e-12)
+            target = min(float(cap), max(float(floor_units), target))
+            cur = self._weight_units[i]
+            if abs(target - cur) > 0.5 + self.weight_band:
+                cur = int(round(target))
+            cur = min(cap, max(floor_units, cur))
+            self._weight_units[i] = cur
+            out.append(cur)
+        return tuple(out)
 
     # ------------------------------------------------------------- updates
     def _score(self, times: Sequence[float | None]) -> None:

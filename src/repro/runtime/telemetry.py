@@ -45,6 +45,11 @@ class StepTelemetry:
     # raw drop-stat counters, when the producer has them
     dropped: float = 0.0
     total: float = 0.0
+    # directed (src, dst) links observed *fully* lossy this step: receiver
+    # dst saw zero packets from src while other senders delivered — a link
+    # fault suspect, not a straggler signal.  The ControlPlane turns
+    # consecutive suspicions into SyncPolicy.dead_links (ring rewiring)
+    dead_link_events: tuple[tuple[int, int], ...] = ()
 
     @classmethod
     def from_stats(cls, step: int, stats: dict, *,
@@ -67,7 +72,9 @@ class StepTelemetry:
                   round_frac_received: Sequence[float],
                   peer_stage_times: Sequence[float],
                   dropped: float, total: float,
-                  step_time: float | None = None) -> "StepTelemetry":
+                  step_time: float | None = None,
+                  dead_link_events: Sequence[tuple[int, int]] = ()
+                  ) -> "StepTelemetry":
         """Build from a host wire transport's observations (repro/net/):
         every field the simulator used to be the only producer of —
         per-round stage times / t_B-expiry flags / received fractions and
@@ -81,4 +88,6 @@ class StepTelemetry:
                    round_times=tuple(float(t) for t in round_times),
                    round_timed_out=tuple(bool(b) for b in round_timed_out),
                    round_frac_received=tuple(float(f)
-                                             for f in round_frac_received))
+                                             for f in round_frac_received),
+                   dead_link_events=tuple((int(s), int(d))
+                                          for (s, d) in dead_link_events))

@@ -180,6 +180,24 @@ class NetworkModel:
                         * self.drop_frac_per_stall, 0.0)
         return t, np.clip(lost, 0.0, 0.2)
 
+    def ubt_ms_vec(self, nbytes: np.ndarray,
+                   factor: float = 1.0) -> tuple[np.ndarray, np.ndarray]:
+        """:meth:`ubt_ms` with *per-flow* byte counts — the weighted-shard
+        schedule puts a different payload on each sender's link (a reduced-
+        weight peer ships a smaller slice; a relayed dead-link flow ships
+        its bytes twice).  Index i of ``nbytes`` is peer i's flow."""
+        nb = np.asarray(nbytes, dtype=np.float64)
+        n = nb.size
+        lat = self.rng.lognormal(self.mu, self.sigma, size=n)
+        bw_factor = self.rng.lognormal(0.0, self.sigma, size=n)
+        t = lat + nb / (self.bandwidth_GBps * 1e9) * 1e3 * bw_factor
+        t = t * self._per_peer(n) * factor
+        stalls = self.rng.random(n) < self.stall_prob
+        lost = np.where(stalls,
+                        self.rng.uniform(0.2, 1.8, n)
+                        * self.drop_frac_per_stall, 0.0)
+        return t, np.clip(lost, 0.0, 0.2)
+
 
 def fit_gilbert_elliott(masks) -> tuple[float | None, float | None]:
     """Fit Gilbert–Elliott (p, r) from packet-granular 0/1 arrival masks.
@@ -222,6 +240,10 @@ class GAResult:
     time_ms: float
     drop_frac: float = 0.0
     rounds: int = 0
+    # fraction of each peer's gradient data that made it into the aggregate
+    # (index = peer id; weighted/rebalance path only, None elsewhere) — a
+    # rebalanced straggler must show a NONZERO entry here, unlike ejection
+    peer_contrib: tuple[float, ...] | None = None
 
 
 class GASimulator:
@@ -382,6 +404,100 @@ class GASimulator:
             round_frac_received=tuple(frac_recv)))
         return GAResult(total_t, drop_frac, len(stage_times))
 
+    def _optireduce_weighted(self, nbytes: float, control: ControlPlane, *,
+                             fixed_incast: int | None = None) -> GAResult:
+        """Weighted / link-rewired UBT aggregation (DESIGN §10).
+
+        The round schedule is the same 2*ceil((A-1)/I) groups, but each
+        flow's bytes follow the policy's shard weights: in a stage-1 round,
+        position k sends its contribution to the *receiver's* shard
+        (``sizes[(k+r) % A]`` bytes); in stage 2 it broadcasts its own
+        (``sizes[k]``).  A flow crossing a dead directed edge rides the
+        two-hop relay, so its bytes double.  The deadline is keyed on the
+        FULL-WEIGHT cohort's last-percentile marker plus a small fixed
+        slack — NOT on x%*t_C: a reduced-weight straggler exceeding the
+        deadline is *scheduled shedding*, and charging it to the §3.2.1
+        rule would double x until the timeout collapses the incast.  For
+        the same reason the telemetry (loss fraction, timeout flags,
+        received fractions) is keyed on the full-weight cohort only, while
+        the returned ``drop_frac``/``peer_contrib`` account every byte.
+        """
+        n = self.n
+        policy = control.policy()
+        timeout = control.state.timeout
+        active = list(policy.active_peers) if policy.active_peers is not None \
+            else list(range(n))
+        a = len(active)
+        w = list(policy.shard_weights) if policy.shard_weights is not None \
+            else [1] * a
+        dead = set(policy.dead_links)
+        i = max(fixed_incast if fixed_incast is not None else policy.incast, 1)
+        unit = nbytes / max(sum(w), 1)
+        sizes = [wk * unit for wk in w]
+        w_max = max(w)
+        full = [k for k in range(a) if w[k] == w_max]
+        half_rounds = math.ceil(max(a - 1, 1) / i)
+        x_reb = 0.05            # fixed slack over the full cohort's marker
+        total_t = 0.0
+        lost_bytes = total_bytes = 0.0          # every scheduled byte
+        full_lost = full_total = 0.0            # full-weight cohort only
+        contrib = np.array(sizes, dtype=np.float64)   # own shard: always in
+        peer_times = np.zeros(n)
+        stage_times, to_flags, frac_recv = [], [], []
+        for stage in range(2):
+            for g in range(half_rounds):
+                group = range(g * i + 1, min((g + 1) * i, a - 1) + 1)
+                wire = np.zeros(a)      # bytes on each position's link
+                data = np.zeros(a)      # gradient bytes each position ships
+                for r in group:
+                    for k in range(a):
+                        dst = (k + r) % a
+                        b = sizes[dst] if stage == 0 else sizes[k]
+                        data[k] += b
+                        wire[k] += 2.0 * b if (active[k], active[dst]) in dead \
+                            else b
+                nb = np.zeros(n)
+                nb[active] = wire
+                times, lost = self.net.ubt_ms_vec(nb, self.f)
+                if self.pace:
+                    times = times + self.paced_round_delay_s(
+                        float(np.mean(wire)), a) * 1e3
+                peer_times += times
+                act_times = times[active]
+                act_lost = lost[active]
+                t99_full = float(np.max(act_times[full])) * 0.99
+                deadline = min(timeout.round_deadline(last_pctile_seen=False),
+                               t99_full * (1.0 + x_reb))
+                if control.state.budget is not None:
+                    deadline = control.state.budget.stretch(deadline)
+                arrived = np.where(
+                    act_times <= deadline, 1.0 - act_lost,
+                    np.minimum(1.0 - act_lost,
+                               deadline / np.maximum(act_times, 1e-9)))
+                total_t += float(min(np.max(act_times[full]), deadline))
+                lost_bytes += float(np.sum((1.0 - arrived) * data))
+                total_bytes += float(np.sum(data))
+                full_lost += float(np.sum((1.0 - arrived[full])
+                                          * data[full]))
+                full_total += float(np.sum(data[full]))
+                if stage == 0:
+                    contrib += arrived * data
+                stage_times.append(float(min(np.max(act_times[full]),
+                                             deadline)))
+                to_flags.append(bool(np.any(act_times[full] > deadline)))
+                frac_recv.append(float(np.mean(arrived[full])))
+        by_peer = np.zeros(n)
+        by_peer[active] = contrib / max(nbytes, 1e-12)
+        control.observe(StepTelemetry(
+            step=control.steps,
+            loss_frac=full_lost / max(full_total, 1e-12),
+            timed_out=any(to_flags), peer_stage_times=tuple(peer_times),
+            round_times=tuple(stage_times), round_timed_out=tuple(to_flags),
+            round_frac_received=tuple(frac_recv)))
+        return GAResult(total_t, lost_bytes / max(total_bytes, 1e-12),
+                        len(stage_times),
+                        peer_contrib=tuple(float(c) for c in by_peer))
+
     def optireduce(self, nbytes: float, control: ControlPlane, *,
                    fixed_incast: int | None = None) -> GAResult:
         """One UBT gradient aggregation under the control plane's policy:
@@ -389,9 +505,15 @@ class GASimulator:
         ejected straggler is neither sent to nor waited on — its share of
         the gradient is excluded, not late), the deadline rule uses the
         policy's x%, and the step's telemetry (per-peer times for the
-        detector, per-round stage times for the timeout) feeds back in."""
+        detector, per-round stage times for the timeout) feeds back in.
+        A policy carrying shard weights or dead links routes to the
+        weighted schedule (:meth:`_optireduce_weighted`); the uniform path
+        below is byte-for-byte the seed behavior."""
         n = self.n
         policy = control.policy()
+        if policy.shard_weights is not None or policy.dead_links:
+            return self._optireduce_weighted(nbytes, control,
+                                             fixed_incast=fixed_incast)
         timeout = control.state.timeout
         active = list(policy.active_peers) if policy.active_peers is not None \
             else list(range(n))
@@ -502,15 +624,19 @@ def simulate_job(strategy: str, *, n_nodes: int, bucket_bytes: float,
                  n_steps: int, env: NetworkModel,
                  compute_ms: float = 50.0, overlap: float = 0.5,
                  incast_dynamic: bool = False, incast: int = 1,
-                 eject_stragglers: bool = False, pace: bool = False,
+                 eject_stragglers: bool = False, rebalance: bool = False,
+                 pace: bool = False,
                  control: ControlPlane | None = None) -> dict:
     """Wall-clock of a training job: per step, compute plus the exposed
     (non-overlapped) fraction of GA time (Fig 1 communication hiding).
 
     ``eject_stragglers`` arms the control plane's straggler detector (the
-    degraded-participation loop); ``pace`` puts the Timely controller into
-    the UBT flow path.  Pass ``control`` to share/inspect the controller
-    state (e.g. the detector's ejection history) after the run.
+    degraded-participation loop); ``rebalance`` arms straggler-proportional
+    shard weights instead (a slow peer keeps a smaller slice — combine
+    with ``eject_stragglers=False`` to never eject); ``pace`` puts the
+    Timely controller into the UBT flow path.  Pass ``control`` to
+    share/inspect the controller state (e.g. the detector's ejection
+    history) after the run.
     """
     strategy = timing_family(strategy)
     sim = GASimulator(env, n_nodes, LIBRARY_FACTOR.get(strategy, 1.0),
@@ -518,9 +644,11 @@ def simulate_job(strategy: str, *, n_nodes: int, bucket_bytes: float,
     if strategy == "optireduce":
         control = sim.warmup(bucket_bytes, control=control,
                              detect_stragglers=eject_stragglers,
+                             rebalance=rebalance,
                              incast={"i_init": incast})
     total = 0.0
     drops, ga_times = [], []
+    contribs = []
     for _ in range(n_steps):
         if strategy == "optireduce":
             r = sim.optireduce(bucket_bytes, control,
@@ -533,6 +661,8 @@ def simulate_job(strategy: str, *, n_nodes: int, bucket_bytes: float,
         total += compute_ms + max(0.0, r.time_ms * (1 - overlap))
         drops.append(r.drop_frac)
         ga_times.append(r.time_ms)
+        if r.peer_contrib is not None:
+            contribs.append(r.peer_contrib)
     out = {"total_ms": total, "mean_ga_ms": float(np.mean(ga_times)),
            "p50_ga_ms": float(np.percentile(ga_times, 50)),
            "p99_ga_ms": float(np.percentile(ga_times, 99)),
@@ -542,4 +672,9 @@ def simulate_job(strategy: str, *, n_nodes: int, bucket_bytes: float,
         out["active_peers"] = list(active if active is not None
                                    else range(n_nodes))
         out["ejected_peers"] = list(control.detector.ejected_peers())
+        if rebalance:
+            out["shard_weights"] = list(control.detector.weights())
+        if contribs:
+            out["mean_contrib"] = [float(c) for c in
+                                   np.mean(np.asarray(contribs), axis=0)]
     return out

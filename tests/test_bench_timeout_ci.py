@@ -42,7 +42,12 @@ def test_bench_timeout_quick_schema(tmp_path):
                 "timeout/time_reduction_pct",
                 "timeout/wait_for_all_median_ms",
                 "timeout/ejection_median_ms", "timeout/ejection_vs_wait_pct",
-                "timeout/ejection_drop_frac"):
+                "timeout/ejection_drop_frac",
+                "timeout/rebalance_median_ms",
+                "timeout/rebalance_eject_median_ms",
+                "timeout/rebalance_wait_median_ms",
+                "timeout/rebalance_vs_eject_pct",
+                "timeout/rebalance_contrib_frac"):
         assert key in keys, key
     # every median row carries its dispersion sibling (run.py schema)
     for key in keys:
@@ -58,6 +63,16 @@ def test_bench_timeout_quick_schema(tmp_path):
     assert payload["timeout/ejection_median_ms"]["value"] < \
         payload["timeout/wait_for_all_median_ms"]["value"]
     assert 0.0 <= payload["timeout/ejection_drop_frac"]["value"] < 0.01
+
+    # rebalance ablation (ISSUE 8 acceptance): straggler-proportional
+    # shards land within 15% of ejection's median while the straggler
+    # keeps a nonzero gradient contribution (ejection zeroes it)
+    reb = payload["timeout/rebalance_median_ms"]["value"]
+    ej = payload["timeout/rebalance_eject_median_ms"]["value"]
+    wait = payload["timeout/rebalance_wait_median_ms"]["value"]
+    assert reb <= 1.15 * ej, (reb, ej)
+    assert reb < wait, (reb, wait)
+    assert payload["timeout/rebalance_contrib_frac"]["value"] > 0.05
 
     # the checked-in baseline at the repo root was NOT rewritten
     repo_json = os.path.join(_REPO, "BENCH_timeout.json")

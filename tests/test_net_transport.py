@@ -364,3 +364,99 @@ def test_burst_wire_drops_are_bursty_order_free_and_on_rate():
     ctrl = PacketHeader(kind=KIND_CTRL, sender=0, step=0, bucket=0,
                         round=1, seq=0, n_seq=1)
     assert not fn(0, 1, ctrl)
+
+
+# ------------------------------------------------- ISSUE 8: link rewiring
+def test_dead_link_relay_completes_bitwise_without_ejection():
+    """A scripted dead directed edge: with ``dead_links`` configured the
+    step completes through a two-hop relay — bitwise-identical to the
+    fault-free baseline, zero observed loss, neither endpoint ejected."""
+    from repro.net import KIND_DATA1, KIND_DATA2
+
+    buckets = _buckets(2048)
+    base, _ = HostRing(N, _cfg(), backend="inproc").allreduce(buckets, KEY)
+
+    def kill(src, dst, hdr):
+        return src == 2 and dst == 0 and hdr.kind in (KIND_DATA1, KIND_DATA2)
+
+    ring = HostRing(N, _cfg(), backend="inproc", drop_fn=kill,
+                    dead_links=((2, 0),))
+    out, tel = ring.allreduce(buckets, KEY)
+    np.testing.assert_array_equal(out, base)
+    assert tel.loss_frac == 0.0
+    # relayed traffic never crosses the dead physical edge, so the edge
+    # is not re-reported as a fault (it is already being routed around)
+    assert tel.dead_link_events == ()
+
+
+def test_link_fault_detected_then_rerouted_closed_loop():
+    """The full loop: an *untold* link fault shows up as a dead_link_event,
+    the ControlPlane's patience turns it into SyncPolicy.dead_links, and a
+    ring rebuilt under that policy completes the step bitwise-clean —
+    without ejecting either endpoint."""
+    from repro.net import KIND_DATA1, KIND_DATA2
+
+    buckets = _buckets(2048)
+    base, _ = HostRing(N, _cfg(), backend="inproc").allreduce(buckets, KEY)
+
+    def kill(src, dst, hdr):
+        return src == 2 and dst == 0 and hdr.kind in (KIND_DATA1, KIND_DATA2)
+
+    control = ControlPlane.create(n_nodes=N, link_patience=2)
+    faulty = HostRing(N, _cfg(), backend="inproc", drop_fn=kill)
+    for step in range(2):
+        _, tel = faulty.allreduce(buckets, KEY, step=step)
+        assert (2, 0) in tel.dead_link_events      # receiver 0 flags src 2
+        assert tel.loss_frac > 0.0                 # the fault really bit
+        control.observe(tel)
+    dead = control.policy().dead_links
+    assert dead == ((2, 0),)
+    # recompile under the policy: same fault, now rerouted
+    healed = HostRing(N, _cfg(), backend="inproc", drop_fn=kill,
+                      dead_links=dead)
+    out, tel = healed.allreduce(buckets, KEY, step=2)
+    np.testing.assert_array_equal(out, base)
+    assert tel.loss_frac == 0.0 and tel.dead_link_events == ()
+    # the point of rewiring: both endpoints stay in the job
+    assert control.detector.ejected_peers() == ()
+
+
+# ---------------------------------------------- ISSUE 8: weighted shards
+def test_weighted_wire_bitwise_matches_uniform():
+    """Straggler-proportional shard weights over the wire: same bytes, a
+    different ownership split — bitwise-identical to the uniform exchange
+    at zero drops (the same masked-mean row-order argument as in-JAX)."""
+    buckets = _buckets(2048)
+    base, _ = HostRing(N, _cfg(), backend="inproc").allreduce(buckets, KEY)
+    ring = HostRing(N, _cfg(), backend="inproc", shard_weights=(2, 2, 1, 2))
+    out, tel = ring.allreduce(buckets, KEY)
+    np.testing.assert_array_equal(out, base)
+    assert tel.loss_frac == 0.0
+    # a uniform tuple normalizes away entirely (the parity discipline:
+    # full weight everywhere is *the same policy* as no weights)
+    uniform = HostRing(N, _cfg(), backend="inproc",
+                       shard_weights=(3, 3, 3, 3))
+    assert all(p.shard_weights is None for p in uniform.peers)
+
+
+def test_weighted_wire_with_dead_link_still_bitwise():
+    from repro.net import KIND_DATA1, KIND_DATA2
+
+    buckets = _buckets(2048)
+    base, _ = HostRing(N, _cfg(), backend="inproc").allreduce(buckets, KEY)
+
+    def kill(src, dst, hdr):
+        return src == 1 and dst == 3 and hdr.kind in (KIND_DATA1, KIND_DATA2)
+
+    ring = HostRing(N, _cfg(), backend="inproc", drop_fn=kill,
+                    shard_weights=(2, 1, 2, 2), dead_links=((1, 3),))
+    out, tel = ring.allreduce(buckets, KEY)
+    np.testing.assert_array_equal(out, base)
+    assert tel.loss_frac == 0.0
+
+
+def test_weighted_wire_rejects_quantized_codec():
+    # HTQuant grids are keyed on uniform shard geometry — must refuse
+    with pytest.raises(ValueError, match="linear"):
+        HostRing(N, _cfg(strategy="optireduce_q"), backend="inproc",
+                 shard_weights=(2, 2, 1, 2))

@@ -116,7 +116,8 @@ for item in %(strategies)r:
     cfg = OptiReduceConfig(strategy=strat, drop_rate=dr, hadamard_block=256,
                            use_kernels=uk, quant_bits=8, incast=3)
     policy = SyncPolicy(use_hadamard=cfg.use_hadamard, incast=cfg.incast,
-                        active_peers=tuple(range(8)))
+                        active_peers=tuple(range(8)),
+                        shard_weights=(4,) * 8, dead_links=())
     ref, ref_frac = run(sync_pytree, cfg)
     out, out_frac = run(sync_pytree, policy.apply(cfg))
     for k in tree:
@@ -182,6 +183,65 @@ sub_perms = _n_perms(OptiReduceConfig(strategy="optireduce_rounds",
 assert full_perms == 14, full_perms              # 2*(8-1)
 assert sub_perms == 11, sub_perms                # 2*(6-1) + 1 graft
 print("PARTICIPATION_SCHEDULE OK %%d -> %%d" %% (full_perms, sub_perms))
+
+# ---- weighted shards: straggler-proportional ownership, same bits --------
+# a non-uniform plan re-cuts the bucket into weight-proportional contiguous
+# slices; at drop 0 the masked mean reduces the SAME elements in the SAME
+# row order, so both rounds strategies must stay bitwise vs uniform
+for strat in ("tar_rounds", "optireduce_rounds"):
+    cfg0 = OptiReduceConfig(strategy=strat, drop_rate=0.0,
+                            hadamard_block=256, incast=3)
+    ref, _ = run(sync_pytree, cfg0)
+    out, _ = run(sync_pytree,
+                 dataclasses.replace(cfg0, shard_weights=(2,) * 7 + (1,)))
+    for k in tree:
+        assert np.array_equal(np.asarray(ref[k]), np.asarray(out[k])), \
+            ("weighted", strat, k)
+    print("WEIGHTED %%s OK" %% strat)
+
+# weighted composes with a degraded active set: 6 peers, the last one at
+# half weight, distinct per-node gradients — replicas bitwise-identical and
+# the synced value is exactly the mean over the ACTIVE contributions
+cfgws = OptiReduceConfig(strategy="optireduce_rounds", drop_rate=0.0,
+                         hadamard_block=256, incast=3, active_peers=ACTIVE,
+                         shard_weights=(2, 2, 2, 2, 2, 1))
+outs, _ = run_scaled(cfgws)
+outs = np.asarray(outs)
+assert np.array_equal(outs, np.broadcast_to(outs[0:1], outs.shape)), \
+    "weighted subset replica divergence"
+errw = np.max(np.abs(outs[0] - expected)) / np.max(np.abs(expected))
+assert errw < 1e-4, errw
+print("WEIGHTED_SUBSET OK err=%%.2e" %% errw)
+
+# ---- dead-link rewiring: relayed rounds, same bits -----------------------
+# a dead directed edge reroutes that round's transfer through a 2-hop relay
+# instead of ejecting the endpoint; unnamed ppermute destinations receive
+# zeros and recv = direct + relayed, so the received matrix — and with it
+# the arrival-mask PRNG stream — is unchanged: bitwise even UNDER drops
+cfg0 = OptiReduceConfig(strategy="optireduce_rounds", drop_rate=0.1,
+                        hadamard_block=256, incast=3)
+ref, ref_frac = run(sync_pytree, cfg0)
+out, out_frac = run(sync_pytree,
+                    dataclasses.replace(cfg0, dead_links=((2, 5),)))
+for k in tree:
+    assert np.array_equal(np.asarray(ref[k]), np.asarray(out[k])), \
+        ("deadlink", k)
+np.testing.assert_allclose(float(ref_frac), float(out_frac), atol=1e-6)
+# ...and composes with weighted shards (pinned to weighted-only bits)
+cfgw1 = dataclasses.replace(cfg0, shard_weights=(2,) * 7 + (1,))
+refw, _ = run(sync_pytree, cfgw1)
+outwd, _ = run(sync_pytree,
+               dataclasses.replace(cfgw1, dead_links=((2, 5),)))
+for k in tree:
+    assert np.array_equal(np.asarray(refw[k]), np.asarray(outwd[k])), \
+        ("weighted+deadlink", k)
+# the relay is really in the lowered schedule: 2 extra permute sites per
+# stage (src->relay, relay->dst) on top of the 2(N-1) round permutes
+dead_perms = _n_perms(OptiReduceConfig(strategy="optireduce_rounds",
+                                       incast=1, hadamard_block=256,
+                                       dead_links=((2, 5),)))
+assert dead_perms == 18, dead_perms              # 14 + 2 relays * 2 stages
+print("DEADLINK OK %%d perms" %% dead_perms)
 
 # ---- 2D (pod, data) reduce-scatter: cross-pod replica consistency --------
 mesh2 = make_mesh((2, 4), ("pod", "data"))
@@ -271,10 +331,33 @@ def test_pipelined_skew_deeper_than_bucket_count(parity_output, strategy):
 def test_policy_full_set_is_bitwise_noop(parity_output, strategy, drop_rate,
                                          use_kernels):
     """Acceptance: policy-driven dispatch with a full active-peer set (no
-    stragglers detected) keeps every registered strategy bitwise-identical
-    to its current output — SyncPolicy.apply naming all 8 peers normalizes
-    to the exact full-participation trace."""
+    stragglers detected), UNIFORM shard weights, and no dead links keeps
+    every registered strategy bitwise-identical to its current output —
+    SyncPolicy.apply naming all 8 peers at equal weight normalizes to the
+    exact full-participation uniform-shard trace."""
     assert f"POLICY_FULLSET {strategy} OK" in parity_output, parity_output
+
+
+@pytest.mark.parity
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", ["tar_rounds", "optireduce_rounds"])
+def test_weighted_shards_bitwise(parity_output, strategy):
+    """Straggler-proportional shard weights on the rounds schedules: a
+    non-uniform plan (one peer at half weight) re-cuts ownership but stays
+    bitwise-identical to the uniform exchange at zero drops, and composes
+    with a degraded active set (replica-consistent, exact active mean)."""
+    assert f"WEIGHTED {strategy} OK" in parity_output, parity_output
+    assert "WEIGHTED_SUBSET OK" in parity_output, parity_output
+
+
+@pytest.mark.parity
+@pytest.mark.slow
+def test_dead_link_rewiring_bitwise(parity_output):
+    """Link-fault rewiring: a dead (2, 5) edge relays through a live peer
+    — bitwise-identical output even under transport drops (alone and
+    stacked on weighted shards), with the 2-hop relay visible as 2 extra
+    collective-permute sites per stage in the lowered HLO (14 -> 18)."""
+    assert "DEADLINK OK 18 perms" in parity_output, parity_output
 
 
 @pytest.mark.parity

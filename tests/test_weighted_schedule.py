@@ -1,0 +1,151 @@
+"""Property tests for the weighted-shard / link-rewiring schedule pieces
+(repro/core/tar.py: ``shard_plan`` / ``weighted_rows`` / ``weighted_flat``
+/ ``ring_order`` / ``relay_via``).
+
+The load-bearing invariants: a shard plan partitions the padded bucket
+into exclusive, contiguous, block-aligned slices that sum to exactly the
+bucket (no element owned twice, none orphaned); weighted_rows/weighted_flat
+are inverses; a uniform plan degenerates to the ``reshape(n, s)`` geometry
+the uniform schedules use (the bitwise-parity precondition); and
+``ring_order`` returns a permutation of the active set whose consecutive
+hops (wrap included) avoid every dead directed edge — or the *identity*
+order when the current hops already do (the parity fast path).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, strategies as st
+
+from repro.core import tar as tar_lib
+
+
+def _weights(seed: int, n: int, lo: int = 1, hi: int = 5) -> tuple:
+    rng = np.random.default_rng(seed)
+    return tuple(int(w) for w in rng.integers(lo, hi + 1, size=n))
+
+
+# ------------------------------------------------------------- shard_plan
+@given(st.integers(1, 9000), st.integers(2, 8), st.integers(1, 64),
+       st.integers(0, 10_000))
+def test_shard_plan_partitions_bucket(length, n, block, seed):
+    """Sizes sum to the padded length, ownership is exclusive/contiguous,
+    every boundary is block-aligned, and padding never exceeds a quantum."""
+    w = _weights(seed, n)
+    plan = tar_lib.shard_plan(length, w, block)
+    total = sum(w)
+    assert sum(plan.sizes) == plan.padded
+    assert plan.padded >= length
+    assert plan.padded - length < total * block       # minimal padding
+    assert plan.padded % (total * block) == 0
+    assert plan.s_max == max(plan.sizes)
+    off = 0
+    unit = plan.padded // total
+    assert unit % block == 0                          # blocks never straddle
+    for k in range(n):
+        assert plan.offsets[k] == off                 # contiguous, exclusive
+        assert plan.sizes[k] == w[k] * unit           # weight-proportional
+        assert plan.sizes[k] % block == 0
+        off += plan.sizes[k]
+    assert off == plan.padded
+
+
+@given(st.integers(2, 8), st.integers(1, 4), st.integers(16, 4096))
+def test_uniform_plan_is_reshape_geometry(n, block, length):
+    """All-equal weights produce exactly the uniform ``reshape(n, s)``
+    slicing — the precondition for uniform-weights bitwise parity."""
+    plan = tar_lib.shard_plan(length, (3,) * n, block)
+    s = plan.padded // n
+    assert plan.sizes == (s,) * n
+    assert plan.s_max == s
+    assert plan.offsets == tuple(k * s for k in range(n))
+    x = np.arange(plan.padded, dtype=np.float32)
+    rows = np.asarray(tar_lib.weighted_rows(x, plan))
+    assert np.array_equal(rows, x.reshape(n, s))
+
+
+@given(st.integers(1, 5000), st.integers(2, 7), st.integers(0, 10_000))
+def test_weighted_rows_flat_roundtrip(length, n, seed):
+    w = _weights(seed, n)
+    plan = tar_lib.shard_plan(length, w, block=4)
+    x = np.random.default_rng(seed).normal(
+        size=plan.padded).astype(np.float32)
+    rows = tar_lib.weighted_rows(x, plan)
+    assert rows.shape == (n, plan.s_max)
+    # the zero-pad tail really is zero (a relay/mean can read it safely)
+    for k, size in enumerate(plan.sizes):
+        assert not np.any(np.asarray(rows)[k, size:])
+    back = np.asarray(tar_lib.weighted_flat(rows, plan))
+    assert np.array_equal(back, x)
+
+
+def test_shard_plan_rejects_bad_weights():
+    with pytest.raises(ValueError):
+        tar_lib.shard_plan(100, ())
+    with pytest.raises(ValueError):
+        tar_lib.shard_plan(100, (2, 0, 1))
+
+
+# ------------------------------------------------------------- ring_order
+@given(st.integers(3, 8), st.integers(0, 10_000))
+def test_ring_order_avoids_dead_edges(n, seed):
+    """The rewired ring is a permutation of the active set visiting every
+    peer exactly once, and no hop (wrap included) crosses a dead edge."""
+    rng = np.random.default_rng(seed)
+    active = tuple(range(n))
+    # kill one or two of the current ring hops so a rewire is forced
+    dead = {(int(i), int((i + 1) % n))
+            for i in rng.choice(n, size=min(2, n - 2), replace=False)}
+    order = tar_lib.ring_order(active, tuple(dead))
+    assert sorted(order) == sorted(active)            # visits each once
+    a = len(order)
+    for j in range(a):
+        hop = (order[j], order[(j + 1) % a])
+        assert hop not in dead, hop
+
+
+@given(st.integers(2, 8))
+def test_ring_order_identity_without_dead_hops(n):
+    """No dead edge on the current hops -> the exact input order comes
+    back (the bitwise-parity fast path), including for dead edges that
+    exist but never sit on a ring hop."""
+    active = tuple(range(n))
+    assert tar_lib.ring_order(active, ()) is not None
+    assert tar_lib.ring_order(active, ()) == active
+    if n >= 4:
+        # (0 -> 2) is never a distance-1 hop of the natural order
+        assert tar_lib.ring_order(active, ((0, 2),)) == active
+
+
+def test_ring_order_subset_and_arbitrary_order():
+    active = (1, 3, 4, 6)
+    order = tar_lib.ring_order(active, ((3, 4),))
+    assert sorted(order) == sorted(active)
+    hops = {(order[j], order[(j + 1) % 4]) for j in range(4)}
+    assert (3, 4) not in hops
+
+
+def test_ring_order_raises_when_isolated():
+    # every outgoing edge of peer 0 is dead: no Hamiltonian cycle exists
+    dead = tuple((0, j) for j in range(1, 4))
+    with pytest.raises(ValueError):
+        tar_lib.ring_order((0, 1, 2, 3), dead)
+
+
+# -------------------------------------------------------------- relay_via
+@given(st.integers(3, 8), st.integers(0, 10_000))
+def test_relay_via_two_live_hops(n, seed):
+    rng = np.random.default_rng(seed)
+    src, dst = (int(x) for x in rng.choice(n, size=2, replace=False))
+    dead = ((src, dst),)
+    m = tar_lib.relay_via(src, dst, tuple(range(n)), dead)
+    assert m not in (src, dst)
+    assert (src, m) not in dead and (m, dst) not in dead
+
+
+def test_relay_via_raises_when_pair_isolated():
+    # 3 peers, and the only candidate relay's inbound hop is dead too
+    with pytest.raises(ValueError):
+        tar_lib.relay_via(0, 1, (0, 1, 2), ((0, 1), (0, 2)))
