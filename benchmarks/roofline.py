@@ -13,6 +13,14 @@ MODEL_FLOPS = 6*N*D (train; N_active for MoE) or 2*N*D (decode/prefill
 forward) is reported against HLO FLOPs to expose remat/dispatch overhead.
 
   python -m benchmarks.roofline results/dryrun_single_pod.json [--md]
+
+``--kernels`` adds the compiled-codec-kernel arithmetic-intensity points
+(no dry-run JSON needed): FLOPs/HBM-byte of the fused one-pass encode
+(ht_quant) and decode (dequant_masked_mean) kernels vs the composed
+multi-pass forms, against the HBM ridge point PEAK_FLOPS/HBM_BW. Points
+left of the ridge are bandwidth-bound — there the fused kernels' fewer
+HBM passes translate directly into wall-clock, which is what the
+``*_compiled_steady_us`` rows of BENCH_kernels.json measure on a TPU box.
 """
 from __future__ import annotations
 
@@ -69,6 +77,49 @@ def analyze(rec: dict, chips: int) -> dict | None:
     }
 
 
+def codec_kernel_points(rows: int = 4096, n: int = 1024,
+                        n_peers: int = 8) -> list[dict]:
+    """Arithmetic intensity (FLOPs per HBM byte) of the codec kernels.
+
+    The fused encode kernel (ht_quant) streams x and noise through VMEM
+    once and writes uint8 codes; the composed form materializes the
+    rotated intermediate and re-reads it for amax and quantization. FLOPs
+    are identical either way (the blocked FWHT is two dot_generals over
+    the a*b factorization, 2*rows*n*(a+b) with a=b=sqrt(n); the
+    elementwise quant is ~6/elt), so the intensity ratio is purely the
+    HBM-pass ratio — the quantity PERF.md's pass tables count.
+    """
+    a = b = int(n ** 0.5)
+    f32 = 4
+    fwht_flops = 2.0 * rows * n * (a + b)
+    quant_flops = 6.0 * rows * n
+    enc_flops = fwht_flops + quant_flops
+    # fused: read x + noise (+ per-row lo/step, negligible), write codes
+    enc_fused_bytes = rows * n * (2 * f32 + 1)
+    # composed: fwht r+w, amax re-read, quant reads y + noise, writes codes
+    enc_composed_bytes = rows * n * (6 * f32 + 1)
+    # decode: dequant is 2 FLOPs/elt, masked mean ~3/elt over n_peers rows
+    dec_flops = 5.0 * n_peers * rows * n
+    dec_fused_bytes = n_peers * rows * n * (1 + f32) + rows * n * f32
+    dec_composed_bytes = (n_peers * rows * n * (1 + 2 * f32 + f32)
+                          + rows * n * f32)
+    pts = []
+    for name, flops, nbytes in (
+            ("ht_quant_fused", enc_flops, enc_fused_bytes),
+            ("ht_quant_composed", enc_flops, enc_composed_bytes),
+            ("dequant_mean_fused", dec_flops, dec_fused_bytes),
+            ("dequant_mean_composed", dec_flops, dec_composed_bytes)):
+        ai = flops / nbytes
+        pts.append({
+            "kernel": name,
+            "flops_per_byte": ai,
+            "ridge_flops_per_byte": PEAK_FLOPS / HBM_BW,
+            "bound": "memory" if ai < PEAK_FLOPS / HBM_BW else "compute",
+            "hbm_bound_us": nbytes / HBM_BW * 1e6,
+        })
+    return pts
+
+
 MOVE_HINTS = {
     "compute": "raise MXU utilization: bigger microbatch / fuse small ops "
                "/ drop dead padded-head FLOPs",
@@ -82,9 +133,30 @@ MOVE_HINTS = {
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("json", nargs="+")
+    ap.add_argument("json", nargs="*")
     ap.add_argument("--md", action="store_true")
+    ap.add_argument("--kernels", action="store_true",
+                    help="print codec-kernel arithmetic-intensity points")
     args = ap.parse_args(argv)
+    if args.kernels:
+        ridge = PEAK_FLOPS / HBM_BW
+        if args.md:
+            print(f"| kernel | FLOPs/byte | ridge {ridge:.0f} | bound "
+                  f"| HBM-bound us |")
+            print("|---|---|---|---|---|")
+        for p in codec_kernel_points():
+            if args.md:
+                print(f"| {p['kernel']} | {p['flops_per_byte']:.1f} | "
+                      f"{p['ridge_flops_per_byte']:.0f} | {p['bound']} | "
+                      f"{p['hbm_bound_us']:.1f} |")
+            else:
+                print(f"{p['kernel']},{p['flops_per_byte']:.2f},"
+                      f"{p['ridge_flops_per_byte']:.1f},{p['bound']},"
+                      f"{p['hbm_bound_us']:.2f}")
+        if not args.json:
+            return 0
+    elif not args.json:
+        ap.error("need dry-run JSON path(s) or --kernels")
     rows = []
     for path in args.json:
         recs = json.load(open(path))

@@ -41,7 +41,8 @@ MODULES = [
 
 # rows from these modules are serialized to BENCH_<name>.json at the repo
 # root so the perf trajectory is machine-readable across PRs (see PERF.md)
-JSON_MODULES = {"bench_pipeline": "BENCH_pipeline.json",
+JSON_MODULES = {"bench_kernels": "BENCH_kernels.json",
+                "bench_pipeline": "BENCH_pipeline.json",
                 "bench_timeout": "BENCH_timeout.json",
                 "bench_transport": "BENCH_transport.json",
                 "bench_recovery": "BENCH_recovery.json"}

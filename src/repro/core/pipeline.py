@@ -860,16 +860,36 @@ class TarTopology(Topology):
             # pad so the bucket cuts into sum(weights) block-aligned units
             n_shards = sum(weights)
         x, _ = tar_lib.pad_for_tar(bucket, n_shards, codec.block(cfg))
+        if hasattr(codec, "local_amax"):
+            # split encode (quantizing codec): emit only the pre-collective
+            # half here; the grid pmax and the quantize ride the exchange
+            # stage, so in the pipelined schedule bucket k's amax collective
+            # overlaps bucket k-1's shard exchange instead of serializing
+            # after this bucket's rotation.  (StaleFill never wraps a
+            # non-linear codec, so local_amax is a safe discriminator.)
+            x1, amax = codec.local_amax(x, ctx)
+            return (x1, None, None, None, amax)
         enc = codec.encode(x, ctx, cfg.data_axis)
         # 4th slot: the re-encoded stale bucket a recovery codec may attach
         # (None otherwise — an empty pytree leaf, so the disabled path's
-        # scan carries and HLO are unchanged)
-        return (enc.data, enc.lo, enc.step, enc.stale)
+        # scan carries and HLO are unchanged); 5th slot: the pre-pmax amax
+        # of a split (quantizing) encode
+        return (enc.data, enc.lo, enc.step, enc.stale, None)
 
     def exchange_stage(self, state, transport, codec, ctx):
-        data, lo, step, stale = state
+        data, lo, step, stale, amax = state
         cfg = ctx.cfg
         axis = cfg.data_axis
+        if amax is not None:
+            # deferred half of the split encode: share the grids across the
+            # whole DP group (same collective order as Codec.encode keeps
+            # the math bitwise-identical), then quantize
+            amax = jax.lax.pmax(amax, axis)
+            for extra in ctx.data_axes():
+                if extra != axis:
+                    amax = jax.lax.pmax(amax, extra)
+            enc_q = codec.encode_given_amax(data, amax, ctx)
+            data, lo, step = enc_q.data, enc_q.lo, enc_q.step
         n = compat.axis_size(axis)
         active, n_shards, weights, dead = self._participation(cfg, n)
         enc = Encoded(data, lo=lo, step=step, stale=stale)
@@ -929,10 +949,10 @@ class TarTopology(Topology):
                 gathered = tar_lib.graft_inactive(gathered, axis, active)
         else:
             gathered = jax.lax.all_gather(wire, axis, axis=0, tiled=True)
-        return (gathered, lo, step, None)        # stale consumed in reduce
+        return (gathered, lo, step, None, None)  # stale consumed in reduce
 
     def decode_stage(self, state, length, transport, codec, ctx):
-        data, lo, step, _ = state
+        data, lo, step, _, _ = state
         # only the quantization grids survive the exchange; data=None marks
         # the stage-1 encode output as unavailable at decode time
         out = codec.decode_gathered(data, Encoded(None, lo=lo, step=step),

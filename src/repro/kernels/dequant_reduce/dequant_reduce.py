@@ -7,12 +7,17 @@ program loads an (N, TILE) slab of codes (+ mask), dequantizes in VMEM with
 the per-column grid rows, and emits the compensated mean — one HBM read per
 operand byte, no (N, S) float32 ever materialized.
 
+The kernel is *double-buffered* (kernels/dma.py): operands live in ``ANY``
+(HBM) memory space and each grid iteration's column slab is streamed into
+two-slot revolving VMEM buffers with explicit async copies, so slab i+1's
+HBM loads overlap slab i's dequant + reduction.
+
 ``lo``/``step`` arrive pre-broadcast as (1, S) rows (a per-Hadamard-block
 value repeated ``block`` times — S fp32, negligible next to N*S codes), so
 tile boundaries need no alignment with quantization blocks.
 
-VMEM per program: N*TILE (codes u8) + N*TILE*4 (mask) + 2*TILE*4 (grids);
-N=16, TILE=2048 -> ~180 KB.
+VMEM per program: 2 slots of N*TILE (codes u8) + N*TILE*4 (mask) + 2*TILE*4
+(grids); N=16, TILE=2048 -> ~360 KB.
 """
 from __future__ import annotations
 
@@ -21,35 +26,72 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import runtime
+from repro.kernels.dma import SEQUENTIAL_GRID, col_loads, revolving_pipeline
 from repro.kernels.masked_sum.masked_sum import compensated_mean_cols
 
 
-def _dequant_masked_mean_kernel(c_ref, lo_ref, step_ref, m_ref, o_ref):
-    x = c_ref[...].astype(jnp.float32)          # (N, TILE)
-    x = x * step_ref[...] + lo_ref[...]         # grids broadcast over rows
-    m = m_ref[...].astype(jnp.float32)          # (N, TILE)
-    out = compensated_mean_cols(x, m)
-    o_ref[...] = out[None, :].astype(o_ref.dtype)
+def _slab_pipeline(nblk: int, streams, sem, epilogue):
+    """Two-slot revolving-buffer schedule over column slabs (kernels/dma)."""
+    revolving_pipeline(
+        nblk, functools.partial(col_loads, streams, sem), epilogue)
 
 
-def _dequant_mean_kernel(c_ref, lo_ref, step_ref, o_ref):
-    x = c_ref[...].astype(jnp.float32)
-    x = x * step_ref[...] + lo_ref[...]
-    o_ref[...] = jnp.mean(x, axis=0, keepdims=True).astype(o_ref.dtype)
+def _dequant_masked_mean_kernel(c_hbm, lo_hbm, step_hbm, m_hbm, o_ref,
+                                cbuf, lobuf, stepbuf, mbuf, sem, *,
+                                nblk: int, tile: int):
+    def epilogue(slot):
+        x = cbuf[slot].astype(jnp.float32)          # (N, TILE)
+        x = x * stepbuf[slot] + lobuf[slot]         # grids broadcast over rows
+        m = mbuf[slot].astype(jnp.float32)          # (N, TILE)
+        out = compensated_mean_cols(x, m)
+        o_ref[...] = out[None, :].astype(o_ref.dtype)
+
+    _slab_pipeline(
+        nblk,
+        [(c_hbm, cbuf, tile), (lo_hbm, lobuf, tile),
+         (step_hbm, stepbuf, tile), (m_hbm, mbuf, tile)],
+        sem, epilogue)
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def _dequant_mean_kernel(c_hbm, lo_hbm, step_hbm, o_ref,
+                         cbuf, lobuf, stepbuf, sem, *, nblk: int, tile: int):
+    def epilogue(slot):
+        x = cbuf[slot].astype(jnp.float32)
+        x = x * stepbuf[slot] + lobuf[slot]
+        o_ref[...] = jnp.mean(x, axis=0, keepdims=True).astype(o_ref.dtype)
+
+    _slab_pipeline(
+        nblk,
+        [(c_hbm, cbuf, tile), (lo_hbm, lobuf, tile), (step_hbm, stepbuf, tile)],
+        sem, epilogue)
+
+
 def dequant_masked_mean_pallas(codes: jnp.ndarray, lo_row: jnp.ndarray,
                                step_row: jnp.ndarray,
                                mask: jnp.ndarray | None = None, *,
                                tile: int = 2048,
-                               interpret: bool = True) -> jnp.ndarray:
+                               interpret: bool | None = None) -> jnp.ndarray:
     """Compensated mean of dequantized peer codes.
 
     codes: (N, S) uint; lo_row/step_row: (S,) per-column grids;
     mask: (N, S) 0/1 arrivals or None (lossless). Returns (S,) fp32.
+    ``interpret=None`` resolves the process kernel mode (kernels/runtime).
     """
+    if interpret is None:
+        interpret = runtime.interpret_flag()
+    return _dequant_masked_mean_call(codes, lo_row, step_row, mask,
+                                     tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def _dequant_masked_mean_call(codes: jnp.ndarray, lo_row: jnp.ndarray,
+                              step_row: jnp.ndarray,
+                              mask: jnp.ndarray | None = None, *,
+                              tile: int = 2048,
+                              interpret: bool = True) -> jnp.ndarray:
     if codes.ndim != 2:
         raise ValueError("codes must be (N, S)")
     n, length = codes.shape
@@ -64,22 +106,31 @@ def dequant_masked_mean_pallas(codes: jnp.ndarray, lo_row: jnp.ndarray,
         if mask is not None:
             mask = jnp.pad(mask, ((0, 0), (0, pad)))
     padded = codes.shape[1]
-    grid = (padded // t,)
+    nblk = padded // t
     col = pl.BlockSpec((1, t), lambda i: (0, i))
-    slab = pl.BlockSpec((n, t), lambda i: (0, i))
+    hbm = pl.BlockSpec(memory_space=pltpu.ANY)       # streamed manually
+    grid_bufs = [pltpu.VMEM((2, 1, t), jnp.float32),
+                 pltpu.VMEM((2, 1, t), jnp.float32)]
     if mask is None:
         kernel, args = _dequant_mean_kernel, (codes, lo2, step2)
-        in_specs = [slab, col, col]
+        in_specs = [hbm, hbm, hbm]
+        scratch = [pltpu.VMEM((2, n, t), codes.dtype), *grid_bufs,
+                   pltpu.SemaphoreType.DMA((3, 2))]
     else:
         kernel = _dequant_masked_mean_kernel
         args = (codes, lo2, step2, mask)
-        in_specs = [slab, col, col, slab]
+        in_specs = [hbm, hbm, hbm, hbm]
+        scratch = [pltpu.VMEM((2, n, t), codes.dtype), *grid_bufs,
+                   pltpu.VMEM((2, n, t), mask.dtype),
+                   pltpu.SemaphoreType.DMA((4, 2))]
     out = pl.pallas_call(
-        kernel,
-        grid=grid,
+        functools.partial(kernel, nblk=nblk, tile=t),
+        grid=(nblk,),
         in_specs=in_specs,
         out_specs=col,
         out_shape=jax.ShapeDtypeStruct((1, padded), jnp.float32),
+        scratch_shapes=scratch,
+        compiler_params=SEQUENTIAL_GRID,
         interpret=interpret,
     )(*args)
     out = out[0]

@@ -2,7 +2,10 @@
 
 Accepts the per-Hadamard-block grids the collective layer carries
 ((nblk,)-shaped ``lo``/``step``) and expands them to per-column rows before
-dispatching to the Pallas kernel or the jnp oracle.
+dispatching to the Pallas kernel or the jnp oracle.  Whether the Pallas path
+runs interpreted or Mosaic-compiled resolves through the process kernel-mode
+policy (kernels/runtime) outside the jit boundary, so the resolved flag is
+part of the cache key.
 """
 from __future__ import annotations
 
@@ -11,15 +14,30 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import runtime
+
 from .dequant_reduce import dequant_masked_mean_pallas
 from .ref import dequant_masked_mean_ref
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+@functools.partial(jax.jit, static_argnames=("block", "use_kernel", "tile",
+                                             "interpret"))
+def _dequant_masked_mean(codes: jnp.ndarray, lo: jnp.ndarray,
+                         step: jnp.ndarray,
+                         mask: jnp.ndarray | None = None, *, block: int,
+                         use_kernel: bool, tile: int,
+                         interpret: bool) -> jnp.ndarray:
+    n, length = codes.shape
+    nblk = length // block
+    lo_row = jnp.broadcast_to(lo.reshape(nblk, 1), (nblk, block)).reshape(-1)
+    step_row = jnp.broadcast_to(step.reshape(nblk, 1),
+                                (nblk, block)).reshape(-1)
+    if use_kernel:
+        return dequant_masked_mean_pallas(codes, lo_row, step_row, mask,
+                                          tile=tile, interpret=interpret)
+    return dequant_masked_mean_ref(codes, lo_row, step_row, mask)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "use_kernel", "tile"))
 def dequant_masked_mean(codes: jnp.ndarray, lo: jnp.ndarray,
                         step: jnp.ndarray,
                         mask: jnp.ndarray | None = None, *, block: int,
@@ -30,13 +48,6 @@ def dequant_masked_mean(codes: jnp.ndarray, lo: jnp.ndarray,
     codes: (N, S) with S = nblk*block; lo/step: (nblk,) or (nblk, 1)
     per-block grids; mask: (N, S) arrivals or None. Returns (S,) fp32.
     """
-    n, length = codes.shape
-    nblk = length // block
-    lo_row = jnp.broadcast_to(lo.reshape(nblk, 1), (nblk, block)).reshape(-1)
-    step_row = jnp.broadcast_to(step.reshape(nblk, 1),
-                                (nblk, block)).reshape(-1)
-    if use_kernel:
-        return dequant_masked_mean_pallas(codes, lo_row, step_row, mask,
-                                          tile=tile,
-                                          interpret=_default_interpret())
-    return dequant_masked_mean_ref(codes, lo_row, step_row, mask)
+    return _dequant_masked_mean(
+        codes, lo, step, mask, block=block, use_kernel=use_kernel, tile=tile,
+        interpret=runtime.interpret_flag() if use_kernel else True)

@@ -19,8 +19,15 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import runtime
 
 from .ref import hadamard_matrix, split_factors
+
+# one program per independent row tile: Mosaic may run grid iterations in
+# any order / in parallel windows (no cross-iteration scratch state)
+_ROW_GRID = pltpu.TPUCompilerParams(dimension_semantics=("parallel",))
 
 
 def mxu_rotate_block(x, ha, hb, rows: int, a: int, b: int):
@@ -57,20 +64,34 @@ def _fwht_sign_kernel(x_ref, sign_ref, ha_ref, hb_ref, o_ref, *, rows: int,
     o_ref[...] = y.astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("block_rows", "sign_mode", "interpret"))
 def fwht_pallas(x: jnp.ndarray,
                 sign: jnp.ndarray | None = None,
                 *,
                 block_rows: int = 64,
                 sign_mode: str = "none",
-                interpret: bool = True) -> jnp.ndarray:
+                interpret: bool | None = None) -> jnp.ndarray:
     """Orthonormal FWHT over the last axis of ``x`` (rows, n), n a power of 2.
 
     sign_mode: 'none' | 'pre' (encode: H @ (d*x)) | 'post' (decode: d * (H@y)).
     ``sign`` is required unless sign_mode == 'none'; shape (n,).
+    ``interpret=None`` resolves the process kernel mode (kernels/runtime);
+    the resolved flag is a static jit argument, so mode flips retrace.
     """
+    if interpret is None:
+        interpret = runtime.interpret_flag()
+    return _fwht_call(x, sign, block_rows=block_rows, sign_mode=sign_mode,
+                      interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_rows", "sign_mode", "interpret"))
+def _fwht_call(x: jnp.ndarray,
+               sign: jnp.ndarray | None = None,
+               *,
+               block_rows: int = 64,
+               sign_mode: str = "none",
+               interpret: bool = True) -> jnp.ndarray:
     if x.ndim != 2:
         raise ValueError("fwht_pallas expects (rows, n)")
     rows, n = x.shape
@@ -112,6 +133,7 @@ def fwht_pallas(x: jnp.ndarray,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        compiler_params=_ROW_GRID,
         interpret=interpret,
     )(*args)
     if pad:

@@ -14,13 +14,25 @@ materialized purely to be re-read twice. The fused engine never writes it:
               HBM exactly twice per input byte instead of four times and
               emits 1/4 the bytes.
 
+Both kernels are *double-buffered*: the operands sit in ``ANY`` (HBM) memory
+space and each grid iteration's row block is streamed into a two-slot
+revolving VMEM buffer with explicit async copies, so block i+1's HBM loads
+are in flight while block i rotates on the MXU — the codec kernels overlap
+their own HBM traffic instead of serializing load → rotate → store per
+block.  One shared pipeline body (``kernels/dma.py``) carries the DMA
+schedule for both kernels; the per-kernel difference is only the epilogue
+consuming the rotated block (amax-reduce vs quantize), so there is exactly
+one copy of the revolving-buffer logic and of the rotation math
+(``mxu_rotate_block``) on the Pallas side.
+
 The grids arrive as per-row (= per-Hadamard-block) ``lo``/``step`` operands
 because THC needs them pmax-shared across workers *between* the amax and the
-quantization — that collective is the only thing that cannot fuse.
+quantization — that collective now rides the pipelined schedule's exchange
+stage (core/pipeline.py) instead of splitting the encode.
 
-Each program holds (block_rows, n) of x in VMEM plus the two Kronecker
-factor matrices (H_n = H_a (x) H_b, two dense MXU matmuls — see
-kernels/fwht). VMEM per program (fp32, block_rows=64, n=4096): ~3.2 MB.
+VMEM per program (fp32, block_rows=64, n=4096): two x slots (2 MB) + two
+noise slots (2 MB, ht_quant only) + factors + the pipelined output block —
+~5 MB, well within ~16 MB VMEM.
 """
 from __future__ import annotations
 
@@ -29,7 +41,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import runtime
+from repro.kernels.dma import SEQUENTIAL_GRID, revolving_pipeline, row_loads
 from repro.kernels.fwht.fwht import mxu_rotate_block
 from repro.kernels.fwht.ref import hadamard_matrix, split_factors
 
@@ -40,23 +55,39 @@ def _rotate(x, sign, ha, hb, rows: int, a: int, b: int):
     return mxu_rotate_block(x.astype(jnp.float32) * sign, ha, hb, rows, a, b)
 
 
-def _ht_amax_kernel(x_ref, sign_ref, ha_ref, hb_ref, o_ref, *, rows: int,
-                    a: int, b: int):
-    y = _rotate(x_ref[...], sign_ref[...].astype(jnp.float32),
-                ha_ref[...], hb_ref[...], rows, a, b)
-    o_ref[...] = jnp.max(jnp.abs(y), axis=1, keepdims=True)
+def _rotation_pipeline(nblk: int, streams, sem, epilogue):
+    """Two-slot revolving-buffer schedule over row blocks (kernels/dma)."""
+    revolving_pipeline(
+        nblk, functools.partial(row_loads, streams, sem), epilogue)
 
 
-def _ht_quant_kernel(x_ref, sign_ref, noise_ref, lo_ref, step_ref,
-                     ha_ref, hb_ref, o_ref, *, rows: int, a: int, b: int,
-                     levels: int):
-    y = _rotate(x_ref[...], sign_ref[...].astype(jnp.float32),
-                ha_ref[...], hb_ref[...], rows, a, b)
-    u = noise_ref[...].astype(jnp.float32)
-    lo = lo_ref[...]                                 # (rows, 1)
-    step = step_ref[...]                             # (rows, 1)
-    q = jnp.floor((y - lo) / step + u)
-    o_ref[...] = jnp.clip(q, 0, levels).astype(o_ref.dtype)
+def _ht_amax_kernel(x_hbm, sign_ref, ha_ref, hb_ref, o_ref, xbuf, sem, *,
+                    nblk: int, rows: int, a: int, b: int):
+    def epilogue(slot):
+        y = _rotate(xbuf[slot], sign_ref[...].astype(jnp.float32),
+                    ha_ref[...], hb_ref[...], rows, a, b)
+        o_ref[...] = jnp.max(jnp.abs(y), axis=1, keepdims=True)
+
+    _rotation_pipeline(nblk, [(x_hbm, xbuf, rows)], sem, epilogue)
+
+
+def _ht_quant_kernel(x_hbm, sign_ref, noise_hbm, lo_hbm, step_hbm,
+                     ha_ref, hb_ref, o_ref, xbuf, nbuf, lobuf, stepbuf, sem,
+                     *, nblk: int, rows: int, a: int, b: int, levels: int):
+    def epilogue(slot):
+        y = _rotate(xbuf[slot], sign_ref[...].astype(jnp.float32),
+                    ha_ref[...], hb_ref[...], rows, a, b)
+        u = nbuf[slot].astype(jnp.float32)
+        lo = lobuf[slot]                             # (rows, 1)
+        step = stepbuf[slot]                         # (rows, 1)
+        q = jnp.floor((y - lo) / step + u)
+        o_ref[...] = jnp.clip(q, 0, levels).astype(o_ref.dtype)
+
+    _rotation_pipeline(
+        nblk,
+        [(x_hbm, xbuf, rows), (noise_hbm, nbuf, rows),
+         (lo_hbm, lobuf, rows), (step_hbm, stepbuf, rows)],
+        sem, epilogue)
 
 
 def _factors(n: int):
@@ -64,11 +95,22 @@ def _factors(n: int):
     return a, b, hadamard_matrix(a), hadamard_matrix(b)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def ht_amax_pallas(x: jnp.ndarray, sign: jnp.ndarray, *,
                    block_rows: int = 64,
-                   interpret: bool = True) -> jnp.ndarray:
-    """Per-block amax of the rotated blocks. x: (rows, n) -> (rows,) fp32."""
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """Per-block amax of the rotated blocks. x: (rows, n) -> (rows,) fp32.
+
+    ``interpret=None`` resolves the process kernel mode (kernels/runtime).
+    """
+    if interpret is None:
+        interpret = runtime.interpret_flag()
+    return _ht_amax_call(x, sign, block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _ht_amax_call(x: jnp.ndarray, sign: jnp.ndarray, *,
+                  block_rows: int = 64,
+                  interpret: bool = True) -> jnp.ndarray:
     if x.ndim != 2:
         raise ValueError("ht_amax_pallas expects (rows, n)")
     rows, n = x.shape
@@ -77,33 +119,48 @@ def ht_amax_pallas(x: jnp.ndarray, sign: jnp.ndarray, *,
     pad = (-rows) % br
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))
+    nblk = x.shape[0] // br
     out = pl.pallas_call(
-        functools.partial(_ht_amax_kernel, rows=br, a=a, b=b),
-        grid=(x.shape[0] // br,),
+        functools.partial(_ht_amax_kernel, nblk=nblk, rows=br, a=a, b=b),
+        grid=(nblk,),
         in_specs=[
-            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),    # x: streamed manually
             pl.BlockSpec((1, n), lambda i: (0, 0)),
             pl.BlockSpec((a, a), lambda i: (0, 0)),
             pl.BlockSpec((b, b), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((br, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((x.shape[0], 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((2, br, n), x.dtype),
+                        pltpu.SemaphoreType.DMA((1, 2))],
+        compiler_params=SEQUENTIAL_GRID,
         interpret=interpret,
     )(x, sign.reshape(1, n).astype(jnp.float32), ha, hb)
     return out[:rows, 0]
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("bits", "block_rows", "interpret"))
 def ht_quant_pallas(x: jnp.ndarray, sign: jnp.ndarray, noise: jnp.ndarray,
                     lo: jnp.ndarray, step: jnp.ndarray, *, bits: int = 8,
                     block_rows: int = 64,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool | None = None) -> jnp.ndarray:
     """Fused encode: codes = clip(floor((H(d*x) - lo)/step + noise)).
 
     x/noise: (rows, n); lo/step: (rows,) per-block grid bounds (already
     pmax-shared across workers). Returns (rows, n) uint8 codes.
+    ``interpret=None`` resolves the process kernel mode (kernels/runtime).
     """
+    if interpret is None:
+        interpret = runtime.interpret_flag()
+    return _ht_quant_call(x, sign, noise, lo, step, bits=bits,
+                          block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "block_rows", "interpret"))
+def _ht_quant_call(x: jnp.ndarray, sign: jnp.ndarray, noise: jnp.ndarray,
+                   lo: jnp.ndarray, step: jnp.ndarray, *, bits: int = 8,
+                   block_rows: int = 64,
+                   interpret: bool = True) -> jnp.ndarray:
     if x.ndim != 2 or noise.shape != x.shape:
         raise ValueError("x and noise must both be (rows, n)")
     rows, n = x.shape
@@ -116,20 +173,28 @@ def ht_quant_pallas(x: jnp.ndarray, sign: jnp.ndarray, noise: jnp.ndarray,
         noise = jnp.pad(noise, ((0, pad), (0, 0)))
         lo = jnp.pad(lo.reshape(-1), (0, pad))
         step = jnp.pad(step.reshape(-1), (0, pad), constant_values=1.0)
+    nblk = x.shape[0] // br
     out = pl.pallas_call(
-        functools.partial(_ht_quant_kernel, rows=br, a=a, b=b, levels=levels),
-        grid=(x.shape[0] // br,),
+        functools.partial(_ht_quant_kernel, nblk=nblk, rows=br, a=a, b=b,
+                          levels=levels),
+        grid=(nblk,),
         in_specs=[
-            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),    # x: streamed manually
             pl.BlockSpec((1, n), lambda i: (0, 0)),
-            pl.BlockSpec((br, n), lambda i: (i, 0)),
-            pl.BlockSpec((br, 1), lambda i: (i, 0)),
-            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),    # noise: streamed
+            pl.BlockSpec(memory_space=pltpu.ANY),    # lo: streamed
+            pl.BlockSpec(memory_space=pltpu.ANY),    # step: streamed
             pl.BlockSpec((a, a), lambda i: (0, 0)),
             pl.BlockSpec((b, b), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, jnp.uint8),
+        scratch_shapes=[pltpu.VMEM((2, br, n), x.dtype),
+                        pltpu.VMEM((2, br, n), noise.dtype),
+                        pltpu.VMEM((2, br, 1), jnp.float32),
+                        pltpu.VMEM((2, br, 1), jnp.float32),
+                        pltpu.SemaphoreType.DMA((4, 2))],
+        compiler_params=SEQUENTIAL_GRID,
         interpret=interpret,
     )(x, sign.reshape(1, n).astype(jnp.float32), noise,
       lo.reshape(-1, 1).astype(jnp.float32),

@@ -2,7 +2,10 @@
 
 ``ht_amax`` / ``ht_quant`` operate on (rows, block) — one Hadamard block per
 row, the layout ``core.allreduce`` already uses. ``use_kernel`` selects the
-Pallas kernel (interpret mode off-TPU); the jnp oracle is identical math.
+Pallas kernel; the jnp oracle is identical math.  Whether the Pallas path
+runs interpreted or Mosaic-compiled resolves through the process kernel-mode
+policy (kernels/runtime) outside the jit boundary, so the resolved flag is
+part of the cache key.
 
 The unquantized fused variant of the engine is the existing sign+FWHT
 single-pass kernel (``randomized_fwht(..., use_kernel=True)``); ``ht_encode
@@ -16,45 +19,58 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import runtime
 from repro.kernels.fwht import randomized_fwht
 
 from .ht_quant import ht_amax_pallas, ht_quant_pallas
 from .ref import ht_amax_ref, ht_quant_ref, ht_rotate_ref  # noqa: F401
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+@functools.partial(jax.jit,
+                   static_argnames=("use_kernel", "block_rows", "interpret"))
+def _ht_amax(x: jnp.ndarray, sign: jnp.ndarray, *, use_kernel: bool,
+             block_rows: int, interpret: bool) -> jnp.ndarray:
+    if use_kernel:
+        return ht_amax_pallas(x, sign, block_rows=block_rows,
+                              interpret=interpret)
+    return ht_amax_ref(x, sign)
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel", "block_rows"))
 def ht_amax(x: jnp.ndarray, sign: jnp.ndarray, *, use_kernel: bool = False,
             block_rows: int = 64) -> jnp.ndarray:
     """Per-block amax of the rotated blocks, without materializing them.
 
     x: (rows, block) -> (rows,) fp32.
     """
+    return _ht_amax(
+        x, sign, use_kernel=use_kernel, block_rows=block_rows,
+        interpret=runtime.interpret_flag() if use_kernel else True)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "use_kernel",
+                                             "block_rows", "interpret"))
+def _ht_quant(x: jnp.ndarray, sign: jnp.ndarray, noise: jnp.ndarray,
+              lo: jnp.ndarray, step: jnp.ndarray, *, bits: int,
+              use_kernel: bool, block_rows: int,
+              interpret: bool) -> jnp.ndarray:
     if use_kernel:
-        return ht_amax_pallas(x, sign, block_rows=block_rows,
-                              interpret=_default_interpret())
-    return ht_amax_ref(x, sign)
+        return ht_quant_pallas(x, sign, noise, lo, step, bits=bits,
+                               block_rows=block_rows, interpret=interpret)
+    return ht_quant_ref(x, sign, noise, lo.reshape(-1), step.reshape(-1),
+                        bits=bits)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("bits", "use_kernel", "block_rows"))
 def ht_quant(x: jnp.ndarray, sign: jnp.ndarray, noise: jnp.ndarray,
              lo: jnp.ndarray, step: jnp.ndarray, *, bits: int = 8,
-             use_kernel: bool = False,
-             block_rows: int = 64) -> jnp.ndarray:
+             use_kernel: bool = False, block_rows: int = 64) -> jnp.ndarray:
     """Fused sign-flip + FWHT + stochastic uniform quantization.
 
     x/noise: (rows, block); lo/step: (rows,) shared grids -> uint8 codes.
     """
-    if use_kernel:
-        return ht_quant_pallas(x, sign, noise, lo, step, bits=bits,
-                               block_rows=block_rows,
-                               interpret=_default_interpret())
-    return ht_quant_ref(x, sign, noise, lo.reshape(-1), step.reshape(-1),
-                        bits=bits)
+    return _ht_quant(
+        x, sign, noise, lo, step, bits=bits, use_kernel=use_kernel,
+        block_rows=block_rows,
+        interpret=runtime.interpret_flag() if use_kernel else True)
 
 
 def ht_encode_fused(x: jnp.ndarray, sign: jnp.ndarray, *,

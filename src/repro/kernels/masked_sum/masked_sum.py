@@ -16,6 +16,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import runtime
+
+# independent column tiles: no cross-iteration state, Mosaic may parallelize
+_COL_GRID = pltpu.TPUCompilerParams(dimension_semantics=("parallel",))
 
 
 def compensated_mean_cols(x, m):
@@ -34,11 +40,22 @@ def _masked_mean_kernel(x_ref, m_ref, o_ref):
     o_ref[...] = out[None, :].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def masked_mean_pallas(shards: jnp.ndarray, mask: jnp.ndarray, *,
                        tile: int = 2048,
-                       interpret: bool = True) -> jnp.ndarray:
-    """Mean over received contributions. shards/mask: (N, L) -> (L,)."""
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Mean over received contributions. shards/mask: (N, L) -> (L,).
+
+    ``interpret=None`` resolves the process kernel mode (kernels/runtime).
+    """
+    if interpret is None:
+        interpret = runtime.interpret_flag()
+    return _masked_mean_call(shards, mask, tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def _masked_mean_call(shards: jnp.ndarray, mask: jnp.ndarray, *,
+                      tile: int = 2048,
+                      interpret: bool = True) -> jnp.ndarray:
     if shards.ndim != 2 or mask.shape != shards.shape:
         raise ValueError("shards and mask must both be (N, L)")
     n, length = shards.shape
@@ -57,6 +74,7 @@ def masked_mean_pallas(shards: jnp.ndarray, mask: jnp.ndarray, *,
         ],
         out_specs=pl.BlockSpec((1, t), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, padded), shards.dtype),
+        compiler_params=_COL_GRID,
         interpret=interpret,
     )(shards, mask)
     out = out[0]

@@ -1,4 +1,9 @@
-"""Jit'd public wrapper for the drop-compensated shard reduction."""
+"""Jit'd public wrapper for the drop-compensated shard reduction.
+
+The Pallas path's interpret/compile flag resolves through the process
+kernel-mode policy (kernels/runtime) outside the jit boundary, so the
+resolved flag is part of the cache key.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,19 +11,25 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import runtime
+
 from .masked_sum import masked_mean_pallas
 from .ref import masked_mean_ref
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+@functools.partial(jax.jit,
+                   static_argnames=("use_kernel", "tile", "interpret"))
+def _masked_mean(shards: jnp.ndarray, mask: jnp.ndarray, *,
+                 use_kernel: bool, tile: int, interpret: bool) -> jnp.ndarray:
+    if use_kernel:
+        return masked_mean_pallas(shards, mask, tile=tile,
+                                  interpret=interpret)
+    return masked_mean_ref(shards, mask)
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel", "tile"))
 def masked_mean(shards: jnp.ndarray, mask: jnp.ndarray, *,
                 use_kernel: bool = False, tile: int = 2048) -> jnp.ndarray:
     """Drop-compensated mean over N peer shards. (N, L) x (N, L) -> (L,)."""
-    if use_kernel:
-        return masked_mean_pallas(shards, mask, tile=tile,
-                                  interpret=_default_interpret())
-    return masked_mean_ref(shards, mask)
+    return _masked_mean(
+        shards, mask, use_kernel=use_kernel, tile=tile,
+        interpret=runtime.interpret_flag() if use_kernel else True)

@@ -1,4 +1,9 @@
-"""Jit'd public wrappers for the THC quantization kernel."""
+"""Jit'd public wrappers for the THC quantization kernel.
+
+The Pallas paths' interpret/compile flag resolves through the process
+kernel-mode policy (kernels/runtime) outside the jit boundary, so the
+resolved flag is part of the cache key.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,29 +11,46 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import runtime
+
 from .quant import grid_quant_pallas, uniform_quant_pallas
 from .ref import grid_quant_ref, uniform_dequant_ref, uniform_quant_ref
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-@functools.partial(jax.jit, static_argnames=("bits", "use_kernel"))
-def uniform_quant(x: jnp.ndarray, noise: jnp.ndarray, lohi: jnp.ndarray, *,
-                  bits: int = 8, use_kernel: bool = False) -> jnp.ndarray:
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "use_kernel", "interpret"))
+def _uniform_quant(x: jnp.ndarray, noise: jnp.ndarray, lohi: jnp.ndarray, *,
+                   bits: int, use_kernel: bool,
+                   interpret: bool) -> jnp.ndarray:
     shape = x.shape
     x2 = x.reshape(-1, shape[-1]) if x.ndim > 2 else x.reshape(1, -1) if x.ndim == 1 else x
     n2 = noise.reshape(x2.shape)
     if use_kernel:
         out = uniform_quant_pallas(x2, n2, lohi, bits=bits,
-                                   interpret=_default_interpret())
+                                   interpret=interpret)
     else:
         out = uniform_quant_ref(x2, n2, lohi[0], lohi[1], bits=bits)
     return out.reshape(shape)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "use_kernel"))
+def uniform_quant(x: jnp.ndarray, noise: jnp.ndarray, lohi: jnp.ndarray, *,
+                  bits: int = 8, use_kernel: bool = False) -> jnp.ndarray:
+    return _uniform_quant(
+        x, noise, lohi, bits=bits, use_kernel=use_kernel,
+        interpret=runtime.interpret_flag() if use_kernel else True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "use_kernel", "interpret"))
+def _grid_quant(x: jnp.ndarray, noise: jnp.ndarray, lo: jnp.ndarray,
+                step: jnp.ndarray, *, bits: int, use_kernel: bool,
+                interpret: bool) -> jnp.ndarray:
+    if use_kernel:
+        return grid_quant_pallas(x, noise, lo, step, bits=bits,
+                                 interpret=interpret)
+    return grid_quant_ref(x, noise, lo, step, bits=bits)
+
+
 def grid_quant(x: jnp.ndarray, noise: jnp.ndarray, lo: jnp.ndarray,
                step: jnp.ndarray, *, bits: int = 8,
                use_kernel: bool = False) -> jnp.ndarray:
@@ -38,10 +60,9 @@ def grid_quant(x: jnp.ndarray, noise: jnp.ndarray, lo: jnp.ndarray,
     engine: one Hadamard block per row, grids already pmax-shared. Kernel
     and jnp paths are bit-identical.
     """
-    if use_kernel:
-        return grid_quant_pallas(x, noise, lo, step, bits=bits,
-                                 interpret=_default_interpret())
-    return grid_quant_ref(x, noise, lo, step, bits=bits)
+    return _grid_quant(
+        x, noise, lo, step, bits=bits, use_kernel=use_kernel,
+        interpret=runtime.interpret_flag() if use_kernel else True)
 
 
 def uniform_dequant(codes: jnp.ndarray, lohi: jnp.ndarray, *, bits: int = 8,

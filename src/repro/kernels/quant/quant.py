@@ -14,6 +14,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import runtime
+
+# independent row tiles: no cross-iteration state, Mosaic may parallelize
+_ROW_GRID = pltpu.TPUCompilerParams(dimension_semantics=("parallel",))
 
 
 def _quant_kernel(x_ref, n_ref, r_ref, o_ref, *, levels: int):
@@ -35,16 +41,27 @@ def _grid_quant_kernel(x_ref, n_ref, lo_ref, step_ref, o_ref, *, levels: int):
     o_ref[...] = jnp.clip(q, 0, levels).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "block_rows", "interpret"))
 def grid_quant_pallas(x: jnp.ndarray, noise: jnp.ndarray, lo: jnp.ndarray,
                       step: jnp.ndarray, *, bits: int = 8,
                       block_rows: int = 128,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: bool | None = None) -> jnp.ndarray:
     """Quantize (rows, C) onto per-row [lo_r, lo_r + levels*step_r] grids.
 
     The grid-aware sibling of :func:`uniform_quant_pallas`: lo/step are
     (rows,) operands tiled alongside the data, so one pass covers every
-    Hadamard block of a shard (TAR stage-2 re-quantization)."""
+    Hadamard block of a shard (TAR stage-2 re-quantization).
+    ``interpret=None`` resolves the process kernel mode (kernels/runtime)."""
+    if interpret is None:
+        interpret = runtime.interpret_flag()
+    return _grid_quant_call(x, noise, lo, step, bits=bits,
+                            block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows", "interpret"))
+def _grid_quant_call(x: jnp.ndarray, noise: jnp.ndarray, lo: jnp.ndarray,
+                     step: jnp.ndarray, *, bits: int = 8,
+                     block_rows: int = 128,
+                     interpret: bool = True) -> jnp.ndarray:
     if x.ndim != 2 or noise.shape != x.shape:
         raise ValueError("x and noise must both be (rows, C)")
     rows, c = x.shape
@@ -70,6 +87,7 @@ def grid_quant_pallas(x: jnp.ndarray, noise: jnp.ndarray, lo: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, jnp.uint8),
+        compiler_params=_ROW_GRID,
         interpret=interpret,
     )(x, noise, lo2, step2)
     if pad:
@@ -77,12 +95,23 @@ def grid_quant_pallas(x: jnp.ndarray, noise: jnp.ndarray, lo: jnp.ndarray,
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "block_rows", "interpret"))
 def uniform_quant_pallas(x: jnp.ndarray, noise: jnp.ndarray,
                          lohi: jnp.ndarray, *, bits: int = 8,
                          block_rows: int = 128,
-                         interpret: bool = True) -> jnp.ndarray:
-    """Quantize (rows, C) onto the shared [lo, hi] grid. lohi: shape (2,)."""
+                         interpret: bool | None = None) -> jnp.ndarray:
+    """Quantize (rows, C) onto the shared [lo, hi] grid. lohi: shape (2,).
+    ``interpret=None`` resolves the process kernel mode (kernels/runtime)."""
+    if interpret is None:
+        interpret = runtime.interpret_flag()
+    return _uniform_quant_call(x, noise, lohi, bits=bits,
+                               block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows", "interpret"))
+def _uniform_quant_call(x: jnp.ndarray, noise: jnp.ndarray,
+                        lohi: jnp.ndarray, *, bits: int = 8,
+                        block_rows: int = 128,
+                        interpret: bool = True) -> jnp.ndarray:
     if x.ndim != 2 or noise.shape != x.shape:
         raise ValueError("x and noise must both be (rows, C)")
     rows, c = x.shape
@@ -102,6 +131,7 @@ def uniform_quant_pallas(x: jnp.ndarray, noise: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, jnp.uint8),
+        compiler_params=_ROW_GRID,
         interpret=interpret,
     )(x, noise, lohi.reshape(1, 2).astype(jnp.float32))
     if pad:

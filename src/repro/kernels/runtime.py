@@ -1,0 +1,107 @@
+"""Kernel dispatch policy: run Pallas kernels interpreted or compiled.
+
+Every Pallas call site in the repo used to hard-code ``interpret=True`` —
+correct on the CPU CI box, silently wrong on a real TPU (the fused engine
+would run in the interpreter even with Mosaic available). This module is
+the single resolution point:
+
+  ``interpret``  force the Pallas interpreter (any backend; bit-exact to
+                 the historical behaviour).
+  ``compile``    force Mosaic compilation; raises immediately on a backend
+                 without Mosaic support instead of surfacing a cryptic
+                 lowering failure from inside a kernel.
+  ``auto``       compile iff ``jax.default_backend() == "tpu"`` (default).
+
+Precedence: an explicit :func:`set_kernel_mode` (the ``--kernel-mode``
+launcher flag / ``TrainConfig.kernel_mode``) > the ``REPRO_KERNEL_MODE``
+environment variable > ``auto``.
+
+The public kernel wrappers (each package's ``ops.py``) resolve the flag
+*outside* their ``jax.jit`` boundary and pass it through as a static
+argument, so the resolved mode is part of every kernel's jit cache key and
+flipping the mode mid-process cannot hit a stale trace.  Caveat: a caller
+that jits a *larger* step function around the wrappers bakes the mode in at
+its own trace time — set the mode before building train steps.
+"""
+from __future__ import annotations
+
+import contextlib
+import logging
+import os
+
+import jax
+
+ENV_VAR = "REPRO_KERNEL_MODE"
+MODES = ("auto", "interpret", "compile")
+
+logger = logging.getLogger("repro.kernels.runtime")
+
+_explicit: str | None = None      # set_kernel_mode override
+_logged_resolution: str | None = None
+
+
+def _check(mode: str) -> str:
+    mode = str(mode).strip().lower()
+    if mode not in MODES:
+        raise ValueError(
+            f"unknown kernel mode {mode!r}; expected one of {MODES}")
+    return mode
+
+
+def _mosaic_available() -> bool:
+    """Whether this process can compile Pallas TPU kernels (Mosaic)."""
+    return jax.default_backend() == "tpu"
+
+
+def kernel_mode() -> str:
+    """The *configured* mode: explicit override > $REPRO_KERNEL_MODE > auto."""
+    if _explicit is not None:
+        return _explicit
+    env = os.environ.get(ENV_VAR, "")
+    if env.strip():
+        return _check(env)
+    return "auto"
+
+
+def set_kernel_mode(mode: str | None) -> None:
+    """Set (or, with ``None``, clear) the process-wide explicit mode."""
+    global _explicit, _logged_resolution
+    _explicit = None if mode is None else _check(mode)
+    _logged_resolution = None      # re-log on the next resolve
+
+
+@contextlib.contextmanager
+def kernel_mode_scope(mode: str | None):
+    """Temporarily pin the kernel mode (tests / benchmark sweeps)."""
+    prev = _explicit
+    set_kernel_mode(mode)
+    try:
+        yield
+    finally:
+        set_kernel_mode(prev)
+
+
+def resolve() -> str:
+    """'interpret' or 'compile' for this process, validated against the
+    backend — ``compile`` without Mosaic is an immediate, legible error."""
+    mode = kernel_mode()
+    backend = jax.default_backend()
+    if mode == "compile" and not _mosaic_available():
+        raise RuntimeError(
+            f"kernel_mode='compile' needs a TPU (Mosaic) backend but "
+            f"jax.default_backend() is {backend!r}. Use "
+            f"kernel_mode='interpret' to run the kernels in the Pallas "
+            f"interpreter here, or 'auto' to pick per-backend.")
+    resolved = mode if mode != "auto" else (
+        "compile" if _mosaic_available() else "interpret")
+    global _logged_resolution
+    if _logged_resolution != resolved:
+        _logged_resolution = resolved
+        logger.info("kernel dispatch: mode=%s -> %s (backend=%s)",
+                    mode, resolved, backend)
+    return resolved
+
+
+def interpret_flag() -> bool:
+    """The ``interpret=`` value a ``pl.pallas_call`` should receive now."""
+    return resolve() == "interpret"

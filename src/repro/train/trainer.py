@@ -48,6 +48,7 @@ from repro.core.allreduce import (OptiReduceConfig, SyncContext, rs_spec,
 from repro.core.bucket_plan import BucketPlan
 from repro.core.pipeline import resolve_spec
 from repro.core.safeguards import guard_scale, guard_update
+from repro.kernels import runtime as kernel_runtime
 from repro.models import lm_loss, param_specs, param_table
 from repro.models.parallel import ParallelCtx
 from repro.models.transformer import _tree_map_table
@@ -86,6 +87,10 @@ class TrainConfig:
     # spec's transport, so stage-1 arrival masks come from a real packet
     # exchange instead of the synthetic drop model. Replicated DP only.
     transport_override: Any = None
+    # Pallas kernel dispatch (DESIGN §11): 'interpret' | 'compile' | 'auto'
+    # (auto = Mosaic-compile iff running on a TPU backend). None leaves the
+    # process-level policy (REPRO_KERNEL_MODE / kernels.runtime) untouched.
+    kernel_mode: str | None = None
 
 
 def mesh_axis_names(mesh) -> tuple[str, ...]:
@@ -211,6 +216,10 @@ def packed_global_norm(batch: jnp.ndarray, plan: BucketPlan,
 def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
     """Returns (step_fn, shardings) where step_fn(params, opt_state, batch,
     step, key) -> (params, opt_state, metrics), jit-able under ``mesh``."""
+    if tc.kernel_mode is not None:
+        # set before any kernel shim resolves (trace time), so the whole
+        # step traces under one dispatch mode
+        kernel_runtime.set_kernel_mode(tc.kernel_mode)
     names = mesh_axis_names(mesh)
     if tc.pure_dp:
         assert "pod" not in names, "pure_dp is a single-pod remap"

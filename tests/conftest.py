@@ -4,7 +4,23 @@ spawn a subprocess with their own XLA_FLAGS (test_collectives.py)."""
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_collection_modifyitems(config, items):
+    """tpu-marked tests only make sense with a Mosaic backend: auto-skip
+    elsewhere (the jax import is deferred until a marked test exists)."""
+    marked = [it for it in items if it.get_closest_marker("tpu")]
+    if not marked:
+        return
+    import jax
+    if jax.default_backend() == "tpu":
+        return
+    skip = pytest.mark.skip(reason='jax.default_backend() != "tpu"')
+    for it in marked:
+        it.add_marker(skip)
 
 try:
     from hypothesis import settings

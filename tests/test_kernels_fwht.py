@@ -21,7 +21,7 @@ def test_pallas_matches_oracle(block, rows, dtype):
     key = jax.random.PRNGKey(block + rows)
     x = jax.random.normal(key, (rows, block), jnp.float32)
     ref = fwht_ref(x)
-    out = fwht_pallas(x.astype(dtype).astype(jnp.float32), interpret=True)
+    out = fwht_pallas(x.astype(dtype).astype(jnp.float32))
     tol = 1e-5 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=tol, atol=tol)

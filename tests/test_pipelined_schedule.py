@@ -97,16 +97,88 @@ print("CONSTANT_HLO OK")
 """
 
 
-@pytest.fixture(scope="module")
-def schedule_output():
+CHILD_QUANT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import re
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, shard_map
+from repro.core import OptiReduceConfig, SyncContext, sync_pytree
+
+mesh = make_mesh((2,), ("data",))
+cfg = OptiReduceConfig(strategy="optireduce_q", drop_rate=0.0,
+                       hadamard_block=256)
+
+def lower(nbuckets, **kw):
+    tree = {"g": jnp.zeros((nbuckets * 2048,), jnp.float32)}
+    def body(t):
+        ctx = SyncContext(cfg=cfg, key=jax.random.PRNGKey(0))
+        return sync_pytree(t, ctx, bucket_elems=2048, **kw)
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=({"g": P()},),
+                          out_specs={"g": P()}, check_vma=False))
+    return f.lower(tree).as_text()
+
+txt = lower(3, mode="pipelined")
+lines = txt.splitlines()
+start = next(i for i, l in enumerate(lines)
+             if "func.func" in l and "shmap_body" in l)
+end = next((i for i in range(start + 1, len(lines))
+            if "func.func" in lines[i]), len(lines))
+body = lines[start:end]
+a2a = [i for i, l in enumerate(body) if "stablehlo.all_to_all" in l]
+ag = [i for i, l in enumerate(body) if "stablehlo.all_gather" in l]
+ar = [i for i, l in enumerate(body) if "stablehlo.all_reduce" in l]
+fwht = [(i, l) for i, l in enumerate(body)
+        if re.search(r"call @randomized_fwht[_0-9]*\(", l)]
+callee = lambda l: re.search(r"call @(randomized_fwht[_0-9]*)\(",
+                             l).group(1)
+enc_name = callee(fwht[0][1])
+enc = [i for i, l in fwht if callee(l) == enc_name]
+
+# ---- the THC grid pmax rides the exchange stage ---------------------------
+# split encode: encode_stage emits only the local amax; the pmax
+# (stablehlo.all_reduce) is deferred into the exchange stage, so bucket k's
+# grid collective is emitted alongside bucket k-1's exchange instead of
+# serializing after bucket k's rotation.  B=3 expected trace order:
+#   E0 E1 | ar0 X0 | E2 ar1 X1 | ... (exactly ONE pmax before exchange 0 —
+# the encode-fused layout would put both buckets' pmaxes there)
+assert len(ar) == 3, (len(ar), "one grid pmax per bucket")
+assert enc[1] < ar[0] < a2a[0], \
+    "bucket 0's grid pmax must defer past bucket 1's encode"
+assert sum(1 for r in ar if r < a2a[0]) == 1, \
+    "exactly one grid pmax precedes the first exchange (deferred placement)"
+assert ag[0] < enc[2] < ar[1] < a2a[1], \
+    "bucket 1's grid pmax must ride the exchange stage, after encode 2"
+print("QUANT_PMAX OK")
+
+# ---- collective count stays constant in B ---------------------------------
+txt8 = lower(8, mode="pipelined")
+assert txt8.count("stablehlo.all_to_all") == 3
+assert txt8.count("stablehlo.all_reduce") == 3
+print("QUANT_CONSTANT_HLO OK")
+"""
+
+
+def _run_child(code):
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    proc = subprocess.run([sys.executable, "-c", CHILD], env=env,
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
                           capture_output=True, text=True, timeout=900)
     assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
     return proc.stdout
+
+
+@pytest.fixture(scope="module")
+def schedule_output():
+    return _run_child(CHILD)
+
+
+@pytest.fixture(scope="module")
+def quant_schedule_output():
+    return _run_child(CHILD_QUANT)
 
 
 @pytest.mark.slow
@@ -124,3 +196,17 @@ def test_seed_loop_is_the_serial_baseline(schedule_output):
 @pytest.mark.slow
 def test_pipelined_hlo_constant_in_bucket_count(schedule_output):
     assert "CONSTANT_HLO OK" in schedule_output, schedule_output
+
+
+@pytest.mark.slow
+def test_grid_pmax_rides_the_exchange_stage(quant_schedule_output):
+    """Acceptance: for quantized pipelined strategies the THC grid pmax is
+    emitted inside the exchange stage (deferred split encode), not at the
+    tail of the encode stage."""
+    assert "QUANT_PMAX OK" in quant_schedule_output, quant_schedule_output
+
+
+@pytest.mark.slow
+def test_quant_pipelined_hlo_constant_in_bucket_count(quant_schedule_output):
+    assert "QUANT_CONSTANT_HLO OK" in quant_schedule_output, \
+        quant_schedule_output
