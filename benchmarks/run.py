@@ -37,6 +37,7 @@ MODULES = [
     "bench_pipeline",         # fused BucketPlan sync engine vs seed loop
     "bench_transport",        # host wire transport (DESIGN §7)
     "bench_recovery",         # loss-recovery ablation (DESIGN §8)
+    "bench_obs",              # tracing overhead (DESIGN §12)
 ]
 
 # rows from these modules are serialized to BENCH_<name>.json at the repo
@@ -45,7 +46,8 @@ JSON_MODULES = {"bench_kernels": "BENCH_kernels.json",
                 "bench_pipeline": "BENCH_pipeline.json",
                 "bench_timeout": "BENCH_timeout.json",
                 "bench_transport": "BENCH_transport.json",
-                "bench_recovery": "BENCH_recovery.json"}
+                "bench_recovery": "BENCH_recovery.json",
+                "bench_obs": "BENCH_obs.json"}
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -77,7 +79,8 @@ def _validate_rows(name: str, rows) -> None:
     # estimate is not diffable across PRs (single-shot noise once inverted
     # the bench_pipeline B1/B2 ordering). Every `X_steady_us` row needs the
     # matching `X_steady_iqr_us`, every `X_median_ms` row its `X_iqr_ms`
-    # (the netsim-driven ablations report medians over steps), and every
+    # (the netsim-driven ablations report medians over steps), every
+    # `X_median_us` row its `X_iqr_us` (the obs overhead rows), and every
     # `X_mse_median` row its `X_mse_iqr` (the recovery ablation).
     keys = {r[0] for r in rows.rows}
     for key in keys:
@@ -86,6 +89,8 @@ def _validate_rows(name: str, rows) -> None:
             sibling = key[:-len("_steady_us")] + "_steady_iqr_us"
         elif key.endswith("_median_ms"):
             sibling = key[:-len("_median_ms")] + "_iqr_ms"
+        elif key.endswith("_median_us"):
+            sibling = key[:-len("_median_us")] + "_iqr_us"
         elif key.endswith("_mse_median"):
             sibling = key[:-len("_mse_median")] + "_mse_iqr"
         if sibling is not None and sibling not in keys:

@@ -140,6 +140,13 @@ def _run_peer(client, backend, args, *, uid: int, kill_fn=None) -> dict:
     rank, _, start_step = client.join()
     if hasattr(backend, "attach"):
         backend.attach(rank, client.addr_of)
+    # per-rank tracer (DESIGN §12): thread-local so the inproc mode's N
+    # rank-threads in one process keep separate rings; in udp mode each
+    # worker is its own process and this is simply its tracer
+    tracer = None
+    if getattr(args, "trace_dir", None):
+        from repro.obs import trace as obs_trace
+        tracer = obs_trace.configure_thread(True, rank=rank)
     cfg = OptiReduceConfig(strategy=args.strategy, drop_rate=0.0,
                            hadamard_block=args.hadamard_block,
                            packet_elems=args.packet_elems)
@@ -181,6 +188,7 @@ def _run_peer(client, backend, args, *, uid: int, kill_fn=None) -> dict:
         data = np.random.default_rng(args.seed + step).standard_normal(
             (args.nprocs, args.elems)).astype(np.float32)
         key = jax.random.fold_in(key0, step)
+        st0 = tracer.now() if tracer is not None else 0.0
         peer.phase1_encode(data[rank], key, step, 0)
         client.barrier(_tag(step, 1), timeout=args.barrier_timeout)
         if kill_fn is not None and rank == args.kill_rank \
@@ -194,6 +202,13 @@ def _run_peer(client, backend, args, *, uid: int, kill_fn=None) -> dict:
         rep.merge(rep2)
         tel = aggregate_reports([rep], step)
         control.observe(tel)
+        if tracer is not None:
+            tracer.complete("step", "trainer", ts=st0,
+                            dur=tracer.now() - st0,
+                            args={"step": step,
+                                  "loss_frac": round(float(tel.loss_frac),
+                                                     6),
+                                  "timed_out": bool(tel.timed_out)})
         model += out
         records.append({
             "step": step,
@@ -216,8 +231,15 @@ def _run_peer(client, backend, args, *, uid: int, kill_fn=None) -> dict:
                            "model": model},
                           meta={"uid": uid, "rank": rank}, keep=2)
     client.leave()
+    trace_path = None
+    if tracer is not None:
+        from repro.obs import export as obs_export
+        trace_path = obs_export.write_trace(
+            args.trace_dir, tracer, meta={"uid": uid, "backend":
+                                          type(backend).__name__})
     return {"uid": uid, "rank": rank, "start_step": start_step,
-            "resumed_from": resumed_from, "exit": "ok", "steps": records}
+            "resumed_from": resumed_from, "exit": "ok", "steps": records,
+            "trace": trace_path}
 
 
 def _sigkill_self(client) -> None:
@@ -273,6 +295,8 @@ def _spawn(args, uid: int, rendezvous: str, report_file: str
            "--min-active", str(args.min_active)]
     if args.ckpt_dir:
         cmd += ["--ckpt-dir", args.ckpt_dir]
+    if args.trace_dir:
+        cmd += ["--trace-dir", args.trace_dir]
     env = dict(os.environ)
     # make `python -m repro.launch.multiproc` resolvable in the child even
     # when the parent found `repro` via a sys.path edit (demo scripts)
@@ -476,6 +500,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="write the merged JSON report here")
     ap.add_argument("--ckpt-dir", default=None,
                     help="per-rank checkpoint root (crash resume)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="record per-rank structured traces (DESIGN §12) "
+                         "and write trace_rankNN.json Perfetto files into "
+                         "DIR; paths land in the merged report, and "
+                         "python -m repro.obs.report DIR renders the "
+                         "cross-rank tail tables + control timeline")
     ap.add_argument("--kill-rank", type=int, default=-1,
                     help="scripted crash: this rank SIGKILLs itself")
     ap.add_argument("--kill-step", type=int, default=-1,
@@ -500,6 +530,10 @@ def main(argv=None) -> dict | int:
         args.ckpt_dir = tempfile.mkdtemp(prefix="multiproc_ckpt_")
     report = _launch_udp(args) if args.backend == "udp" \
         else _launch_inproc(args)
+    if args.trace_dir:
+        report["trace_dir"] = args.trace_dir
+        report["traces"] = sorted(w["trace"] for w in report["workers"]
+                                  if w.get("trace"))
     if args.report:
         with open(args.report, "w") as f:
             json.dump(report, f, indent=1)

@@ -92,6 +92,16 @@ def main(argv=None) -> int:
                     help="write a per-step JSON report (per-peer straggler "
                          "scores, shard weights, dead-link events) for "
                          "offline analysis")
+    ap.add_argument("--trace", nargs="?", const=".", default=None,
+                    metavar="DIR",
+                    help="record a structured trace (DESIGN §12) — step "
+                         "spans, wire round/phase spans, every ControlPlane "
+                         "transition — and write Perfetto trace_event JSON "
+                         "into DIR (default '.') at exit; merge/inspect "
+                         "with python -m repro.obs.report")
+    ap.add_argument("--trace-capacity", type=int, default=None,
+                    help="trace ring-buffer capacity in records (default "
+                         "65536; oldest records drop on wraparound)")
     ap.add_argument("--policy-cache", type=int, default=4,
                     help="compiled train steps kept per SyncPolicy (LRU), "
                          "so an eject -> readmit cycle never recompiles")
@@ -115,6 +125,12 @@ def main(argv=None) -> int:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    tracer = None
+    if args.trace is not None:
+        from repro import obs
+        tracer = obs.configure(
+            True, capacity=args.trace_capacity or obs.trace.DEFAULT_CAPACITY)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if args.production_mesh:
@@ -321,6 +337,7 @@ def main(argv=None) -> int:
         for step in range(start_step, args.steps):
             batch = data.host_batch(step, 0, 1)
             batch = jax.device_put(batch, shardings["batch"])
+            st0 = tracer.now() if tracer is not None else 0.0
             t_step = time.time()
             if rec_state is not None:
                 params, opt_state, rec_state, metrics = jf(
@@ -367,9 +384,9 @@ def main(argv=None) -> int:
                     control.observe(wire_t)
                     if step % args.log_every == 0 or step == args.steps - 1:
                         pst = ", ".join(f"{t:.3g}" for t
-                                        in wire_t.peer_stage_times)
+                                        in (wire_t.peer_stage_times or ()))
                         print(f"wire[{args.transport}] peers="
-                              f"{len(wire_t.peer_stage_times)} "
+                              f"{len(wire_t.peer_stage_times or ())} "
                               f"stage_times=[{pst}] "
                               f"loss_frac={wire_t.loss_frac:.5f} "
                               f"deadline="
@@ -444,6 +461,12 @@ def main(argv=None) -> int:
                           f"active={new_sync.active_peers} "
                           f"weights={new_sync.shard_weights} "
                           f"dead={new_sync.dead_links} ({how})", flush=True)
+            if tracer is not None:
+                tracer.complete("step", "trainer", ts=st0,
+                                dur=tracer.now() - st0,
+                                args={"step": step,
+                                      "loss_frac": round(loss_frac, 6)})
+                tracer.counter("loss_frac", loss_frac)
             monitor.observe(step, loss_frac, bool(metrics["skipped"] > 0))
             if monitor.halted:
                 print("HALT: excessive gradient loss (§3.4); rolling back")
@@ -472,6 +495,13 @@ def main(argv=None) -> int:
                        "steps": report_rows}, f, indent=1)
         print(f"report: {len(report_rows)} steps -> {args.report}",
               flush=True)
+    if tracer is not None:
+        from repro.obs import export as obs_export
+        path = obs_export.write_trace(args.trace, tracer,
+                                      meta={"transport": args.transport,
+                                            "strategy": args.strategy})
+        print(f"trace: {len(tracer)} records ({tracer.dropped} dropped) "
+              f"-> {path}", flush=True)
     print("done")
     return 0
 

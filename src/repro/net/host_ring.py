@@ -65,19 +65,31 @@ def aggregate_reports(reports: list[PeerReport], step: int) -> StepTelemetry:
     receiver waited on it.  Used by :class:`HostRing` (all N receivers in
     one process) and by ``repro.launch.multiproc`` workers (a single
     receiver's report — each process only observes its own rounds)."""
-    n_rounds = max(len(r.rounds) for r in reports)
+    n_rounds = max((len(r.rounds) for r in reports), default=0)
     round_times, round_to, round_frac = [], [], []
     for i in range(n_rounds):
         rs = [r.rounds[i] for r in reports if i < len(r.rounds)]
         round_times.append(max(x.time for x in rs))
         round_to.append(any(x.timed_out for x in rs))
         round_frac.append(float(np.mean([x.frac_received for x in rs])))
-    last = np.stack([r.sender_last_t for r in reports])         # (R, n)
-    # a rank no receiver observed (skipped as dead) keeps NaN without the
-    # nanmax all-NaN-slice warning
-    seen = ~np.all(np.isnan(last), axis=0)
-    peer_times = np.full(last.shape[1], np.nan)
-    peer_times[seen] = np.nanmax(last[:, seen], axis=0)         # (n,)
+    # a report with no arrival observations at all carries
+    # sender_last_t=None (e.g. a freshly-constructed PeerReport merged
+    # from zero exchanges); fold only the observing reports, and when
+    # none observed anything emit peer_stage_times=None — the
+    # StragglerDetector holds state on missing input, exactly as on an
+    # all-NaN column (a peer no receiver saw)
+    observed = [r.sender_last_t for r in reports
+                if r.sender_last_t is not None]
+    if observed:
+        last = np.stack(observed)                               # (R, n)
+        # a rank no receiver observed (skipped as dead) keeps NaN without
+        # the nanmax all-NaN-slice warning
+        seen = ~np.all(np.isnan(last), axis=0)
+        peer_times = np.full(last.shape[1], np.nan)
+        peer_times[seen] = np.nanmax(last[:, seen], axis=0)     # (n,)
+        peer_times = tuple(float(t) for t in peer_times)
+    else:
+        peer_times = None
     dropped = sum(r.dropped for r in reports)
     total = sum(r.total for r in reports)
     # union of link-fault suspects across receivers — the ControlPlane's
@@ -89,7 +101,7 @@ def aggregate_reports(reports: list[PeerReport], step: int) -> StepTelemetry:
         round_times=tuple(round_times),
         round_timed_out=tuple(round_to),
         round_frac_received=tuple(round_frac),
-        peer_stage_times=tuple(float(t) for t in peer_times),
+        peer_stage_times=peer_times,
         dropped=float(dropped), total=float(total),
         # the §3.2.1 warmup profiles *stage* (round) times — feed the
         # slowest COMPLETED round: an expired round only reports the

@@ -34,6 +34,7 @@ from repro.core import tar as tar_lib
 from repro.core.pipeline import (Encoded, HTQuant, OptiReduceConfig,
                                  SyncContext, TarTopology, resolve_spec)
 from repro.core.ubt import AdaptiveTimeout, LossBudget
+from repro.obs import trace as obs_trace
 
 from .backend import Backend
 from .wire import (KIND_CTRL, KIND_DATA1, KIND_DATA2, KIND_RELAY,
@@ -350,6 +351,9 @@ class HostPeer:
         for weighted shards (stage 2 receives each owner's own-size slice).
         """
         me, n = self.rank, self.n
+        # hoisted tracer gate: one module-global read per exchange, then a
+        # local ``is not None`` test per round (DESIGN §12)
+        tr = obs_trace.get_tracer()
         report = PeerReport(sender_last_t=np.full(n, np.nan))
         report.sender_last_t[me] = 0.0
         streams: dict[int, Reassembly] = {}
@@ -367,6 +371,7 @@ class HostPeer:
                 continue
             deadline = self.round_deadline()
             ne = n_elems(sender) if callable(n_elems) else n_elems
+            rt0 = self.backend.now(me) if tr is not None else 0.0
             reas, last_t, eff = self._recv_stream(kind, step, bucket, r,
                                                   sender, ne, dtype,
                                                   deadline)
@@ -377,9 +382,23 @@ class HostPeer:
             # with a few lost packets must not score as a straggler
             round_t = last_t if reas.complete else eff
             sender_t = last_t if reas.received_packets > 0 else eff
+            frac = reas.frac_received()
+            if tr is not None:
+                tr.complete("round", "wire", ts=rt0, dur=min(round_t, eff),
+                            tid=sender,
+                            args={"step": step, "bucket": bucket,
+                                  "kind": kind, "round": r, "sender": sender,
+                                  "receiver": me, "frac_received": frac,
+                                  "timed_out": not reas.complete,
+                                  "deadline": deadline, "eff_deadline": eff})
+                if not reas.complete:
+                    tr.event("timeout", "wire", ts=rt0 + eff, tid=sender,
+                             args={"step": step, "bucket": bucket,
+                                   "round": r, "sender": sender,
+                                   "receiver": me, "frac_received": frac})
             report.rounds.append(RoundReport(
                 time=min(round_t, eff), timed_out=not reas.complete,
-                frac_received=reas.frac_received()))
+                frac_received=frac))
             report.sender_last_t[sender] = min(sender_t, eff)
             report.stage_time += min(round_t, eff)
         if any(reas.complete for reas in streams.values()):
@@ -452,6 +471,8 @@ class HostPeer:
         per-block amax on the control channel.  ``stale`` is the previous
         step's decoded bucket for StaleFill recovery codecs (ignored — and
         unreachable — for quantized codecs: ``wrap_codec`` rejects them)."""
+        tr = obs_trace.get_tracer()
+        t0 = self.backend.now(self.rank) if tr is not None else 0.0
         self._store.clear()
         xj = jnp.asarray(x)
         if isinstance(self.codec, HTQuant):
@@ -473,10 +494,16 @@ class HostPeer:
             self._held = {"wire1": np.asarray(data), "lo": None, "step": None,
                           "stale_w": stale_w, "key": key,
                           "length": x.shape[-1]}
+        if tr is not None:
+            tr.complete("encode", "wire", ts=t0,
+                        dur=self.backend.now(self.rank) - t0, tid=self.rank,
+                        args={"step": step, "bucket": bucket})
 
     def phase2_send_stage1(self, step: int, bucket: int) -> None:
         """Finish the encode (grid max-share for quantizing codecs) and put
         every stage-1 shard on the wire."""
+        tr = obs_trace.get_tracer()
+        t0 = self.backend.now(self.rank) if tr is not None else 0.0
         h = self._held
         if isinstance(self.codec, HTQuant):
             shared = h["amax"].copy()
@@ -519,10 +546,16 @@ class HostPeer:
             h["plan"] = None
             h["shards"] = wire1.reshape(self.n, s)
             self._send_shards(h["shards"], KIND_DATA1, step, bucket)
+        if tr is not None:
+            tr.complete("send_stage1", "wire", ts=t0,
+                        dur=self.backend.now(self.rank) - t0, tid=self.rank,
+                        args={"step": step, "bucket": bucket})
 
     def phase3_reduce_send_stage2(self, step: int, bucket: int) -> PeerReport:
         """Receive stage 1 under the per-round deadlines, run the codec's
         compensated reduce, and broadcast the re-encoded shard."""
+        tr = obs_trace.get_tracer()
+        t0 = self.backend.now(self.rank) if tr is not None else 0.0
         h = self._held
         plan = h["plan"]
         s = h["shards"].shape[1]
@@ -551,6 +584,12 @@ class HostPeer:
         # EF accounting; weighted broadcasts only the owned valid prefix
         out2 = wire2 if plan is None else wire2[:valid]
         self._send_shards(out2, KIND_DATA2, step, bucket)
+        if tr is not None:
+            tr.complete("exchange", "wire", ts=t0,
+                        dur=self.backend.now(self.rank) - t0, tid=self.rank,
+                        args={"step": step, "bucket": bucket,
+                              "dropped": report.dropped,
+                              "total": report.total})
         return report
 
     def phase4_decode(self, step: int, bucket: int
@@ -559,6 +598,8 @@ class HostPeer:
         decode.  A missing stage-2 span stays zero — a real gap the codec
         decodes through (drops are modeled on stage 1; see DESIGN §2) —
         and is charged to ``stage2_dropped``."""
+        tr = obs_trace.get_tracer()
+        t0 = self.backend.now(self.rank) if tr is not None else 0.0
         h = self._held
         plan = h["plan"]
         s2 = h["wire2"].shape[0]
@@ -593,6 +634,12 @@ class HostPeer:
                                    h["lo"], h["step"], h["key"]))
         out = out[:h["length"]]
         self._held = {}
+        if tr is not None:
+            tr.complete("decode", "wire", ts=t0,
+                        dur=self.backend.now(self.rank) - t0, tid=self.rank,
+                        args={"step": step, "bucket": bucket,
+                              "stage2_dropped": report.stage2_dropped,
+                              "stage2_total": report.stage2_total})
         return out, report
 
     # ------------------------------------------------------- bridge mode

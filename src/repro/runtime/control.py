@@ -35,6 +35,7 @@ from collections import OrderedDict
 from typing import Any, Hashable
 
 from repro.core.ubt import UbtState
+from repro.obs import trace as obs_trace
 
 from .straggler import StragglerDetector
 from .telemetry import StepTelemetry
@@ -127,8 +128,20 @@ class ControlPlane:
     # ------------------------------------------------------------ the loop
     def observe(self, t: StepTelemetry) -> bool:
         """Feed one step's telemetry; True if the policy moved (the caller
-        should re-resolve its sync config / compiled step)."""
+        should re-resolve its sync config / compiled step).
+
+        With tracing on, every state transition this observation causes —
+        peer eject/probation/readmit, link death/revival, codec flips,
+        incast moves, LossBudget phase steps — lands as a ``cat="policy"``
+        instant event with its cause (DESIGN §12)."""
         before = self.policy()
+        tr = obs_trace.get_tracer()
+        if tr is not None:
+            statuses0 = tuple(p.status for p in self.detector.peers)
+            dead0 = set(self._dead_links)
+            budget0 = (None if self.state.budget is None
+                       else int(min(max(self.state.budget.phase, 0.0), 1.0)
+                                * 10))
         at = self.state.timeout
         sample = t.step_time
         if sample is None and t.peer_stage_times is not None:
@@ -161,7 +174,61 @@ class ControlPlane:
             self.detector.observe(t.peer_stage_times)
         self._observe_links(t.dead_link_events or ())
         self.steps += 1
-        return self.policy() != before
+        after = self.policy()
+        if tr is not None:
+            self._trace_transitions(tr, t, before, after, statuses0, dead0,
+                                    budget0)
+        return after != before
+
+    # status -> event name for the per-peer transition timeline
+    _STATUS_EVENT = {"ejected": "eject", "probation": "probation",
+                     "active": "readmit"}
+
+    def _trace_transitions(self, tr, t: StepTelemetry, before: SyncPolicy,
+                           after: SyncPolicy, statuses0, dead0,
+                           budget0) -> None:
+        """Emit one instant event per state transition this step caused."""
+        step = int(t.step)
+        for p, (s0, peer) in enumerate(zip(statuses0, self.detector.peers)):
+            if peer.status != s0:
+                tr.event(self._STATUS_EVENT[peer.status], "policy", tid=p,
+                         args={"step": step, "peer": p, "from": s0,
+                               "score": round(float(peer.score), 4),
+                               "cause": "score"})
+        dead1 = set(self._dead_links)
+        for link in sorted(dead1 - dead0):
+            tr.event("dead_link", "policy",
+                     args={"step": step, "src": link[0], "dst": link[1],
+                           "cause": "fully_lossy"})
+        for link in sorted(dead0 - dead1):
+            tr.event("link_revived", "policy",
+                     args={"step": step, "src": link[0], "dst": link[1],
+                           "cause": "quiet_probe"})
+        if after.use_hadamard != before.use_hadamard:
+            tr.event("hadamard", "policy",
+                     args={"step": step, "on": after.use_hadamard,
+                           "loss_frac": round(float(t.loss_frac), 5),
+                           "cause": "loss_threshold"})
+        if after.incast != before.incast:
+            tr.event("incast", "policy",
+                     args={"step": step, "from": before.incast,
+                           "to": after.incast, "cause": "loss_controller"})
+        if self.state.budget is not None:
+            b1 = int(min(max(self.state.budget.phase, 0.0), 1.0) * 10)
+            if b1 != budget0:
+                tr.event("budget_phase", "policy",
+                         args={"step": step,
+                               "phase": round(self.state.budget.phase, 3),
+                               "cause": "loss_budget"})
+        if after != before:
+            tr.event("policy_change", "policy",
+                     args={"step": step,
+                           "active": len(after.active_peers
+                                         or range(self.detector.n_peers)),
+                           "incast": after.incast,
+                           "hadamard": after.use_hadamard,
+                           "dead_links": len(after.dead_links),
+                           "rebalanced": after.shard_weights is not None})
 
     def _observe_links(self, events) -> None:
         """Fold one step's fully-lossy link observations into the tracker."""
@@ -204,11 +271,21 @@ class ControlPlane:
         if not 0 <= rank < self.detector.n_peers:
             return False
         if kind == "join":
-            return self.detector.readmit(rank)
-        if kind in ("leave", "death"):
-            return self.detector.force_eject(rank)
-        raise ValueError(f"unknown membership event kind {kind!r} "
-                         "(join | leave | death)")
+            changed = self.detector.readmit(rank)
+        elif kind in ("leave", "death"):
+            changed = self.detector.force_eject(rank)
+        else:
+            raise ValueError(f"unknown membership event kind {kind!r} "
+                             "(join | leave | death)")
+        if changed:
+            tr = obs_trace.get_tracer()
+            if tr is not None:
+                tr.event("membership", "policy", tid=rank,
+                         args={"peer": rank, "kind": kind,
+                               "status": self.detector.status(rank),
+                               "generation": self.generation,
+                               "cause": "rendezvous"})
+        return changed
 
     def policy(self) -> SyncPolicy:
         active = self.detector.active_peers()

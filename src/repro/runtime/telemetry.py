@@ -70,7 +70,7 @@ class StepTelemetry:
     def from_wire(cls, step: int, *, round_times: Sequence[float],
                   round_timed_out: Sequence[bool],
                   round_frac_received: Sequence[float],
-                  peer_stage_times: Sequence[float],
+                  peer_stage_times: Sequence[float] | None,
                   dropped: float, total: float,
                   step_time: float | None = None,
                   dead_link_events: Sequence[tuple[int, int]] = ()
@@ -79,12 +79,16 @@ class StepTelemetry:
         every field the simulator used to be the only producer of —
         per-round stage times / t_B-expiry flags / received fractions and
         per-peer last-arrival times — now measured on a real exchange.
-        NaN entries in ``peer_stage_times`` mean "peer unobserved"."""
+        NaN entries in ``peer_stage_times`` mean "peer unobserved"; None
+        means no receiver observed arrivals at all this step (e.g. every
+        round empty) — the StragglerDetector holds its state either way."""
         loss = dropped / total if total > 0 else 0.0
         return cls(step=step, loss_frac=loss, dropped=float(dropped),
                    total=float(total), step_time=step_time,
                    timed_out=any(bool(b) for b in round_timed_out),
-                   peer_stage_times=tuple(float(t) for t in peer_stage_times),
+                   peer_stage_times=(None if peer_stage_times is None else
+                                     tuple(float(t)
+                                           for t in peer_stage_times)),
                    round_times=tuple(float(t) for t in round_times),
                    round_timed_out=tuple(bool(b) for b in round_timed_out),
                    round_frac_received=tuple(float(f)

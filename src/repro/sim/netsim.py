@@ -47,6 +47,7 @@ import math
 import numpy as np
 
 from repro.core.ubt import TimelyRateControl
+from repro.obs import trace as obs_trace
 from repro.runtime import ControlPlane, StepTelemetry
 
 
@@ -269,6 +270,25 @@ class GASimulator:
                                        max_rate=net.bandwidth_GBps * 8e9)
         self.base_rtt_s = 20e-6          # propagation floor (below T_low)
         self._queue_s = 0.0              # bottleneck backlog (seconds)
+        # virtual-clock cursor for trace export: advances by each simulated
+        # round's duration (ms), so a whole simulated run lays out on one
+        # continuous cat="sim" timeline with the same span schema as the
+        # wire peers (DESIGN §12) — diffable against a wire trace in one
+        # Perfetto window
+        self._trace_t = 0.0
+
+    def _trace_round(self, tr, dur_ms: float, *, rnd: int, timed_out: bool,
+                     frac: float, deadline: float, stage: str) -> None:
+        """One simulated round as a ``"round"`` span on the virtual clock
+        (same name/args as the wire peers' spans)."""
+        tr.complete("round", "sim", ts=self._trace_t, dur=dur_ms,
+                    args={"round": rnd, "timed_out": timed_out,
+                          "frac_received": frac, "deadline": deadline,
+                          "stage": stage})
+        if timed_out:
+            tr.event("timeout", "sim", ts=self._trace_t + dur_ms,
+                     args={"round": rnd, "frac_received": frac})
+        self._trace_t += dur_ms
 
     def paced_round_delay_s(self, nbytes_flow: float, flows: int) -> float:
         """One Timely-paced round: update the bottleneck queue from the
@@ -369,6 +389,7 @@ class GASimulator:
         nl = max(1, n // max(groups, 1))
         total_t, lost_bytes, total_bytes = 0.0, 0.0, 0.0
         stage_times, to_flags, frac_recv = [], [], []
+        tr = obs_trace.get_tracer()
 
         def rounds(count, chunk, fanin):
             nonlocal total_t, lost_bytes, total_bytes
@@ -392,6 +413,12 @@ class GASimulator:
                 stage_times.append(float(min(np.max(times), deadline)))
                 to_flags.append(bool(np.any(times > deadline)))
                 frac_recv.append(float(np.mean(arrived)))
+                if tr is not None:
+                    self._trace_round(tr, stage_times[-1],
+                                      rnd=len(stage_times) - 1,
+                                      timed_out=to_flags[-1],
+                                      frac=frac_recv[-1],
+                                      deadline=float(deadline), stage="2d")
 
         rounds(nl - 1, nbytes / nl, nl)              # intra-group exchange
         rounds(max(groups - 1, 0), nbytes / n, groups)  # inter-group
@@ -444,6 +471,7 @@ class GASimulator:
         contrib = np.array(sizes, dtype=np.float64)   # own shard: always in
         peer_times = np.zeros(n)
         stage_times, to_flags, frac_recv = [], [], []
+        tr = obs_trace.get_tracer()
         for stage in range(2):
             for g in range(half_rounds):
                 group = range(g * i + 1, min((g + 1) * i, a - 1) + 1)
@@ -486,6 +514,13 @@ class GASimulator:
                                              deadline)))
                 to_flags.append(bool(np.any(act_times[full] > deadline)))
                 frac_recv.append(float(np.mean(arrived[full])))
+                if tr is not None:
+                    self._trace_round(tr, stage_times[-1],
+                                      rnd=len(stage_times) - 1,
+                                      timed_out=to_flags[-1],
+                                      frac=frac_recv[-1],
+                                      deadline=float(deadline),
+                                      stage="weighted")
         by_peer = np.zeros(n)
         by_peer[active] = contrib / max(nbytes, 1e-12)
         control.observe(StepTelemetry(
@@ -525,6 +560,7 @@ class GASimulator:
         lost_bytes = 0.0
         peer_times = np.zeros(n)
         stage_times, to_flags, frac_recv = [], [], []
+        tr = obs_trace.get_tracer()
         for _ in range(rounds):
             times, lost = self.net.ubt_ms(chunk * max(i, 1), n, self.f)
             if self.pace:
@@ -560,6 +596,10 @@ class GASimulator:
             stage_times.append(t_round)
             to_flags.append(bool(np.any(act_times > deadline)))
             frac_recv.append(float(np.mean(arrived_frac)))
+            if tr is not None:
+                self._trace_round(tr, t_round, rnd=len(stage_times) - 1,
+                                  timed_out=to_flags[-1], frac=frac_recv[-1],
+                                  deadline=float(deadline), stage="uniform")
         drop_frac = lost_bytes / (rounds * a * chunk)
         control.observe(StepTelemetry(
             step=control.steps, loss_frac=drop_frac, timed_out=any(to_flags),

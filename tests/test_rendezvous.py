@@ -269,8 +269,19 @@ def test_tcp_loop_join_barrier_leave():
         ra, mem_a, start_a = a.join()
         rb, _, _ = b.join()
         assert sorted((ra, rb)) == [0, 1] and start_a == 0
-        assert a.addr_of(rb)[1] == 5002      # b's advertised datagram port
-        assert b.addr_of(ra)[1] == 5001
+
+        def addr(c, rank):
+            # membership UPDATEs are broadcast asynchronously after the
+            # joiner's WELCOME — poll briefly instead of assuming a's view
+            # already includes b
+            deadline = time.monotonic() + 10.0
+            while (got := c.addr_of(rank)) is None:
+                assert time.monotonic() < deadline, "no membership UPDATE"
+                time.sleep(0.01)
+            return got
+
+        assert addr(a, rb)[1] == 5002        # b's advertised datagram port
+        assert addr(b, ra)[1] == 5001
         done = []
 
         def run(c):

@@ -509,3 +509,83 @@ def test_rebalance_within_15pct_of_ejection_with_contribution():
     # the whole point: the slow peer still contributes gradient mass
     assert contribs
     assert float(np.mean(contribs[-20:])) > 0.05
+
+
+class TestTelemetryNaNEdges:
+    """Regression (ISSUE 10 satellite): telemetry folds must survive empty
+    exchanges — no-observation reports, all-NaN peer columns, zero-length
+    round lists — without warnings and without perturbing detector state."""
+
+    def _fold(self, reports, step):
+        from repro.net.host_ring import aggregate_reports
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")      # an All-NaN nanmax warns
+            return aggregate_reports(reports, step=step)
+
+    def test_aggregate_empty_report_list(self):
+        t = self._fold([], step=3)
+        assert t.step == 3
+        assert t.peer_stage_times is None
+        assert t.round_times == ()
+        assert t.step_time is None
+        assert not t.timed_out
+
+    def test_aggregate_report_without_observations(self):
+        from repro.net.peer import PeerReport
+        t = self._fold([PeerReport()], step=4)
+        assert t.peer_stage_times is None
+        assert t.round_times == ()
+
+    def test_aggregate_all_nan_peer_column_no_warning(self):
+        from repro.net.peer import PeerReport, RoundReport
+        reps = []
+        for _ in range(2):
+            r = PeerReport(sender_last_t=np.array([1.0, np.nan, 2.0]))
+            r.rounds.append(RoundReport(time=0.5, timed_out=False,
+                                        frac_received=1.0))
+            reps.append(r)
+        t = self._fold(reps, step=1)
+        assert t.peer_stage_times is not None
+        assert t.peer_stage_times[0] == 1.0
+        assert np.isnan(t.peer_stage_times[1])    # unobserved stays NaN
+        assert t.peer_stage_times[2] == 2.0
+
+    def test_from_wire_passes_none_peer_times_through(self):
+        t = StepTelemetry.from_wire(step=0, round_times=(),
+                                    round_timed_out=(),
+                                    round_frac_received=(),
+                                    peer_stage_times=None,
+                                    dropped=0.0, total=0.0)
+        assert t.peer_stage_times is None
+        assert t.loss_frac == 0.0 and not t.timed_out
+
+    def test_control_plane_holds_state_on_missing_input(self):
+        """A step with no observations must not move the detector or the
+        policy — controllers with missing inputs hold."""
+        plane = ControlPlane.create(4, detector_kw=dict(alpha=0.5,
+                                                        patience=2))
+        # push peer 3 toward ejection, then feed empty telemetry
+        for step in range(3):
+            plane.observe(StepTelemetry(step=step, loss_frac=0.0,
+                                        peer_stage_times=(1., 1., 1., 5.)))
+        scores = tuple(p.score for p in plane.detector.peers)
+        statuses = tuple(p.status for p in plane.detector.peers)
+        pol = plane.policy()
+        empty = self._fold([], step=3)
+        assert plane.observe(empty) is False
+        assert tuple(p.score for p in plane.detector.peers) == scores
+        assert tuple(p.status for p in plane.detector.peers) == statuses
+        assert plane.policy() == pol
+
+    def test_all_nan_column_through_observe_no_warning(self):
+        import warnings
+        plane = ControlPlane.create(3)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            for step in range(5):
+                plane.observe(StepTelemetry(
+                    step=step, loss_frac=0.0,
+                    peer_stage_times=(1.0, float("nan"), 1.0)))
+        # the NaN peer is unobserved, not a straggler: never ejected
+        assert plane.detector.active_peers() == (0, 1, 2)
